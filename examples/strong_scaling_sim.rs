@@ -1,0 +1,25 @@
+//! Paper-scale scaling study on the simulated Lassen cluster: regenerates
+//! the Fig. 4/5/6/7/8 series in one run and writes Chrome traces.
+//!
+//!     cargo run --release --example strong_scaling_sim
+
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator;
+
+fn main() {
+    let cl = ClusterConfig::default();
+    std::fs::create_dir_all("runs").ok();
+    print!("{}", coordinator::table1());
+    println!();
+    print!("{}", coordinator::table2(&cl));
+    println!();
+    print!("{}", coordinator::fig4(&cl));
+    println!();
+    print!("{}", coordinator::fig5(&cl));
+    println!();
+    print!("{}", coordinator::fig6(&cl, Some(std::path::Path::new("runs"))));
+    println!();
+    print!("{}", coordinator::fig7(&cl));
+    println!();
+    print!("{}", coordinator::fig8(&cl));
+}

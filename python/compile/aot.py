@@ -1,0 +1,382 @@
+"""AOT compiler: lower every HYDRA-3D entry point to HLO text + manifest.
+
+Build-time only (``make artifacts``).  Python never runs on the training
+path: the Rust coordinator loads ``artifacts/*.hlo.txt`` through the PJRT C
+API and executes them directly.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto`` —
+jax >= 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted entry families (see model.py for the model registry):
+
+* ``<model>.train_step`` / ``<model>.predict`` — fused whole-model graphs
+  for the data-parallel engine and the end-to-end examples.
+* ``<model>.w<W>.<layer>.<op>`` — per-layer shard executables for the
+  hybrid-parallel engine under W-way depth partitioning: Pallas forward
+  kernels (conv3d / pool3d / fused bn+leaky), reference-transpose backward.
+
+``artifacts/manifest.json`` records, for every entry, the HLO file and the
+input/output shapes, plus per-model metadata (parameter table, layer plan,
+BN layers, hybrid ways) — the single source of truth the Rust engine builds
+its graph from.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels import conv3d as kconv
+from .kernels import pool3d as kpool
+from .kernels import bnorm as kbn
+
+F32 = jnp.float32
+
+# Default build matrix.  Fused graphs for every registered model; shard sets
+# (model, ways) chosen so the functional tests exercise 1/2/4-way depth
+# partitioning without exploding artifact count (DESIGN.md §6).
+FUSED_MODELS = [
+    "cf-nano", "cf-nano-bn", "cf16", "cf16-bn", "cf32", "cf32-bn",
+    "cf64", "cf64-bn", "unet16", "unet16-bn", "unet32",
+]
+HYBRID_SETS = {
+    "cf-nano": [1, 2],
+    "cf-nano-bn": [1, 2],
+    "cf16": [1, 2, 4],
+    "cf16-bn": [1, 2, 4],
+    "cf32": [1, 4],
+    "unet16": [1, 2],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: dict = {}
+        self.hlo_ops: dict = {}
+
+    def emit(self, name: str, fn, in_shapes) -> str:
+        """Lower ``fn`` at the given f32 input shapes and write HLO text."""
+        specs = [jax.ShapeDtypeStruct(tuple(s), F32) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        out_shapes = [list(o.shape) for o in jax.eval_shape(fn, *specs)]
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": [list(s) for s in in_shapes],
+            "outputs": out_shapes,
+        }
+        self.hlo_ops[name] = audit_hlo(text)
+        return name
+
+
+def audit_hlo(text: str) -> dict:
+    """Cheap op-census of an HLO module (L2 perf audit, DESIGN.md §7):
+    convolution/dot/fusion/all-op counts let us assert no redundant
+    recompute creeps into the lowered graphs."""
+    counts = {"convolution": 0, "dot": 0, "fusion": 0, "while": 0, "total": 0}
+    for line in text.splitlines():
+        s = line.strip()
+        if "=" not in s or s.startswith(("HloModule", "ENTRY", "}", "%")):
+            pass
+        m = re.search(r"=\s+\S+\s+(convolution|dot|fusion|while)\(", s)
+        if "=" in s and re.search(r"=\s+[a-z0-9\[\],\{\}\s]+ [a-z-]+\(", s):
+            counts["total"] += 1
+        if m:
+            counts[m.group(1)] += 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Fused entries
+# ---------------------------------------------------------------------------
+
+
+def emit_fused(b: Builder, spec, use_pallas: bool) -> dict:
+    """train_step + predict for one model; returns the manifest stanza."""
+    ptable = M.param_table(spec)
+    pshapes = [list(s) for _, s in ptable]
+    n_bn = len(M.bn_layer_names(spec))
+    batch = 2  # fused executables are lowered at a fixed per-rank batch
+    s = spec.input_size
+
+    train = M.make_train_step(spec, use_pallas=use_pallas)
+    if isinstance(spec, M.CosmoFlowSpec):
+        x_shape = [batch, spec.in_channels, s, s, s]
+        tgt_shape = [batch, spec.n_targets]
+        mask_shapes = [[batch, f] for f in spec.fc[:-1]]
+        train_in = [x_shape, tgt_shape] + mask_shapes + pshapes
+        pred_extra = [[c] for c in _bn_channel_list(spec)] * 2
+        pred_in = [x_shape] + pshapes + pred_extra
+    else:
+        x_shape = [batch, spec.in_channels, s, s, s]
+        onehot = [batch, spec.n_classes, s, s, s]
+        train_in = [x_shape, onehot] + pshapes
+        pred_extra = [[c] for c in _bn_channel_list(spec)] * 2
+        pred_in = [x_shape] + pshapes + pred_extra
+
+    ts = b.emit(f"{spec.name}.train_step", train, train_in)
+    pr = b.emit(f"{spec.name}.predict", M.make_predict(spec, use_pallas), pred_in)
+    return {
+        "train_step": ts,
+        "predict": pr,
+        "batch": batch,
+        "n_masks": getattr(train, "n_masks", 0),
+        "n_bn": n_bn,
+    }
+
+
+def _bn_channel_list(spec):
+    """Channel count of each BN layer, forward order."""
+    if not spec.use_bn:
+        return []
+    table = dict(M.param_table(spec))
+    return [table[f"{n}.gamma"][0] for n in M.bn_layer_names(spec)]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer shard entries (hybrid engine)
+# ---------------------------------------------------------------------------
+
+
+def emit_shard_set(b: Builder, spec, ways: int) -> list:
+    """Shard executables for W-way depth partitioning of one model.
+
+    Returns the plan with entry names attached per layer (what the Rust
+    engine walks).  All forward convs/pools/bns go through the Pallas
+    kernels; backward ops are the exact reference transposes.
+    """
+    plan = M.layer_plan(spec)
+    pre = f"{spec.name}.w{ways}"
+    out_plan = []
+    for li, layer in enumerate(plan):
+        layer = dict(layer)
+        kind = layer["kind"]
+        tag = layer.get("tag", f"l{li}")
+        name = f"{pre}.{li}.{tag}"
+        if kind == "conv":
+            dsh = layer["d"] // ways
+            halo = (layer["k"] - 1) // 2
+            cin, cout, k, st = layer["cin"], layer["cout"], layer["k"], layer["stride"]
+            h, w = layer["h"], layer["w"]
+            xp = [1, cin, dsh + 2 * halo, h, w]
+            dy = [1, cout, dsh, h, w]
+            wsh = [cout, cin, k, k, k]
+            layer["halo"] = halo
+            layer["fwd"] = b.emit(
+                f"{name}.fwd",
+                lambda x_, w_, st=st: (kconv.conv3d_shard_fwd(x_, w_, st),),
+                [xp, wsh],
+            )
+            layer["bwd_data"] = b.emit(
+                f"{name}.bwd_data",
+                lambda dy_, w_, xp=tuple(xp), st=st: (
+                    ref.conv3d_shard_bwd_data(dy_, w_, xp, st),
+                ),
+                [dy, wsh],
+            )
+            layer["bwd_filter"] = b.emit(
+                f"{name}.bwd_filter",
+                lambda x_, dy_, ws=tuple(wsh), st=st: (
+                    ref.conv3d_shard_bwd_filter(x_, dy_, ws, st),
+                ),
+                [xp, dy],
+            )
+        elif kind == "deconv":
+            dsh = layer["d"] // ways
+            cin, cout = layer["cin"], layer["cout"]
+            h, w = layer["h"], layer["w"]
+            x = [1, cin, dsh, h, w]
+            dy = [1, cout, dsh * 2, h * 2, w * 2]
+            wsh = [cin, cout, 2, 2, 2]
+            layer["fwd"] = b.emit(
+                f"{name}.fwd", lambda x_, w_: (ref.deconv3d(x_, w_),), [x, wsh]
+            )
+            layer["bwd_data"] = b.emit(
+                f"{name}.bwd_data",
+                lambda dy_, w_, xs=tuple(x): (ref.deconv3d_bwd_data(dy_, w_, xs),),
+                [dy, wsh],
+            )
+            layer["bwd_filter"] = b.emit(
+                f"{name}.bwd_filter",
+                lambda x_, dy_, ws=tuple(wsh): (ref.deconv3d_bwd_filter(x_, dy_, ws),),
+                [x, dy],
+            )
+        elif kind == "pool":
+            dsh = layer["d"] // ways
+            c, h, w = layer["c"], layer["h"], layer["w"]
+            x = [1, c, dsh, h, w]
+            y = [1, c, dsh // 2, h // 2, w // 2]
+            op = layer["op"]
+            layer["fwd"] = b.emit(
+                f"{name}.fwd", lambda x_, op=op: (kpool.pool3d_pallas(x_, op),), [x]
+            )
+            if op == "max":
+                layer["bwd"] = b.emit(
+                    f"{name}.bwd",
+                    lambda x_, y_, dy_: (ref.maxpool3d_bwd(x_, y_, dy_),),
+                    [x, y, y],
+                )
+            else:
+                layer["bwd"] = b.emit(
+                    f"{name}.bwd", lambda dy_: (ref.avgpool3d_bwd(dy_),), [y]
+                )
+        elif kind == "bn":
+            dsh = layer["d"] // ways
+            c, h, w = layer["c"], layer["h"], layer["w"]
+            x = [1, c, dsh, h, w]
+            cv = [c]
+            layer["apply"] = b.emit(
+                f"{name}.apply",
+                lambda x_, m_, v_, g_, b_: (kbn.bn_leaky_pallas(x_, m_, v_, g_, b_),),
+                [x, cv, cv, cv, cv],
+            )
+
+            def bwd_partials(x_, dy_, m_, v_, g_, b_):
+                y_bn = ref.bn_apply(x_, m_, v_, g_, b_)
+                dyb = ref.leaky_relu_bwd(y_bn, dy_)
+                g1, g2 = ref.bn_bwd_partials(x_, dyb, m_, v_)
+                return g1, g2
+
+            def bwd_apply(x_, dy_, m_, v_, g_, b_, g1_, g2_, cnt_):
+                y_bn = ref.bn_apply(x_, m_, v_, g_, b_)
+                dyb = ref.leaky_relu_bwd(y_bn, dy_)
+                return (ref.bn_bwd_apply(x_, dyb, m_, v_, g_, g1_, g2_, cnt_),)
+
+            layer["bwd_partials"] = b.emit(
+                f"{name}.bwd_partials", bwd_partials, [x, x, cv, cv, cv, cv]
+            )
+            layer["bwd_apply"] = b.emit(
+                f"{name}.bwd_apply", bwd_apply, [x, x, cv, cv, cv, cv, cv, cv, []]
+            )
+        elif kind == "fc":
+            fin, fout = layer["fin"], layer["fout"]
+            layer["fwd"] = b.emit(
+                f"{name}.fwd",
+                lambda x_, w_, b_: (ref.dense(x_, w_, b_),),
+                [[1, fin], [fout, fin], [fout]],
+            )
+            layer["bwd"] = b.emit(
+                f"{name}.bwd",
+                lambda x_, w_, dy_: ref.dense_bwd(x_, w_, dy_),
+                [[1, fin], [fout, fin], [1, fout]],
+            )
+        elif kind == "mse":
+            n = layer["n"]
+
+            def mse_sum(p_, t_):
+                d = p_ - t_
+                return jnp.sum(d * d), 2.0 * d
+
+            # sum-flavoured: the engine divides by (global batch x n) so the
+            # distributed loss matches the fused executable exactly.
+            layer["fwd_bwd"] = b.emit(f"{name}.fwd_bwd", mse_sum, [[1, n], [1, n]])
+        elif kind == "xent":
+            dsh = layer["d"] // ways
+            k, h, w = layer["n_classes"], layer["h"], layer["w"]
+            sh = [1, k, dsh, h, w]
+
+            def xent_sum(logits, onehot):
+                lse = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+                logp = logits - lse
+                return (
+                    -jnp.sum(onehot * logp),
+                    jnp.exp(logp) * jnp.sum(onehot, axis=1, keepdims=True) - onehot,
+                )
+
+            layer["fwd_bwd"] = b.emit(f"{name}.fwd_bwd", xent_sum, [sh, sh])
+        # flatten / act / save_skip / concat_skip are Rust-side-only layers.
+        out_plan.append(layer)
+    return out_plan
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, fused_models=None, hybrid_sets=None, pallas_fused=False):
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(out_dir)
+    fused_models = FUSED_MODELS if fused_models is None else fused_models
+    hybrid_sets = HYBRID_SETS if hybrid_sets is None else hybrid_sets
+
+    models = {}
+    for name in fused_models:
+        spec = M.REGISTRY[name]
+        stanza = {
+            "kind": "cosmoflow" if isinstance(spec, M.CosmoFlowSpec) else "unet",
+            "input_size": spec.input_size,
+            "in_channels": spec.in_channels,
+            "use_bn": spec.use_bn,
+            "params": [[n, list(s)] for n, s in M.param_table(spec)],
+            "bn_layers": M.bn_layer_names(spec),
+            "plan": M.layer_plan(spec),
+            "fused": emit_fused(b, spec, use_pallas=pallas_fused),
+            "hybrid": {},
+        }
+        if isinstance(spec, M.CosmoFlowSpec):
+            stanza["channels"] = list(spec.channels)
+            stanza["fc"] = list(spec.fc)
+            stanza["n_targets"] = spec.n_targets
+            stanza["pool"] = spec.pool
+            stanza["dropout_keep"] = spec.dropout_keep
+        else:
+            stanza["base_channels"] = spec.base_channels
+            stanza["levels"] = spec.levels
+            stanza["n_classes"] = spec.n_classes
+        for ways in hybrid_sets.get(name, []):
+            print(f"  shard set {name} x{ways}", file=sys.stderr)
+            stanza["hybrid"][str(ways)] = emit_shard_set(b, spec, ways)
+        models[name] = stanza
+        print(f"emitted {name}", file=sys.stderr)
+
+    manifest = {"version": 1, "entries": b.entries, "models": models}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, "hlo_stats.json"), "w") as f:
+        json.dump(b.hlo_ops, f, indent=1)
+    print(f"wrote {len(b.entries)} entries to {out_dir}/manifest.json",
+          file=sys.stderr)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of fused models to emit")
+    ap.add_argument("--pallas-fused", action="store_true",
+                    help="route fused-graph forward convs through Pallas too")
+    args = ap.parse_args()
+    fused = args.models
+    hybrid = None if args.models is None else {
+        m: HYBRID_SETS.get(m, []) for m in args.models
+    }
+    build(args.out, fused, hybrid, args.pallas_fused)
+
+
+if __name__ == "__main__":
+    main()

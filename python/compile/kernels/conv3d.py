@@ -1,0 +1,213 @@
+"""L1 Pallas kernel: direct 3D convolution (NCDHW, no bias).
+
+This is the compute hot-spot of the paper (conv1 of the 512^3 CosmoFlow
+model alone is ~half of end-to-end runtime, §V-B).  The paper's kernels are
+cuDNN implicit-GEMM on V100s; per DESIGN.md §3 we re-think the tiling for a
+TPU-shaped machine instead of porting the CUDA structure:
+
+* The output tensor is tiled over a grid of ``(sample, Cout-tile, Dout-tile)``
+  BlockSpecs.  Each grid step owns an output tile in VMEM, the analogue of a
+  threadblock's shared-memory tile.
+* The input depth-slab needed by an output tile (``(TD-1)*stride + K``
+  planes) is sliced out of the sample once, and the K^3 filter taps are
+  accumulated as K^3 MXU-shaped matmuls ``(TC, Cin) x (Cin, TD*Ho*Wo)`` —
+  the systolic-array translation of implicit GEMM.
+* The HBM<->VMEM schedule that CUDA expresses with cooperative loads is
+  expressed here with the BlockSpec index maps plus an in-kernel dynamic
+  depth-slab slice (depth tiles overlap by the filter footprint, which
+  plain non-overlapping BlockSpecs cannot express).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot run
+Mosaic custom-calls, so interpret mode is the correctness vehicle and the
+TPU performance story is analytic — :func:`vmem_report` computes the VMEM
+footprint and MXU-utilization estimate for a tiling (quoted in
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPU generations
+MXU_DIM = 128  # systolic array is 128x128
+
+
+@dataclass(frozen=True)
+class ConvTiling:
+    """Tile sizes for the conv kernel grid (must divide Cout and Dout)."""
+
+    tc: int  # output channels per grid step
+    td: int  # output depth planes per grid step
+
+    def grid(self, n: int, cout: int, dout: int):
+        assert cout % self.tc == 0, (cout, self.tc)
+        assert dout % self.td == 0, (dout, self.td)
+        return (n, cout // self.tc, dout // self.td)
+
+
+def pick_tiling(cout: int, dout: int, cin: int, hw, k: int, stride: int) -> ConvTiling:
+    """Largest depth tile whose working set fits the VMEM budget.
+
+    Working set per grid step = input depth slab + filter tile + output tile
+    (all f32).  We shrink TD first (halving), then TC, mirroring how one
+    would shrink a threadblock tile under shared-memory pressure.
+    """
+    ho, wo = hw
+    tc = min(cout, MXU_DIM)
+    while cout % tc:
+        tc //= 2
+    td = dout
+    while td > 1 and _tile_bytes(tc, td, cin, ho, wo, k, stride) > VMEM_BYTES:
+        td //= 2
+    while dout % td:
+        td //= 2
+    td = max(td, 1)
+    # Huge H/W planes (e.g. conv1 of the 512^3 model): a single depth plane
+    # can still blow VMEM; shed output channels next, as a CUDA kernel would
+    # shrink its threadblock tile.
+    while tc > 1 and _tile_bytes(tc, td, cin, ho, wo, k, stride) > VMEM_BYTES:
+        tc //= 2
+    return ConvTiling(tc=max(tc, 1), td=td)
+
+
+def _tile_bytes(tc, td, cin, ho, wo, k, stride) -> int:
+    td_in = (td - 1) * stride + k
+    hin, win = (ho - 1) * stride + k, (wo - 1) * stride + k
+    x_slab = cin * td_in * hin * win
+    w_tile = tc * cin * k * k * k
+    out_tile = tc * td * ho * wo
+    return 4 * (x_slab + w_tile + out_tile)
+
+
+def vmem_report(cout, dout, cin, hw, k=3, stride=1, tiling: ConvTiling | None = None):
+    """Analytic VMEM + MXU report for a tiling (the L1 perf deliverable)."""
+    t = tiling or pick_tiling(cout, dout, cin, hw, k, stride)
+    ho, wo = hw
+    tile_bytes = _tile_bytes(t.tc, t.td, cin, ho, wo, k, stride)
+    # Each tap is a (tc, cin) x (cin, td*ho*wo) matmul; the MXU runs
+    # 128x128x128 blocks, so utilization is the product of the fill factors
+    # of each GEMM dimension (m = tc, k = cin, n = td*ho*wo).
+    m_fill = min(t.tc, MXU_DIM) / MXU_DIM
+    k_fill = min(cin, MXU_DIM) / MXU_DIM
+    n = t.td * ho * wo
+    n_fill = min(n, MXU_DIM) / MXU_DIM
+    flops = 2 * k**3 * cin * cout * dout * ho * wo
+    return {
+        "tiling": (t.tc, t.td),
+        "grid": (cout // t.tc) * (dout // t.td),
+        "tile_bytes": tile_bytes,
+        "vmem_ok": tile_bytes <= VMEM_BYTES,
+        "mxu_util_est": m_fill * k_fill * n_fill,
+        "flops_per_sample": flops,
+    }
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, td: int, hw_out):
+    """Pallas kernel body: one (sample, Cout-tile, Dout-tile) grid step."""
+    ho, wo = hw_out
+    d_idx = pl.program_id(2)
+    td_in = (td - 1) * stride + k
+    x = x_ref[0]  # (Cin, Dp, Hp, Wp) — sample slab in VMEM
+    slab = lax.dynamic_slice_in_dim(x, d_idx * td * stride, td_in, axis=1)
+    cin = slab.shape[0]
+    tc = o_ref.shape[1]
+    acc = jnp.zeros((tc, td * ho * wo), jnp.float32)
+    # K^3 filter taps -> K^3 MXU matmuls accumulated in VMEM.
+    for kd in range(k):
+        for kh in range(k):
+            for kw in range(k):
+                xs = slab[
+                    :,
+                    kd : kd + (td - 1) * stride + 1 : stride,
+                    kh : kh + (ho - 1) * stride + 1 : stride,
+                    kw : kw + (wo - 1) * stride + 1 : stride,
+                ]
+                wt = w_ref[:, :, kd, kh, kw]  # (TC, Cin)
+                acc = acc + jnp.dot(
+                    wt, xs.reshape(cin, -1), preferred_element_type=jnp.float32
+                )
+    o_ref[0] = acc.reshape(tc, td, ho, wo)
+
+
+def conv3d_pallas(
+    x,
+    w,
+    stride: int = 1,
+    padding: str = "same",
+    tiling: ConvTiling | None = None,
+    interpret: bool = True,
+):
+    """3D convolution with the Pallas direct kernel.
+
+    Matches :func:`ref.conv3d` bit-for-bit module reassociation; tested via
+    pytest + hypothesis sweeps in ``python/tests/test_conv3d.py``.
+    """
+    n, cin, d, h, ww = x.shape
+    cout, cin2, k, k2, k3 = w.shape
+    assert cin == cin2 and k == k2 == k3, "cubic filters only"
+    pads = ref._pad_config(padding, (k, k, k))
+    xp = jnp.pad(x, [(0, 0), (0, 0)] + [tuple(p) for p in pads])
+    dp, hp, wp = xp.shape[2:]
+    do = (dp - k) // stride + 1
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    t = tiling or pick_tiling(cout, do, cin, (ho, wo), k, stride)
+
+    kern = functools.partial(
+        _conv_kernel, k=k, stride=stride, td=t.td, hw_out=(ho, wo)
+    )
+    return pl.pallas_call(
+        kern,
+        grid=t.grid(n, cout, do),
+        in_specs=[
+            # full padded sample per grid step; depth tiles overlap by the
+            # filter footprint so the slab is sliced in-kernel.
+            pl.BlockSpec((1, cin, dp, hp, wp), lambda n_, c_, d_: (n_, 0, 0, 0, 0)),
+            pl.BlockSpec((t.tc, cin, k, k, k), lambda n_, c_, d_: (c_, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, t.tc, t.td, ho, wo), lambda n_, c_, d_: (n_, c_, d_, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, cout, do, ho, wo), jnp.float32),
+        interpret=interpret,
+    )(xp, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv3d(x, w, stride: int = 1, padding: str = "same"):
+    """Differentiable conv3d: Pallas forward, reference-transpose backward.
+
+    ``jax.grad`` cannot differentiate through ``pallas_call``; the backward
+    pass uses the (exactly equivalent) XLA transposed convolutions from
+    ``ref``.  The fused L2 train-step graphs therefore contain the Pallas
+    kernel in their forward segment.
+    """
+    return conv3d_pallas(x, w, stride, padding)
+
+
+def _conv3d_fwd(x, w, stride, padding):
+    return conv3d_pallas(x, w, stride, padding), (x, w)
+
+
+def _conv3d_bwd(stride, padding, res, dy):
+    x, w = res
+    dx = ref.conv3d_bwd_data(dy, w, x.shape, stride, padding)
+    dw = ref.conv3d_bwd_filter(x, dy, w.shape, stride, padding)
+    return dx, dw
+
+
+conv3d.defvjp(_conv3d_fwd, _conv3d_bwd)
+
+
+def conv3d_shard_fwd(x_padded, w, stride: int = 1):
+    """Shard flavour (valid in depth, same in H/W) with the Pallas kernel —
+    the executable the hybrid engine runs on every rank (see ref.py)."""
+    return conv3d_pallas(x_padded, w, stride, "valid_d")

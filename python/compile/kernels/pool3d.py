@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: 2x2x2 stride-2 max/avg pooling.
+
+The paper's pooling layers are all 2^3 windows with stride 2 ("We use
+stride 1 convolution and stride 2 pooling", Table I), which makes pooling
+shard-local under any even spatial partitioning: window boundaries align
+with shard boundaries, so no halo exchange is needed (DESIGN.md §6).
+
+The kernel grid is ``(sample, C-tile)``; each step reduces its channel tile
+with eight strided slices — a vectorized tree-max/-add rather than a
+windowed loop, which maps onto the VPU's elementwise lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _slices8(x):
+    """The eight stride-2 phases of a (C, D, H, W) tile."""
+    for dz in range(2):
+        for dy in range(2):
+            for dx in range(2):
+                yield x[:, dz::2, dy::2, dx::2]
+
+
+def _pool_kernel(x_ref, o_ref, *, op: str):
+    x = x_ref[0]
+    it = _slices8(x)
+    acc = next(it)
+    for s in it:
+        acc = jnp.maximum(acc, s) if op == "max" else acc + s
+    if op == "avg":
+        acc = acc * 0.125
+    o_ref[0] = acc
+
+
+def _pick_ct(c: int) -> int:
+    ct = min(c, 32)
+    while c % ct:
+        ct //= 2
+    return max(ct, 1)
+
+
+def pool3d_pallas(x, op: str = "max", interpret: bool = True):
+    """2^3/stride-2 pooling; matches ref.maxpool3d / ref.avgpool3d."""
+    assert op in ("max", "avg")
+    n, c, d, h, w = x.shape
+    assert d % 2 == 0 and h % 2 == 0 and w % 2 == 0, "even dims required"
+    ct = _pick_ct(c)
+    kern = functools.partial(_pool_kernel, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(n, c // ct),
+        in_specs=[pl.BlockSpec((1, ct, d, h, w), lambda n_, c_: (n_, c_, 0, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, ct, d // 2, h // 2, w // 2), lambda n_, c_: (n_, c_, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, c, d // 2, h // 2, w // 2), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def maxpool3d(x):
+    return pool3d_pallas(x, "max")
+
+
+def avgpool3d(x):
+    return pool3d_pallas(x, "avg")

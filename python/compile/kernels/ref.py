@@ -1,0 +1,326 @@
+"""Pure-jnp reference oracles for every HYDRA-3D kernel.
+
+These are the correctness ground truth for the Pallas kernels (L1) and the
+building blocks of the fused L2 model graphs.  Everything is NCDHW and f32.
+
+Conventions
+-----------
+* ``x``  activations, shape ``(n, c, d, h, w)``.
+* ``w``  conv filters, shape ``(c_out, c_in, kd, kh, kw)`` (cuDNN layout, as
+  in the paper's notation section).
+* ``padding``:
+    - ``"same"``    zero-pad all three spatial dims (output size = input/stride).
+    - ``"valid"``   no padding.
+    - ``"valid_d"`` no padding in depth, "same" in H/W — the *shard* flavor
+      used by the hybrid-parallel engine: the Rust coordinator supplies a
+      depth-halo-padded shard and the kernel consumes the halo.
+
+All backward functions are exact transposes (conv is bilinear, so vjps taken
+at a zero primal are exact); they are verified against ``jax.grad`` of the
+forward oracle in ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DIMNUMS = lax.ConvDimensionNumbers(
+    lhs_spec=(0, 1, 2, 3, 4),  # NCDHW
+    rhs_spec=(0, 1, 2, 3, 4),  # OIDHW
+    out_spec=(0, 1, 2, 3, 4),
+)
+
+
+def _pad_config(padding: str, k):
+    """Translate a padding name into per-dim (lo, hi) pairs for lax."""
+    same = [((kk - 1) // 2, kk // 2) for kk in k]
+    if padding == "same":
+        return same
+    if padding == "valid":
+        return [(0, 0)] * 3
+    if padding == "valid_d":
+        return [(0, 0), same[1], same[2]]
+    raise ValueError(f"unknown padding {padding!r}")
+
+
+# ---------------------------------------------------------------------------
+# 3D convolution
+# ---------------------------------------------------------------------------
+
+
+def conv3d(x, w, stride: int = 1, padding: str = "same"):
+    """Reference 3D convolution (no bias — the paper removes conv biases)."""
+    k = w.shape[2:]
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,) * 3,
+        padding=_pad_config(padding, k),
+        dimension_numbers=DIMNUMS,
+    )
+
+
+def conv3d_bwd_data(dy, w, x_shape, stride: int = 1, padding: str = "same"):
+    """dL/dx for conv3d.  Exact: conv is linear in x, so the vjp at x=0 is
+    the transpose."""
+    zero = jnp.zeros(x_shape, dy.dtype)
+    _, vjp = jax.vjp(lambda x: conv3d(x, w, stride, padding), zero)
+    return vjp(dy)[0]
+
+
+def conv3d_bwd_filter(x, dy, w_shape, stride: int = 1, padding: str = "same"):
+    """dL/dw for conv3d (linear in w)."""
+    zero = jnp.zeros(w_shape, dy.dtype)
+    _, vjp = jax.vjp(lambda w: conv3d(x, w, stride, padding), zero)
+    return vjp(dy)[0]
+
+
+# ---------------------------------------------------------------------------
+# Transposed 3D convolution (deconvolution; 3D U-Net up-sampling path)
+# ---------------------------------------------------------------------------
+
+
+def deconv3d(x, w, stride: int = 2):
+    """2x up-sampling transposed conv with a (stride,)^3 kernel.
+
+    ``w`` has shape (c_in, c_out, kd, kh, kw) — note the in/out order follows
+    the transposed-conv convention.  With kernel == stride there is no
+    overlap, so the op is shard-local under depth partitioning (each output
+    voxel depends on exactly one input voxel): no halo needed.
+    """
+    return lax.conv_transpose(
+        x,
+        w,
+        strides=(stride,) * 3,
+        padding="VALID",
+        dimension_numbers=("NCDHW", "IODHW", "NCDHW"),
+    )
+
+
+def deconv3d_bwd_data(dy, w, x_shape, stride: int = 2):
+    zero = jnp.zeros(x_shape, dy.dtype)
+    _, vjp = jax.vjp(lambda x: deconv3d(x, w, stride), zero)
+    return vjp(dy)[0]
+
+
+def deconv3d_bwd_filter(x, dy, w_shape, stride: int = 2):
+    zero = jnp.zeros(w_shape, dy.dtype)
+    _, vjp = jax.vjp(lambda w: deconv3d(x, w, stride), zero)
+    return vjp(dy)[0]
+
+
+# ---------------------------------------------------------------------------
+# 2^3 stride-2 pooling
+# ---------------------------------------------------------------------------
+
+
+def maxpool3d(x):
+    """2x2x2 max pooling with stride 2 (spatial dims must be even)."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, 2, 2, 2),
+        window_strides=(1, 1, 2, 2, 2),
+        padding="VALID",
+    )
+
+
+def avgpool3d(x):
+    """2x2x2 average pooling with stride 2."""
+    s = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, 1, 2, 2, 2),
+        window_strides=(1, 1, 2, 2, 2),
+        padding="VALID",
+    )
+    return s * 0.125
+
+
+def _up2(y):
+    """Nearest-neighbour 2x up-sample of the three spatial dims."""
+    for axis in (2, 3, 4):
+        y = jnp.repeat(y, 2, axis=axis)
+    return y
+
+
+def maxpool3d_bwd(x, y, dy):
+    """dL/dx for maxpool3d given saved input & output.
+
+    Ties share the gradient equally (measure-zero for continuous data; the
+    convention only matters for synthetic integer inputs and is covered by
+    an explicit test).
+    """
+    mask = (x == _up2(y)).astype(dy.dtype)
+    counts = lax.reduce_window(
+        mask,
+        0.0,
+        lax.add,
+        window_dimensions=(1, 1, 2, 2, 2),
+        window_strides=(1, 1, 2, 2, 2),
+        padding="VALID",
+    )
+    return mask * _up2(dy / counts)
+
+
+def avgpool3d_bwd(dy):
+    return _up2(dy) * 0.125
+
+
+# ---------------------------------------------------------------------------
+# Batch normalization (training mode, distributed-statistics flavor)
+# ---------------------------------------------------------------------------
+
+BN_EPS = 1e-5
+
+
+def bn_stats(x):
+    """Per-channel local partial statistics (sum, sum of squares, count).
+
+    The hybrid engine allreduces these over the sample's partition group and
+    the batch group before calling :func:`bn_apply` — this is the paper's
+    distributed batch-norm (§III-A).
+    """
+    s1 = jnp.sum(x, axis=(0, 2, 3, 4))
+    s2 = jnp.sum(x * x, axis=(0, 2, 3, 4))
+    cnt = jnp.float32(x.shape[0] * x.shape[2] * x.shape[3] * x.shape[4])
+    return s1, s2, cnt
+
+
+def bn_apply(x, mean, var, gamma, beta, eps: float = BN_EPS):
+    """Normalize with (already-reduced) global statistics."""
+    inv = gamma * lax.rsqrt(var + eps)
+    c = mean.reshape(1, -1, 1, 1, 1)
+    return (x - c) * inv.reshape(1, -1, 1, 1, 1) + beta.reshape(1, -1, 1, 1, 1)
+
+
+def bn_fwd_local(x, gamma, beta, eps: float = BN_EPS):
+    """Single-group (fused, data-parallel) BN forward.  Returns y and the
+    saved stats needed for backward and for running-average updates."""
+    s1, s2, cnt = bn_stats(x)
+    mean = s1 / cnt
+    var = s2 / cnt - mean * mean
+    return bn_apply(x, mean, var, gamma, beta, eps), (mean, var)
+
+
+def bn_bwd_partials(x, dy, mean, var, eps: float = BN_EPS):
+    """Local partial sums for the distributed BN backward:
+    (sum dy*xhat, sum dy) per channel."""
+    xhat = (x - mean.reshape(1, -1, 1, 1, 1)) * lax.rsqrt(
+        var.reshape(1, -1, 1, 1, 1) + eps
+    )
+    g1 = jnp.sum(dy * xhat, axis=(0, 2, 3, 4))
+    g2 = jnp.sum(dy, axis=(0, 2, 3, 4))
+    return g1, g2
+
+
+def bn_bwd_apply(x, dy, mean, var, gamma, g1, g2, cnt, eps: float = BN_EPS):
+    """dL/dx for training-mode BN given globally-reduced (g1, g2, cnt).
+
+    dgamma = g1 and dbeta = g2 (after the same allreduce)."""
+    inv = lax.rsqrt(var + eps).reshape(1, -1, 1, 1, 1)
+    xhat = (x - mean.reshape(1, -1, 1, 1, 1)) * inv
+    t = dy - (g2 / cnt).reshape(1, -1, 1, 1, 1) - xhat * (g1 / cnt).reshape(
+        1, -1, 1, 1, 1
+    )
+    return gamma.reshape(1, -1, 1, 1, 1) * inv * t
+
+
+# ---------------------------------------------------------------------------
+# Pointwise / dense / losses
+# ---------------------------------------------------------------------------
+
+LEAKY_SLOPE = 0.01
+
+
+def leaky_relu(x, slope: float = LEAKY_SLOPE):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def leaky_relu_bwd(x, dy, slope: float = LEAKY_SLOPE):
+    return jnp.where(x >= 0, dy, slope * dy)
+
+
+def dense(x, w, b):
+    """Fully-connected layer: x (n, f_in), w (f_out, f_in), b (f_out,)."""
+    return x @ w.T + b
+
+
+def dense_bwd(x, w, dy):
+    """Returns (dx, dw, db)."""
+    return dy @ w, dy.T @ x, jnp.sum(dy, axis=0)
+
+
+def mse_loss(pred, target):
+    """Mean squared error over all elements (CosmoFlow's loss)."""
+    d = pred - target
+    return jnp.mean(d * d)
+
+
+def mse_fwd_bwd(pred, target):
+    """Loss value and dL/dpred in one pass."""
+    d = pred - target
+    n = jnp.float32(d.size)
+    return jnp.mean(d * d), 2.0 * d / n
+
+
+def softmax_xent(logits, labels, n_classes: int):
+    """Per-voxel softmax cross-entropy for segmentation (3D U-Net).
+
+    logits (n, k, d, h, w); labels (n, d, h, w) int32.  Returns mean loss
+    over voxels.
+    """
+    lse = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+    logp = logits - lse
+    onehot = jax.nn.one_hot(labels, n_classes, axis=1, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=1))
+
+
+def softmax_xent_fwd_bwd(logits, labels, n_classes: int):
+    """Loss and dL/dlogits."""
+    lse = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+    logp = logits - lse
+    onehot = jax.nn.one_hot(labels, n_classes, axis=1, dtype=logits.dtype)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=1))
+    m = jnp.float32(labels.size)
+    return loss, (jnp.exp(logp) - onehot) / m
+
+
+def dice_score(pred_labels, labels, n_classes: int):
+    """Mean Dice coefficient over classes — the LiTS evaluation metric."""
+    scores = []
+    for k in range(n_classes):
+        p = (pred_labels == k).astype(jnp.float32)
+        t = (labels == k).astype(jnp.float32)
+        inter = jnp.sum(p * t)
+        denom = jnp.sum(p) + jnp.sum(t)
+        scores.append(jnp.where(denom > 0, 2 * inter / denom, 1.0))
+    return jnp.mean(jnp.stack(scores))
+
+
+# ---------------------------------------------------------------------------
+# Shard-flavoured helpers (what the hybrid engine's executables compute)
+# ---------------------------------------------------------------------------
+
+
+def conv3d_shard_fwd(x_padded, w, stride: int = 1):
+    """Forward conv on a depth-halo-padded shard: valid in D, same in H/W.
+
+    The Rust engine always supplies ``halo = (k_d - 1) // 2`` planes on both
+    depth ends (boundary ranks get zero planes, interior ranks get neighbour
+    data), so one executable serves every rank position."""
+    return conv3d(x_padded, w, stride, "valid_d")
+
+
+def conv3d_shard_bwd_data(dy, w, xp_shape, stride: int = 1):
+    """Gradient w.r.t. the *padded* shard input; the engine reverse-exchanges
+    and accumulates the halo planes into the owning neighbours."""
+    return conv3d_bwd_data(dy, w, xp_shape, stride, "valid_d")
+
+
+def conv3d_shard_bwd_filter(x_padded, dy, w_shape, stride: int = 1):
+    return conv3d_bwd_filter(x_padded, dy, w_shape, stride, "valid_d")

@@ -1,0 +1,440 @@
+"""L2: JAX model graphs for HYDRA-3D (CosmoFlow + 3D U-Net).
+
+Two consumption modes, both AOT-lowered by ``aot.py`` (build-time only —
+Python is never on the training path):
+
+* **Fused graphs** — ``train_step`` (``jax.value_and_grad`` over the whole
+  model) and ``predict``, one executable per model.  Used by the Rust
+  engine's pure data-parallel path and the end-to-end examples.  Forward
+  convolutions go through the Pallas kernel (``kernels.conv3d.conv3d`` has a
+  custom vjp) unless ``fused_pallas=False`` (default: off for lowering/runtime
+  speed on the CPU testbed; flag ``--pallas-fused`` flips it).
+* **Layer plans** — a JSON-able description of the network that ``aot.py``
+  turns into *per-layer shard executables* for the hybrid-parallel engine
+  (conv/pool/bn/fc/losses on depth-partitioned shards, always through the
+  Pallas kernels).  The plan is embedded in the manifest so the Rust engine
+  builds its graph from the same source of truth.
+
+Model registry (miniaturized per DESIGN.md §4 — resolutions 16^3/32^3/64^3
+stand in for the paper's 128^3/256^3/512^3):
+
+=============  =======  =====================  ==================  ====
+name           input    conv channels          fc widths           BN
+=============  =======  =====================  ==================  ====
+cf16           16^3     16, 32                 128, 64, 4          no
+cf16-bn        16^3     16, 32                 128, 64, 4          yes
+cf32           32^3     16, 32, 64             256, 64, 4          no
+cf32-bn        32^3     16, 32, 64             256, 64, 4          yes
+cf64           64^3     16, 32, 64, 128, 256   2048, 256, 4        no
+cf64-bn        64^3     16, 32, 64, 128, 256   2048, 256, 4        yes
+cf-nano        8^3      4, 8                   16, 4               no
+cf-nano-bn     8^3      4, 8                   16, 4               yes
+unet16         16^3     base 4, 2 levels       (2 classes)         no
+unet16-bn      16^3     base 4, 2 levels       (2 classes)         yes
+unet32         32^3     base 8, 2 levels       (2 classes)         no
+=============  =======  =====================  ==================  ====
+
+Like the paper's Table I family, each halving of the input drops one
+conv+pool level so the flattened feature map stays fixed (4^3 here, 2^3 in
+the paper).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import conv3d as kconv
+from .kernels import pool3d as kpool
+from .kernels import bnorm as kbn
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CosmoFlowSpec:
+    """The extended CosmoFlow regressor of §IV, miniaturized."""
+
+    name: str
+    input_size: int
+    channels: tuple
+    fc: tuple  # hidden widths + output (last entry = n_targets)
+    use_bn: bool = False
+    in_channels: int = 1
+    dropout_keep: float = 0.8
+    pool: str = "avg"  # original CosmoFlow pools with average pooling
+
+    @property
+    def n_targets(self) -> int:
+        return self.fc[-1]
+
+    @property
+    def final_spatial(self) -> int:
+        return self.input_size >> len(self.channels)
+
+    @property
+    def flat_features(self) -> int:
+        return self.channels[-1] * self.final_spatial**3
+
+
+@dataclass(frozen=True)
+class UNetSpec:
+    """3D U-Net (Çiçek et al.) miniaturized; two 3^3 convs per level,
+    2^3-stride-2 max pool down, 2^3-stride-2 deconv up, skip concats,
+    1^3 conv head."""
+
+    name: str
+    input_size: int
+    base_channels: int
+    levels: int
+    n_classes: int = 2
+    use_bn: bool = False
+    in_channels: int = 1
+
+    def level_channels(self, i: int) -> int:
+        return self.base_channels << i
+
+
+REGISTRY: dict = {}
+
+
+def _reg(spec):
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+for _bn in (False, True):
+    _sfx = "-bn" if _bn else ""
+    _reg(CosmoFlowSpec(f"cf-nano{_sfx}", 8, (4, 8), (16, 4), use_bn=_bn))
+    _reg(CosmoFlowSpec(f"cf16{_sfx}", 16, (16, 32), (128, 64, 4), use_bn=_bn))
+    _reg(CosmoFlowSpec(f"cf32{_sfx}", 32, (16, 32, 64), (256, 64, 4), use_bn=_bn))
+    _reg(
+        CosmoFlowSpec(
+            f"cf64{_sfx}", 64, (16, 32, 64, 128, 256), (2048, 256, 4), use_bn=_bn
+        )
+    )
+    _reg(UNetSpec(f"unet16{_sfx}", 16, 4, 2, use_bn=_bn))
+_reg(UNetSpec("unet32", 32, 8, 2))
+
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+
+
+def param_table(spec) -> list:
+    """Ordered (name, shape) for every trainable parameter.
+
+    The Rust side initializes and owns the parameters; this table fixes the
+    order used in every fused executable's signature.
+    """
+    out = []
+    if isinstance(spec, CosmoFlowSpec):
+        cin = spec.in_channels
+        for i, c in enumerate(spec.channels):
+            out.append((f"conv{i}.w", (c, cin, 3, 3, 3)))
+            if spec.use_bn:
+                out.append((f"conv{i}.gamma", (c,)))
+                out.append((f"conv{i}.beta", (c,)))
+            cin = c
+        fin = spec.flat_features
+        for j, f in enumerate(spec.fc):
+            out.append((f"fc{j}.w", (f, fin)))
+            out.append((f"fc{j}.b", (f,)))
+            fin = f
+        return out
+    assert isinstance(spec, UNetSpec)
+
+    def convpair(tag, cin, c):
+        res = []
+        for s in ("a", "b"):
+            res.append((f"{tag}{s}.w", (c, cin, 3, 3, 3)))
+            if spec.use_bn:
+                res.append((f"{tag}{s}.gamma", (c,)))
+                res.append((f"{tag}{s}.beta", (c,)))
+            cin = c
+        return res
+
+    cin = spec.in_channels
+    for i in range(spec.levels):
+        c = spec.level_channels(i)
+        out += convpair(f"down{i}.", cin, c)
+        cin = c
+    cb = spec.level_channels(spec.levels)
+    out += convpair("bottom.", cin, cb)
+    cin = cb
+    for i in reversed(range(spec.levels)):
+        c = spec.level_channels(i)
+        out.append((f"up{i}.deconv.w", (cin, c, 2, 2, 2)))  # (in, out, k, k, k)
+        out += convpair(f"up{i}.", 2 * c, c)
+        cin = c
+    out.append(("head.w", (spec.n_classes, cin, 1, 1, 1)))
+    return out
+
+
+def bn_layer_names(spec) -> list:
+    """Names of the BN-carrying conv layers, in forward order (for running
+    statistics bookkeeping on the Rust side)."""
+    if not spec.use_bn:
+        return []
+    return [n[: -len(".gamma")] for n, _ in param_table(spec) if n.endswith(".gamma")]
+
+
+# ---------------------------------------------------------------------------
+# Forward graphs
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, use_pallas, stride=1, padding="same"):
+    if use_pallas:
+        return kconv.conv3d(x, w, stride, padding)
+    return ref.conv3d(x, w, stride, padding)
+
+
+def _pool(x, op):
+    return ref.maxpool3d(x) if op == "max" else ref.avgpool3d(x)
+
+
+def _bn_act(x, gamma, beta, train, running):
+    """BN (+ leaky) in train mode (batch stats) or eval mode (running)."""
+    if train:
+        y, (mean, var) = ref.bn_fwd_local(x, gamma, beta)
+        return ref.leaky_relu(y), (mean, var)
+    mean, var = running
+    return ref.leaky_relu(ref.bn_apply(x, mean, var, gamma, beta)), running
+
+
+def cosmoflow_fwd(spec, params, x, *, train, masks=None, running=None,
+                  use_pallas=False):
+    """CosmoFlow forward.  ``params`` dict name->array; returns
+    (predictions, list of (mean, var) per BN layer)."""
+    stats = []
+    h = x
+    for i in range(len(spec.channels)):
+        h = _conv(h, params[f"conv{i}.w"], use_pallas)
+        if spec.use_bn:
+            r = None if train else running[i]
+            h, s = _bn_act(h, params[f"conv{i}.gamma"], params[f"conv{i}.beta"],
+                           train, r)
+            stats.append(s)
+        else:
+            h = ref.leaky_relu(h)
+        h = _pool(h, spec.pool)
+    h = h.reshape(h.shape[0], -1)
+    n_fc = len(spec.fc)
+    for j in range(n_fc):
+        h = ref.dense(h, params[f"fc{j}.w"], params[f"fc{j}.b"])
+        if j < n_fc - 1:
+            h = ref.leaky_relu(h)
+            if train:
+                # masks are pre-scaled (0 or 1/keep) Bernoulli draws supplied
+                # by the Rust engine so the graph stays deterministic.
+                h = h * masks[j]
+    return h, stats
+
+
+def unet_fwd(spec, params, x, *, train, running=None, use_pallas=False):
+    """3D U-Net forward.  Returns (logits, bn stats)."""
+    stats = []
+    ridx = [0]
+
+    def cbr(tag, h):
+        h = _conv(h, params[f"{tag}.w"], use_pallas)
+        if spec.use_bn:
+            r = None if train else running[ridx[0]]
+            h, s = _bn_act(h, params[f"{tag}.gamma"], params[f"{tag}.beta"], train, r)
+            stats.append(s)
+            ridx[0] += 1
+        else:
+            h = ref.leaky_relu(h)
+        return h
+
+    skips = []
+    h = x
+    for i in range(spec.levels):
+        h = cbr(f"down{i}.a", h)
+        h = cbr(f"down{i}.b", h)
+        skips.append(h)
+        h = ref.maxpool3d(h)
+    h = cbr("bottom.a", h)
+    h = cbr("bottom.b", h)
+    for i in reversed(range(spec.levels)):
+        h = ref.deconv3d(h, params[f"up{i}.deconv.w"])
+        h = jnp.concatenate([skips[i], h], axis=1)
+        h = cbr(f"up{i}.a", h)
+        h = cbr(f"up{i}.b", h)
+    return ref.conv3d(h, params["head.w"]), stats
+
+
+# ---------------------------------------------------------------------------
+# Fused train/predict entry points (AOT targets)
+# ---------------------------------------------------------------------------
+
+
+def _params_from_flat(spec, flat):
+    return {name: a for (name, _), a in zip(param_table(spec), flat)}
+
+
+def make_train_step(spec, use_pallas=False):
+    """Build ``train_step(x, target, [masks...], *params) ->
+    (loss, *grads, *bn_means, *bn_vars)``.
+
+    The optimizer (Adam) lives on the Rust side, so the executable is a pure
+    function of (batch, params) — the paper's framework splits the same way
+    (cuDNN compute vs framework-side update).
+    """
+    ptable = param_table(spec)
+    n_params = len(ptable)
+
+    if isinstance(spec, CosmoFlowSpec):
+        n_masks = len(spec.fc) - 1
+
+        def loss_fn(flat, x, target, masks):
+            params = _params_from_flat(spec, flat)
+            pred, stats = cosmoflow_fwd(
+                spec, params, x, train=True, masks=masks, use_pallas=use_pallas
+            )
+            return ref.mse_loss(pred, target), stats
+
+        def train_step(*args):
+            x, target = args[0], args[1]
+            masks = list(args[2 : 2 + n_masks])
+            flat = list(args[2 + n_masks :])
+            (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                flat, x, target, masks
+            )
+            means = [m for m, _ in stats]
+            variances = [v for _, v in stats]
+            return tuple([loss] + list(grads) + means + variances)
+
+        train_step.n_masks = n_masks
+    else:
+
+        def loss_fn(flat, x, onehot):
+            params = _params_from_flat(spec, flat)
+            logits, stats = unet_fwd(spec, params, x, train=True,
+                                     use_pallas=use_pallas)
+            lse = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+            loss = -jnp.mean(jnp.sum(onehot * (logits - lse), axis=1))
+            return loss, stats
+
+        def train_step(*args):
+            x, onehot = args[0], args[1]
+            flat = list(args[2:])
+            (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                flat, x, onehot
+            )
+            means = [m for m, _ in stats]
+            variances = [v for _, v in stats]
+            return tuple([loss] + list(grads) + means + variances)
+
+        train_step.n_masks = 0
+
+    train_step.n_params = n_params
+    return train_step
+
+
+def make_predict(spec, use_pallas=False):
+    """Build ``predict(x, *params, *bn_means, *bn_vars) -> (output,)`` —
+    eval mode: running statistics, no dropout."""
+    n_bn = len(bn_layer_names(spec))
+
+    def predict(*args):
+        x = args[0]
+        flat = list(args[1 : 1 + len(param_table(spec))])
+        rest = args[1 + len(param_table(spec)) :]
+        running = list(zip(rest[:n_bn], rest[n_bn:])) if n_bn else None
+        params = _params_from_flat(spec, flat)
+        if isinstance(spec, CosmoFlowSpec):
+            out, _ = cosmoflow_fwd(spec, params, x, train=False, running=running,
+                                   use_pallas=use_pallas)
+        else:
+            out, _ = unet_fwd(spec, params, x, train=False, running=running,
+                              use_pallas=use_pallas)
+        return (out,)
+
+    return predict
+
+
+# ---------------------------------------------------------------------------
+# Layer plans for the hybrid-parallel engine
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(spec) -> list:
+    """Flat forward-order layer descriptors for the shard engine.
+
+    Spatial entries carry the *global* activation geometry; ``aot.py``
+    divides depth by the partition ways when shaping shard executables.
+    The Rust engine executes this plan directly (it is embedded in the
+    manifest), inserting halo exchanges around convs, allreduces inside BN,
+    and gather/scatter at the flatten boundary.
+    """
+    plan = []
+    if isinstance(spec, CosmoFlowSpec):
+        s = spec.input_size
+        cin = spec.in_channels
+        for i, c in enumerate(spec.channels):
+            plan.append(dict(kind="conv", tag=f"conv{i}", cin=cin, cout=c, k=3,
+                             stride=1, d=s, h=s, w=s))
+            if spec.use_bn:
+                plan.append(dict(kind="bn", tag=f"conv{i}", c=c, d=s, h=s, w=s))
+            else:
+                plan.append(dict(kind="act", c=c, d=s, h=s, w=s))
+            plan.append(dict(kind="pool", op=spec.pool, c=c, d=s, h=s, w=s))
+            s //= 2
+            cin = c
+        plan.append(dict(kind="flatten", c=cin, d=s, h=s, w=s))
+        fin = spec.flat_features
+        for j, f in enumerate(spec.fc):
+            last = j == len(spec.fc) - 1
+            plan.append(dict(kind="fc", tag=f"fc{j}", fin=fin, fout=f,
+                             act=not last, dropout=not last))
+            fin = f
+        plan.append(dict(kind="mse", n=spec.n_targets))
+        return plan
+
+    assert isinstance(spec, UNetSpec)
+    s = spec.input_size
+    cin = spec.in_channels
+
+    def conv_bn(tag, cin, c, s):
+        plan.append(dict(kind="conv", tag=tag, cin=cin, cout=c, k=3, stride=1,
+                         d=s, h=s, w=s))
+        if spec.use_bn:
+            plan.append(dict(kind="bn", tag=tag, c=c, d=s, h=s, w=s))
+        else:
+            plan.append(dict(kind="act", c=c, d=s, h=s, w=s))
+
+    for i in range(spec.levels):
+        c = spec.level_channels(i)
+        conv_bn(f"down{i}.a", cin, c, s)
+        conv_bn(f"down{i}.b", c, c, s)
+        plan.append(dict(kind="save_skip", slot=i, c=c, d=s, h=s, w=s))
+        plan.append(dict(kind="pool", op="max", c=c, d=s, h=s, w=s))
+        s //= 2
+        cin = c
+    cb = spec.level_channels(spec.levels)
+    conv_bn("bottom.a", cin, cb, s)
+    conv_bn("bottom.b", cb, cb, s)
+    cin = cb
+    for i in reversed(range(spec.levels)):
+        c = spec.level_channels(i)
+        plan.append(dict(kind="deconv", tag=f"up{i}.deconv", cin=cin, cout=c,
+                         k=2, stride=2, d=s, h=s, w=s))
+        s *= 2
+        plan.append(dict(kind="concat_skip", slot=i, c_skip=c, c_up=c,
+                         d=s, h=s, w=s))
+        conv_bn(f"up{i}.a", 2 * c, c, s)
+        conv_bn(f"up{i}.b", c, c, s)
+        cin = c
+    plan.append(dict(kind="conv", tag="head", cin=cin, cout=spec.n_classes, k=1,
+                     stride=1, d=s, h=s, w=s))
+    plan.append(dict(kind="xent", n_classes=spec.n_classes, d=s, h=s, w=s))
+    return plan

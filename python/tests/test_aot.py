@@ -1,0 +1,106 @@
+"""AOT pipeline tests: manifest integrity and HLO-text round-trip health.
+
+These run against a freshly-built nano manifest in a temp dir (fast), plus
+checks on the repo's real ``artifacts/`` when present.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))), "artifacts")
+
+
+@pytest.fixture(scope="module")
+def nano_manifest(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("art"))
+    return aot.build(out, ["cf-nano"], {"cf-nano": [1, 2]}), out
+
+
+def test_manifest_structure(nano_manifest):
+    man, out = nano_manifest
+    assert man["version"] == 1
+    assert "cf-nano" in man["models"]
+    m = man["models"]["cf-nano"]
+    assert m["fused"]["train_step"] in man["entries"]
+    assert m["fused"]["predict"] in man["entries"]
+    for e in man["entries"].values():
+        assert os.path.exists(os.path.join(out, e["file"]))
+        assert e["inputs"] and e["outputs"]
+
+
+def test_hlo_text_parses_as_hlo(nano_manifest):
+    """Files must be HLO text (the 0.5.1-compatible interchange), not
+    stablehlo or proto bytes."""
+    man, out = nano_manifest
+    name = man["models"]["cf-nano"]["fused"]["train_step"]
+    text = open(os.path.join(out, man["entries"][name]["file"])).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_train_step_signature_matches_param_table(nano_manifest):
+    man, _ = nano_manifest
+    spec = M.REGISTRY["cf-nano"]
+    m = man["models"]["cf-nano"]
+    e = man["entries"][m["fused"]["train_step"]]
+    ptable = M.param_table(spec)
+    n_masks = m["fused"]["n_masks"]
+    assert len(e["inputs"]) == 2 + n_masks + len(ptable)
+    # grads mirror param shapes, in order
+    for (name, shape), got in zip(ptable, e["outputs"][1 : 1 + len(ptable)]):
+        assert got == list(shape), name
+    # loss is a scalar
+    assert e["outputs"][0] == []
+
+
+def test_shard_entries_cover_plan(nano_manifest):
+    man, _ = nano_manifest
+    m = man["models"]["cf-nano"]
+    for ways, plan in m["hybrid"].items():
+        for layer in plan:
+            if layer["kind"] == "conv":
+                for op in ("fwd", "bwd_data", "bwd_filter"):
+                    assert layer[op] in man["entries"], (ways, layer["tag"], op)
+                e = man["entries"][layer["fwd"]]
+                dsh = layer["d"] // int(ways)
+                assert e["inputs"][0] == [1, layer["cin"], dsh + 2, layer["h"],
+                                          layer["w"]]
+                assert e["outputs"][0] == [1, layer["cout"], dsh, layer["h"],
+                                           layer["w"]]
+            if layer["kind"] == "pool":
+                assert layer["fwd"] in man["entries"]
+                assert layer["bwd"] in man["entries"]
+
+
+def test_hlo_audit_no_recompute(nano_manifest):
+    """The fused train_step must contain exactly fwd+bwd_data+bwd_filter
+    convolutions per conv layer — except the first layer, whose bwd_data is
+    dead (the input is a leaf) and must be DCE'd.  Total = 3L - 1; anything
+    more means rematerialization crept in."""
+    man, out = nano_manifest
+    name = man["models"]["cf-nano"]["fused"]["train_step"]
+    text = open(os.path.join(out, man["entries"][name]["file"])).read()
+    counts = aot.audit_hlo(text)
+    n_convs = len(M.REGISTRY["cf-nano"].channels)
+    assert counts["convolution"] == 3 * n_convs - 1, counts
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="repo artifacts not built")
+def test_repo_artifacts_complete():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    for name in aot.FUSED_MODELS:
+        assert name in man["models"], name
+    for name, e in man["entries"].items():
+        assert os.path.exists(os.path.join(ART, e["file"])), name
+    # hybrid sets present
+    for name, ways in aot.HYBRID_SETS.items():
+        assert sorted(map(int, man["models"][name]["hybrid"])) == sorted(ways)

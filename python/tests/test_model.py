@@ -1,0 +1,197 @@
+"""L2 correctness: fused model graphs, parameter tables, and layer plans.
+
+The key cross-layer invariant: the fused ``train_step`` (one jax graph) and
+a manual layer-by-layer composition following ``layer_plan`` (what the Rust
+hybrid engine executes) produce identical losses and gradients.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def assert_close(a, b, **kw):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **(TOL | kw))
+
+
+def init_flat(spec, rng, scale=0.2):
+    flat = []
+    for name, shape in M.param_table(spec):
+        if name.endswith(".gamma"):
+            flat.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".beta", ".b")):
+            flat.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(np.prod(shape[1:]))
+            flat.append(jnp.asarray(
+                rng.standard_normal(shape) / np.sqrt(fan_in), jnp.float32))
+    return flat
+
+
+@pytest.mark.parametrize("name", ["cf-nano", "cf-nano-bn", "cf16", "cf16-bn"])
+def test_cosmoflow_forward_shapes(name, rng):
+    spec = M.REGISTRY[name]
+    flat = init_flat(spec, rng)
+    params = {n: a for (n, _), a in zip(M.param_table(spec), flat)}
+    x = jnp.asarray(
+        rng.standard_normal((2, 1, spec.input_size,) + (spec.input_size,) * 2),
+        jnp.float32,
+    )
+    masks = [jnp.ones((2, f), jnp.float32) for f in spec.fc[:-1]]
+    y, stats = M.cosmoflow_fwd(spec, params, x, train=True, masks=masks)
+    assert y.shape == (2, spec.n_targets)
+    assert len(stats) == (len(spec.channels) if spec.use_bn else 0)
+
+
+@pytest.mark.parametrize("name", ["unet16", "unet16-bn"])
+def test_unet_forward_shapes(name, rng):
+    spec = M.REGISTRY[name]
+    flat = init_flat(spec, rng)
+    params = {n: a for (n, _), a in zip(M.param_table(spec), flat)}
+    s = spec.input_size
+    x = jnp.asarray(rng.standard_normal((1, 1, s, s, s)), jnp.float32)
+    logits, _ = M.unet_fwd(spec, params, x, train=True)
+    assert logits.shape == (1, spec.n_classes, s, s, s)
+
+
+def test_param_table_matches_paper_structure():
+    """Parameter census sanity: conv params dominate fc for the U-Net; fc
+    dominates for CosmoFlow (as in Table I, where fc1 holds most of the
+    9.44M)."""
+    cf = M.REGISTRY["cf64"]
+    sizes = {n: int(np.prod(s)) for n, s in M.param_table(cf)}
+    fc_total = sum(v for k, v in sizes.items() if k.startswith("fc"))
+    conv_total = sum(v for k, v in sizes.items() if k.startswith("conv"))
+    assert fc_total > conv_total
+    # the bn variant adds exactly 2*c per conv layer
+    cfb = M.REGISTRY["cf64-bn"]
+    extra = sum(
+        int(np.prod(s)) for n, s in M.param_table(cfb) if ".gamma" in n or ".beta" in n
+    )
+    assert extra == 2 * sum(cf.channels)
+
+
+def test_fused_train_step_grads_match_manual(rng):
+    """value_and_grad of the fused graph == loss/grads of an explicit
+    forward + hand-chained backward on cf-nano (no BN).
+
+    This pins the semantics the Rust per-layer engine re-implements.
+    """
+    spec = M.REGISTRY["cf-nano"]
+    flat = init_flat(spec, rng)
+    x = jnp.asarray(rng.standard_normal((2, 1, 8, 8, 8)), jnp.float32)
+    tgt = jnp.asarray(rng.standard_normal((2, spec.n_targets)), jnp.float32)
+    masks = [jnp.ones((2, f), jnp.float32) for f in spec.fc[:-1]]
+
+    train = M.make_train_step(spec)
+    out = train(x, tgt, *masks, *flat)
+    loss, grads = out[0], out[1 : 1 + len(flat)]
+
+    # manual: forward chain saving activations, then reverse chain.
+    params = {n: a for (n, _), a in zip(M.param_table(spec), flat)}
+    acts = {"x0": x}
+    h = x
+    for i in range(len(spec.channels)):
+        c = ref.conv3d(h, params[f"conv{i}.w"])
+        a = ref.leaky_relu(c)
+        p = ref.avgpool3d(a)
+        acts[f"c{i}"], acts[f"a{i}"], acts[f"p{i}"] = c, a, p
+        h = p
+    hf = h.reshape(2, -1)
+    acts["flat"] = hf
+    z0 = ref.dense(hf, params["fc0.w"], params["fc0.b"])
+    a0 = ref.leaky_relu(z0) * masks[0]
+    z1 = ref.dense(a0, params["fc1.w"], params["fc1.b"])
+    want_loss = ref.mse_loss(z1, tgt)
+    assert_close(loss, want_loss)
+
+    _, dpred = ref.mse_fwd_bwd(z1, tgt)
+    dx1, dw1, db1 = ref.dense_bwd(a0, params["fc1.w"], dpred)
+    dz0 = ref.leaky_relu_bwd(z0, dx1 * masks[0])
+    dflat, dw0, db0 = ref.dense_bwd(hf, params["fc0.w"], dz0)
+    dh = dflat.reshape(h.shape)
+    gdict = {"fc1.w": dw1, "fc1.b": db1, "fc0.w": dw0, "fc0.b": db0}
+    for i in reversed(range(len(spec.channels))):
+        da = ref.avgpool3d_bwd(dh)
+        dc = ref.leaky_relu_bwd(acts[f"c{i}"], da)
+        src = acts[f"p{i-1}"] if i else x
+        gdict[f"conv{i}.w"] = ref.conv3d_bwd_filter(src, dc, params[f"conv{i}.w"].shape)
+        dh = ref.conv3d_bwd_data(dc, params[f"conv{i}.w"], src.shape)
+    for (name, _), g in zip(M.param_table(spec), grads):
+        assert_close(g, gdict[name], atol=1e-4, rtol=1e-3)
+
+
+def test_predict_eval_mode_uses_running_stats(rng):
+    spec = M.REGISTRY["cf-nano-bn"]
+    flat = init_flat(spec, rng)
+    x = jnp.asarray(rng.standard_normal((2, 1, 8, 8, 8)), jnp.float32)
+    n_bn = len(M.bn_layer_names(spec))
+    chans = [dict(M.param_table(spec))[f"{n}.gamma"][0]
+             for n in M.bn_layer_names(spec)]
+    means = [jnp.zeros(c, jnp.float32) for c in chans]
+    variances = [jnp.ones(c, jnp.float32) for c in chans]
+    predict = M.make_predict(spec)
+    (y,) = predict(x, *flat, *means, *variances)
+    assert y.shape == (2, spec.n_targets)
+    # changing the running stats must change the output
+    (y2,) = predict(x, *flat, *[m + 1 for m in means], *variances)
+    assert not np.allclose(np.asarray(y), np.asarray(y2))
+
+
+def test_dropout_mask_semantics(rng):
+    """Masks are pre-scaled: mask==1/keep where kept. A kept-everything mask
+    at keep=1 equals no dropout; a zero mask kills the fc path."""
+    spec = M.REGISTRY["cf-nano"]
+    flat = init_flat(spec, rng)
+    params = {n: a for (n, _), a in zip(M.param_table(spec), flat)}
+    x = jnp.asarray(rng.standard_normal((1, 1, 8, 8, 8)), jnp.float32)
+    ones = [jnp.ones((1, f), jnp.float32) for f in spec.fc[:-1]]
+    zeros = [jnp.zeros((1, f), jnp.float32) for f in spec.fc[:-1]]
+    y1, _ = M.cosmoflow_fwd(spec, params, x, train=True, masks=ones)
+    y2, _ = M.cosmoflow_fwd(spec, params, x, train=False)
+    assert_close(y1, y2)
+    y3, _ = M.cosmoflow_fwd(spec, params, x, train=True, masks=zeros)
+    want = params["fc1.b"]  # only the output bias survives
+    assert_close(y3[0], want)
+
+
+@pytest.mark.parametrize("name", ["cf16", "cf16-bn", "cf32", "unet16", "unet16-bn"])
+def test_layer_plan_geometry(name):
+    """Plans are self-consistent: conv/pool/fc geometry chains correctly and
+    matches the spec's analytic feature count."""
+    spec = M.REGISTRY[name]
+    plan = M.layer_plan(spec)
+    if isinstance(spec, M.CosmoFlowSpec):
+        convs = [l for l in plan if l["kind"] == "conv"]
+        pools = [l for l in plan if l["kind"] == "pool"]
+        assert len(convs) == len(spec.channels) == len(pools)
+        for a, b in zip(convs, pools):
+            assert (a["d"], a["cout"]) == (b["d"], b["c"])
+        flat = next(l for l in plan if l["kind"] == "flatten")
+        assert flat["c"] * flat["d"] * flat["h"] * flat["w"] == spec.flat_features
+        fcs = [l for l in plan if l["kind"] == "fc"]
+        assert fcs[0]["fin"] == spec.flat_features
+        assert fcs[-1]["fout"] == spec.n_targets
+        assert not fcs[-1]["act"]
+    else:
+        head = [l for l in plan if l["kind"] == "conv"][-1]
+        assert head["cout"] == spec.n_classes and head["k"] == 1
+        assert plan[-1]["kind"] == "xent"
+        assert plan[-1]["d"] == spec.input_size
+    # every tagged plan layer has parameters in the table
+    table = dict(M.param_table(spec))
+    for l in plan:
+        if l["kind"] in ("conv", "deconv"):
+            assert f"{l['tag']}.w" in table
+
+
+def test_bn_layer_names_order():
+    spec = M.REGISTRY["cf16-bn"]
+    assert M.bn_layer_names(spec) == ["conv0", "conv1"]
+    assert M.bn_layer_names(M.REGISTRY["cf16"]) == []

@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas pool3d + fused bn/leaky kernels vs the oracle,
+plus the backward rules the shard executables are built from."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pool3d as KP
+from compile.kernels import bnorm as KB
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-5, atol=2e-6)
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+def assert_close(a, b, **kw):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **(TOL | kw))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 2]),
+    c=st.sampled_from([1, 3, 4, 8]),
+    d=st.sampled_from([2, 4, 8]),
+    hw=st.sampled_from([2, 4, 6]),
+    op=st.sampled_from(["max", "avg"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_matches_ref(n, c, d, hw, op, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, c, d, hw, hw))
+    got = KP.pool3d_pallas(x, op)
+    want = ref.maxpool3d(x) if op == "max" else ref.avgpool3d(x)
+    assert got.shape == want.shape
+    assert_close(got, want)
+
+
+def test_pool_shard_locality(rng):
+    """2^3/stride-2 pooling commutes with even depth splits — why pooling
+    needs no halo exchange under the paper's partitioning (DESIGN.md §6)."""
+    x = _rand(rng, (1, 4, 8, 4, 4))
+    whole = ref.maxpool3d(x)
+    parts = [KP.maxpool3d(x[:, :, i * 4 : (i + 1) * 4]) for i in range(2)]
+    assert_close(jnp.concatenate(parts, axis=2), whole)
+
+
+def test_maxpool_bwd_matches_autodiff(rng):
+    x = _rand(rng, (2, 3, 4, 4, 4))
+    dy_shape = (2, 3, 2, 2, 2)
+    dy = _rand(rng, dy_shape)
+    y = ref.maxpool3d(x)
+    got = ref.maxpool3d_bwd(x, y, dy)
+    want = jax.grad(lambda x: jnp.sum(ref.maxpool3d(x) * dy))(x)
+    assert_close(got, want)
+
+
+def test_maxpool_bwd_tie_convention():
+    """All-equal window: gradient is shared equally among the 8 ties."""
+    x = jnp.ones((1, 1, 2, 2, 2), jnp.float32)
+    y = ref.maxpool3d(x)
+    dy = jnp.full((1, 1, 1, 1, 1), 8.0, jnp.float32)
+    dx = ref.maxpool3d_bwd(x, y, dy)
+    np.testing.assert_allclose(np.asarray(dx), np.ones((1, 1, 2, 2, 2)))
+
+
+def test_avgpool_bwd_matches_autodiff(rng):
+    x = _rand(rng, (1, 2, 4, 4, 4))
+    dy = _rand(rng, (1, 2, 2, 2, 2))
+    got = ref.avgpool3d_bwd(dy)
+    want = jax.grad(lambda x: jnp.sum(ref.avgpool3d(x) * dy))(x)
+    assert_close(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bn_leaky_fused_matches_ref(c, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (2, c, d, 4, 4))
+    gamma = _rand(rng, (c,)) + 1.5
+    beta = _rand(rng, (c,))
+    mean = jnp.mean(x, (0, 2, 3, 4))
+    var = jnp.var(x, (0, 2, 3, 4))
+    got = KB.bn_leaky_pallas(x, mean, var, gamma, beta)
+    want = ref.leaky_relu(ref.bn_apply(x, mean, var, gamma, beta))
+    assert_close(got, want)
+
+
+def test_distributed_bn_stats_compose(rng):
+    """Sharded (sum, sumsq, count) partials allreduced == global stats —
+    the invariant behind the paper's distributed batch-norm (§III-A)."""
+    x = _rand(rng, (4, 3, 8, 4, 4))
+    shards = [x[:, :, i * 2 : (i + 1) * 2] for i in range(4)]
+    s1 = sum(ref.bn_stats(s)[0] for s in shards)
+    s2 = sum(ref.bn_stats(s)[1] for s in shards)
+    cnt = sum(float(ref.bn_stats(s)[2]) for s in shards)
+    mean, var = s1 / cnt, s2 / cnt - (s1 / cnt) ** 2
+    assert_close(mean, jnp.mean(x, (0, 2, 3, 4)))
+    assert_close(var, jnp.var(x, (0, 2, 3, 4)), atol=1e-5)
+
+
+def test_bn_bwd_matches_autodiff(rng):
+    """bn_bwd_apply with *global* partials == jax.grad of training-mode BN
+    (single group), including the fused leaky backward recomputation used
+    by the shard executables."""
+    x = _rand(rng, (2, 3, 4, 4, 4))
+    gamma = _rand(rng, (3,)) + 1.0
+    beta = _rand(rng, (3,))
+    dy = _rand(rng, (2, 3, 4, 4, 4))
+
+    def fwd(x, gamma, beta):
+        y, _ = ref.bn_fwd_local(x, gamma, beta)
+        return jnp.sum(ref.leaky_relu(y) * dy)
+
+    want_dx, want_dg, want_db = jax.grad(fwd, (0, 1, 2))(x, gamma, beta)
+
+    s1, s2, cnt = ref.bn_stats(x)
+    mean, var = s1 / cnt, s2 / cnt - (s1 / cnt) ** 2
+    y_bn = ref.bn_apply(x, mean, var, gamma, beta)
+    dy_bn = ref.leaky_relu_bwd(y_bn, dy)
+    g1, g2 = ref.bn_bwd_partials(x, dy_bn, mean, var)
+    got_dx = ref.bn_bwd_apply(x, dy_bn, mean, var, gamma, g1, g2, cnt)
+    assert_close(got_dx, want_dx, atol=1e-4, rtol=1e-3)
+    assert_close(g1, want_dg, atol=1e-4, rtol=1e-3)  # dgamma
+    assert_close(g2, want_db, atol=1e-4, rtol=1e-3)  # dbeta
+
+
+def test_losses_match_autodiff(rng):
+    p = _rand(rng, (3, 4))
+    t = _rand(rng, (3, 4))
+    loss, dp = ref.mse_fwd_bwd(p, t)
+    assert_close(loss, ref.mse_loss(p, t))
+    assert_close(dp, jax.grad(lambda p: ref.mse_loss(p, t))(p))
+
+    logits = _rand(rng, (2, 3, 4, 4, 4))
+    labels = jnp.asarray(np.random.default_rng(1).integers(0, 3, (2, 4, 4, 4)))
+    loss, dl = ref.softmax_xent_fwd_bwd(logits, labels, 3)
+    assert_close(loss, ref.softmax_xent(logits, labels, 3))
+    assert_close(dl, jax.grad(lambda l: ref.softmax_xent(l, labels, 3))(logits),
+                 atol=1e-6)
+
+
+def test_deconv_shard_locality(rng):
+    """kernel==stride deconv is shard-local in depth (no halo; DESIGN §6)."""
+    x = _rand(rng, (1, 4, 4, 4, 4))
+    w = _rand(rng, (4, 2, 2, 2, 2), 0.4)
+    whole = ref.deconv3d(x, w)
+    parts = [ref.deconv3d(x[:, :, i * 2 : (i + 1) * 2], w) for i in range(2)]
+    assert_close(jnp.concatenate(parts, axis=2), whole)
+
+
+def test_deconv_bwds_match_autodiff(rng):
+    x = _rand(rng, (1, 3, 4, 4, 4))
+    w = _rand(rng, (3, 2, 2, 2, 2), 0.4)
+    dy = _rand(rng, (1, 2, 8, 8, 8))
+    got_dx = ref.deconv3d_bwd_data(dy, w, x.shape)
+    got_dw = ref.deconv3d_bwd_filter(x, dy, w.shape)
+    want_dx, want_dw = jax.grad(
+        lambda x, w: jnp.sum(ref.deconv3d(x, w) * dy), (0, 1)
+    )(x, w)
+    assert_close(got_dx, want_dx, atol=1e-5)
+    assert_close(got_dw, want_dw, atol=1e-4)
+
+
+def test_dice_score_perfect_and_disjoint():
+    a = jnp.asarray(np.array([[[[0, 1]]]]))
+    assert float(ref.dice_score(a, a, 2)) == pytest.approx(1.0)
+    b = 1 - a
+    assert float(ref.dice_score(a, b, 2)) == pytest.approx(0.0)

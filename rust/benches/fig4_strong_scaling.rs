@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig4_strong_scaling` — CosmoFlow 512^3 strong
+//! scaling across mini-batch sizes (paper Fig. 4).
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator::fig4;
+use hydra3d::util::bench::banner;
+
+fn main() {
+    banner("Fig. 4 — CosmoFlow 512^3 strong scaling");
+    print!("{}", fig4(&ClusterConfig::default()));
+}

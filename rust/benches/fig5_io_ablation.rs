@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig5_io_ablation` — strong scaling without
+//! spatially-parallel I/O (paper Fig. 5).
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator::fig5;
+use hydra3d::util::bench::banner;
+
+fn main() {
+    banner("Fig. 5 — I/O ablation");
+    print!("{}", fig5(&ClusterConfig::default()));
+}

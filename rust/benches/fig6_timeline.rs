@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig6_timeline` — per-GPU stream timelines, 8 vs 16
+//! GPUs/sample (paper Fig. 6). Emits Chrome traces into runs/.
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator::fig6;
+use hydra3d::util::bench::banner;
+
+fn main() {
+    std::fs::create_dir_all("runs").ok();
+    banner("Fig. 6 — execution timelines");
+    print!("{}", fig6(&ClusterConfig::default(), Some(std::path::Path::new("runs"))));
+}

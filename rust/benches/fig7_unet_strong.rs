@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig7_unet_strong` — 3D U-Net 256^3 strong scaling
+//! (paper Fig. 7).
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator::fig7;
+use hydra3d::util::bench::banner;
+
+fn main() {
+    banner("Fig. 7 — 3D U-Net strong scaling");
+    print!("{}", fig7(&ClusterConfig::default()));
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig8_weak_scaling` — weak scaling of both networks
+//! (paper Fig. 8).
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator::fig8;
+use hydra3d::util::bench::banner;
+
+fn main() {
+    banner("Fig. 8 — weak scaling");
+    print!("{}", fig8(&ClusterConfig::default()));
+}

@@ -1,0 +1,119 @@
+//! `cargo bench --bench micro` — hot-path micro-benchmarks for the L3
+//! performance pass (DESIGN.md §7): halo pack/unpack bandwidth, ring
+//! allreduce throughput, container hyperslab reads, and PJRT call overhead.
+//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+use hydra3d::comm::world;
+use hydra3d::data::container::{write_dataset, Container};
+use hydra3d::runtime::RuntimeHandle;
+use hydra3d::tensor::Tensor;
+use hydra3d::util::bench::{banner, Bench};
+use hydra3d::util::rng::Pcg;
+use std::path::PathBuf;
+
+fn main() {
+    let mut b = Bench::default();
+    halo_pack(&mut b);
+    allreduce(&mut b);
+    container_reads(&mut b);
+    pjrt_overhead(&mut b);
+}
+
+/// Halo pack/unpack = depth-slab copies (the paper's optimized CUDA packing
+/// kernels; ours must stay memcpy-bound).
+fn halo_pack(b: &mut Bench) {
+    banner("halo pack/unpack (slab copies)");
+    // conv2-of-cf64-like shard: 32 ch x 16 planes x 64 x 64
+    let t = Tensor::zeros(&[1, 32, 16, 64, 64]);
+    let halo_bytes = (32 * 1 * 64 * 64 * 4) as f64;
+    let m = b.run("slice_d 1-plane halo (32x64x64)", || {
+        std::hint::black_box(t.slice_d(0, 1));
+    });
+    println!("   -> pack bandwidth {:.2} GB/s", halo_bytes / m.median / 1e9);
+    let mut padded = t.pad_d(1, 1);
+    let slab = t.slice_d(0, 1);
+    let m = b.run("set_slice_d 1-plane halo", || {
+        padded.set_slice_d(0, std::hint::black_box(&slab));
+    });
+    println!("   -> unpack bandwidth {:.2} GB/s", halo_bytes / m.median / 1e9);
+    let m = b.run("pad_d full shard (+2 planes)", || {
+        std::hint::black_box(t.pad_d(1, 1));
+    });
+    println!("   -> pad bandwidth {:.2} GB/s", (t.numel() * 4) as f64 / m.median / 1e9);
+    let mut acc = t.clone();
+    b.run("add_slice_d (reverse-halo accumulate)", || {
+        acc.add_slice_d(0, std::hint::black_box(&slab));
+    });
+}
+
+/// Ring allreduce over thread-ranks: should be within a small factor of the
+/// memcpy roofline at MiB sizes.
+fn allreduce(b: &mut Bench) {
+    banner("ring allreduce (4 thread-ranks)");
+    for len in [1usize << 10, 1 << 16, 1 << 20] {
+        let name = format!("allreduce_sum {} f32 x4 ranks", len);
+        let m = b.run_once(&name, || {
+            let eps = world(4);
+            std::thread::scope(|s| {
+                for ep in eps {
+                    s.spawn(move || {
+                        let group: Vec<usize> = (0..4).collect();
+                        let mut buf = vec![1.0f32; len];
+                        for _ in 0..20 {
+                            ep.allreduce_sum(&mut buf, &group).unwrap();
+                        }
+                    });
+                }
+            });
+        });
+        let per_iter = m.median / 20.0;
+        println!("   -> {:.2} MB buffers, {:.1} us/allreduce, {:.2} GB/s reduced",
+                 len as f64 * 4.0 / 1e6,
+                 per_iter * 1e6,
+                 (len * 4) as f64 / per_iter / 1e9);
+    }
+}
+
+/// Container hyperslab read throughput (the PFS-facing path).
+fn container_reads(b: &mut Bench) {
+    banner("container hyperslab reads");
+    let mut rng = Pcg::new(5, 5);
+    let mut t = Tensor::zeros(&[1, 1, 32, 32, 32]);
+    rng.fill_normal(t.data_mut(), 1.0);
+    let inputs = vec![t; 4];
+    let targets = vec![Tensor::zeros(&[1, 4]); 4];
+    let mut path = std::env::temp_dir();
+    path.push(format!("hydra3d-bench-{}", std::process::id()));
+    write_dataset(&path, &inputs, &targets, None).unwrap();
+    let c = Container::open(&path).unwrap();
+    let m = b.run("read_input_shard 8 planes of 32^3", || {
+        std::hint::black_box(c.read_input_shard(0, 8, 8).unwrap());
+    });
+    println!("   -> {:.2} GB/s", (8 * 32 * 32 * 4) as f64 / m.median / 1e9);
+    std::fs::remove_file(&path).ok();
+}
+
+/// PJRT dispatch overhead: a minimal executable round-trip bounds the
+/// per-layer-call tax of the hybrid engine.
+fn pjrt_overhead(b: &mut Bench) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built; skipping PJRT overhead bench)");
+        return;
+    }
+    banner("PJRT call overhead (runtime service round-trip)");
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let man = rt.manifest();
+    let m = man.model("cf-nano").unwrap();
+    let plan = &m.hybrid[&1];
+    if let hydra3d::runtime::LayerDesc::Conv { fwd, .. } = &plan[0] {
+        let e = man.entry(fwd.as_ref().unwrap()).unwrap().clone();
+        let x = Tensor::zeros(&e.inputs[0]);
+        let w = Tensor::zeros(&e.inputs[1]);
+        let name = fwd.clone().unwrap();
+        rt.warm(&name).unwrap();
+        b.run("conv_fwd cf-nano shard (incl. marshaling)", || {
+            std::hint::black_box(rt.call(&name, vec![x.clone(), w.clone()]).unwrap());
+        });
+    }
+}

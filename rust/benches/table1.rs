@@ -1,0 +1,12 @@
+//! `cargo bench --bench table1` — regenerate paper Table I.
+use hydra3d::coordinator::table1;
+use hydra3d::util::bench::{banner, Bench};
+
+fn main() {
+    banner("Table I — CosmoFlow architecture analytics");
+    print!("{}", table1());
+    let mut b = Bench::quick();
+    b.run("table1 generation", || {
+        std::hint::black_box(table1());
+    });
+}

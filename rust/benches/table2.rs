@@ -1,0 +1,15 @@
+//! `cargo bench --bench table2` — regenerate paper Table II (achieved conv
+//! performance vs cuDNN kernel peak).
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator::table2;
+use hydra3d::util::bench::{banner, Bench};
+
+fn main() {
+    let cl = ClusterConfig::default();
+    banner("Table II — distributed conv vs kernel-only peak");
+    print!("{}", table2(&cl));
+    let mut b = Bench::quick();
+    b.run("table2 generation", || {
+        std::hint::black_box(table2(&cl));
+    });
+}

@@ -1,0 +1,216 @@
+//! Halo exchange for depth-partitioned activations (§III-A of the paper).
+//!
+//! Forward: each rank contributes its boundary planes to its neighbours and
+//! receives theirs, building a halo-padded shard the conv executable can
+//! consume with a depth-`valid` convolution. Boundary ranks get zero planes
+//! on the outer side (the global "same" padding).
+//!
+//! Backward: `conv_bwd_data` produces gradients for the *padded* input; the
+//! halo-plane gradients belong to the neighbours' interiors, so they are
+//! sent back and **accumulated** (transpose of the forward exchange).
+//!
+//! Pack/unpack are contiguous-slab copies (see [`crate::tensor`]); the
+//! paper's equivalent is its suite of optimized CUDA packing kernels.
+
+use super::Endpoint;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Forward halo exchange: returns the shard padded with `halo` planes on
+/// each depth side (neighbour data or zeros at the global boundary).
+///
+/// `up` is the rank holding the previous depth shard, `down` the next.
+/// All ranks of a sample group must call this collectively.
+pub fn exchange_forward(
+    ep: &Endpoint,
+    shard: &Tensor,
+    halo: usize,
+    up: Option<usize>,
+    down: Option<usize>,
+) -> Result<Tensor> {
+    if halo == 0 || (up.is_none() && down.is_none()) {
+        return Ok(shard.pad_d(halo, halo));
+    }
+    let d = shard.shape()[2];
+    assert!(d >= halo, "shard depth {d} < halo {halo} (over-decomposed)");
+    // post sends first (non-blocking), then receive — no deadlock with
+    // buffered channels.
+    if let Some(u) = up {
+        ep.send(u, shard.slice_d(0, halo).into_vec());
+    }
+    if let Some(dn) = down {
+        ep.send(dn, shard.slice_d(d - halo, halo).into_vec());
+    }
+    let mut padded = shard.pad_d(halo, halo);
+    let (n, c, _, h, w) = dims5(shard);
+    if let Some(u) = up {
+        let buf = ep.recv(u)?;
+        padded.set_slice_d(0, &Tensor::from_vec(&[n, c, halo, h, w], buf));
+    }
+    if let Some(dn) = down {
+        let buf = ep.recv(dn)?;
+        padded.set_slice_d(halo + d, &Tensor::from_vec(&[n, c, halo, h, w], buf));
+    }
+    Ok(padded)
+}
+
+/// Backward (transpose) halo exchange: crop the padded-input gradient to
+/// the shard and accumulate the halo-plane gradients received from the
+/// neighbours into the shard's boundary planes.
+pub fn exchange_backward(
+    ep: &Endpoint,
+    dx_padded: &Tensor,
+    halo: usize,
+    up: Option<usize>,
+    down: Option<usize>,
+) -> Result<Tensor> {
+    if halo == 0 || (up.is_none() && down.is_none()) {
+        return Ok(dx_padded.crop_d(halo, halo));
+    }
+    let dp = dx_padded.shape()[2];
+    let d = dp - 2 * halo;
+    // grads that live in my padding belong to the neighbours' interiors
+    if let Some(u) = up {
+        ep.send(u, dx_padded.slice_d(0, halo).into_vec());
+    }
+    if let Some(dn) = down {
+        ep.send(dn, dx_padded.slice_d(halo + d, halo).into_vec());
+    }
+    let mut dx = dx_padded.crop_d(halo, halo);
+    let (n, c, _, h, w) = dims5(&dx);
+    // … and the neighbours' padding grads accumulate into my boundary.
+    if let Some(u) = up {
+        // up neighbour's *bottom* padding overlaps my first `halo` planes
+        let buf = ep.recv(u)?;
+        dx.add_slice_d(0, &Tensor::from_vec(&[n, c, halo, h, w], buf));
+    }
+    if let Some(dn) = down {
+        let buf = ep.recv(dn)?;
+        dx.add_slice_d(d - halo, &Tensor::from_vec(&[n, c, halo, h, w], buf));
+    }
+    Ok(dx)
+}
+
+fn dims5(t: &Tensor) -> (usize, usize, usize, usize, usize) {
+    let s = t.shape();
+    (s[0], s[1], s[2], s[3], s[4])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::world;
+    use crate::partition::{DepthPartition, Topology};
+    use crate::util::rng::Pcg;
+    use std::thread;
+
+    /// Distributed forward exchange over W ranks == local padding of the
+    /// gathered tensor.
+    #[test]
+    fn forward_reassembles_global_padding() {
+        for ways in [2usize, 4] {
+            let d = 8;
+            let part = DepthPartition::new_even(d, ways).unwrap();
+            let topo = Topology::new(1, ways);
+            let mut rng = Pcg::new(1, 0);
+            let mut data = vec![0.0f32; 2 * 3 * d * 2 * 2];
+            rng.fill_normal(&mut data, 1.0);
+            let global = Tensor::from_vec(&[2, 3, d, 2, 2], data);
+            let global_padded = global.pad_d(1, 1);
+
+            let eps = world(ways);
+            let padded: Vec<Tensor> = thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, ep)| {
+                        let shard = global.slice_d(part.shard_start(r), part.shard_len());
+                        let (up, down) = (topo.up(r), topo.down(r));
+                        s.spawn(move || {
+                            exchange_forward(&ep, &shard, 1, up, down).unwrap()
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (r, p) in padded.iter().enumerate() {
+                let want = global_padded.slice_d(part.shard_start(r), part.shard_len() + 2);
+                assert_eq!(p, &want, "ways={ways} rank={r}");
+            }
+        }
+    }
+
+    /// Backward exchange is the exact transpose of forward:
+    /// <forward(x), y_padded> == <x, backward(y_padded)> for all x, y.
+    #[test]
+    fn backward_is_adjoint_of_forward() {
+        let ways = 4;
+        let d = 8;
+        let part = DepthPartition::new_even(d, ways).unwrap();
+        let topo = Topology::new(1, ways);
+        let mut rng = Pcg::new(2, 0);
+        let shape = [1usize, 2, d, 2, 2];
+        let n_elem: usize = shape.iter().product();
+        let mut xv = vec![0.0f32; n_elem];
+        rng.fill_normal(&mut xv, 1.0);
+        let x = Tensor::from_vec(&shape, xv);
+        // y lives in padded space per shard
+        let mut ys: Vec<Tensor> = Vec::new();
+        for _ in 0..ways {
+            let mut yv = vec![0.0f32; 1 * 2 * (d / ways + 2) * 2 * 2];
+            rng.fill_normal(&mut yv, 1.0);
+            ys.push(Tensor::from_vec(&[1, 2, d / ways + 2, 2, 2], yv));
+        }
+
+        let eps = world(ways);
+        let (fwd, bwd): (Vec<Tensor>, Vec<Tensor>) = thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(r, ep)| {
+                    let shard = x.slice_d(part.shard_start(r), part.shard_len());
+                    let y = ys[r].clone();
+                    let (up, down) = (topo.up(r), topo.down(r));
+                    s.spawn(move || {
+                        let f = exchange_forward(&ep, &shard, 1, up, down).unwrap();
+                        let b = exchange_backward(&ep, &y, 1, up, down).unwrap();
+                        (f, b)
+                    })
+                })
+                .collect();
+            let pairs: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+            pairs.into_iter().unzip()
+        });
+
+        let lhs: f64 = fwd
+            .iter()
+            .zip(&ys)
+            .map(|(f, y)| {
+                f.data().iter().zip(y.data()).map(|(a, b)| (a * b) as f64).sum::<f64>()
+            })
+            .sum();
+        let rhs: f64 = bwd
+            .iter()
+            .enumerate()
+            .map(|(r, b)| {
+                let shard = x.slice_d(part.shard_start(r), part.shard_len());
+                b.data()
+                    .iter()
+                    .zip(shard.data())
+                    .map(|(a, c)| (a * c) as f64)
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3, "adjoint mismatch: {lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn single_rank_is_zero_padding() {
+        let x = Tensor::from_vec(&[1, 1, 2, 1, 1], vec![1.0, 2.0]);
+        let eps = world(1);
+        let p = exchange_forward(&eps[0], &x, 1, None, None).unwrap();
+        assert_eq!(p.data(), &[0.0, 1.0, 2.0, 0.0]);
+        let dx = exchange_backward(&eps[0], &p, 1, None, None).unwrap();
+        assert_eq!(dx.data(), &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,448 @@
+//! Simulated multi-rank communicator: ranks are threads, links are
+//! channels.
+//!
+//! The functional engine runs every GPU of the paper's cluster as a thread
+//! holding an [`Endpoint`]. Message passing is `std::sync::mpsc` with
+//! unbounded buffering, so sends never block and the engine's
+//! send-then-receive halo protocol cannot deadlock; numerics are exactly
+//! what a real MPI/NCCL deployment computes (same reduction orders), which
+//! is what the hybrid-vs-single-rank equivalence tests validate.
+//!
+//! Collectives are implemented *over* point-to-point — ring allreduce
+//! (reduce-scatter + allgather, the NCCL algorithm the paper leans on) and
+//! recursive doubling — so their communication structure can be counted,
+//! benchmarked (`benches/micro.rs`) and fed to the §III-C performance
+//! model.
+
+pub mod halo;
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Global communication counters (shared by all endpoints).
+#[derive(Default, Debug)]
+pub struct Counters {
+    pub bytes: AtomicU64,
+    pub messages: AtomicU64,
+    pub allreduces: AtomicU64,
+}
+
+impl Counters {
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+}
+
+type Msg = Vec<f32>;
+
+/// One rank's endpoint into the world.
+pub struct Endpoint {
+    pub rank: usize,
+    pub world: usize,
+    txs: Vec<Sender<Msg>>,
+    rxs: Vec<Receiver<Msg>>,
+    pub counters: Arc<Counters>,
+}
+
+/// Build a fully-connected world of `n` endpoints.
+pub fn world(n: usize) -> Vec<Endpoint> {
+    let counters = Arc::new(Counters::default());
+    // txs[src][dst], rxs[dst][src]
+    let mut txs: Vec<Vec<Option<Sender<Msg>>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+    let mut rxs: Vec<Vec<Option<Receiver<Msg>>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+    for src in 0..n {
+        for dst in 0..n {
+            let (tx, rx) = channel();
+            txs[src][dst] = Some(tx);
+            rxs[dst][src] = Some(rx);
+        }
+    }
+    txs.into_iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(rank, (tx_row, rx_row))| Endpoint {
+            rank,
+            world: n,
+            txs: tx_row.into_iter().map(Option::unwrap).collect(),
+            rxs: rx_row.into_iter().map(Option::unwrap).collect(),
+            counters: counters.clone(),
+        })
+        .collect()
+}
+
+impl Endpoint {
+    /// Asynchronous send (never blocks — unbounded channel).
+    pub fn send(&self, to: usize, data: Vec<f32>) {
+        self.counters
+            .bytes
+            .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.txs[to].send(data).expect("peer endpoint dropped");
+    }
+
+    /// Blocking receive of the next message from `from` (program order).
+    pub fn recv(&self, from: usize) -> Result<Vec<f32>> {
+        self.rxs[from]
+            .recv()
+            .map_err(|_| anyhow!("rank {}: peer {from} disconnected", self.rank))
+    }
+
+    fn me_in(&self, group: &[usize]) -> usize {
+        group
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("rank not in group")
+    }
+
+    /// In-place sum-allreduce over `group` using the ring algorithm
+    /// (reduce-scatter then allgather), 2(g-1) steps. Works for any group
+    /// size; every member must call with an equal-length buffer.
+    ///
+    /// Reduction order is identical on every rank (chunk r is always
+    /// accumulated in ring order starting at rank r+1), so all members end
+    /// with bit-identical results — required for the equivalence tests.
+    pub fn allreduce_sum(&self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+        let g = group.len();
+        if g == 1 {
+            return Ok(());
+        }
+        self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
+        let me = self.me_in(group);
+        let next = group[(me + 1) % g];
+        let prev = group[(me + g - 1) % g];
+        let bounds: Vec<(usize, usize)> = (0..g).map(|i| chunk_bounds(buf.len(), g, i)).collect();
+
+        // reduce-scatter: after step s, rank owns the full sum of chunk
+        // (me+1) after g-1 steps.
+        for s in 0..g - 1 {
+            let send_c = (me + g - s) % g;
+            let recv_c = (me + g - s - 1) % g;
+            let (lo, hi) = bounds[send_c];
+            self.send(next, buf[lo..hi].to_vec());
+            let incoming = self.recv(prev)?;
+            let (lo, hi) = bounds[recv_c];
+            for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+        }
+        // allgather the reduced chunks around the ring.
+        for s in 0..g - 1 {
+            let send_c = (me + 1 + g - s) % g;
+            let recv_c = (me + g - s) % g;
+            let (lo, hi) = bounds[send_c];
+            self.send(next, buf[lo..hi].to_vec());
+            let incoming = self.recv(prev)?;
+            let (lo, hi) = bounds[recv_c];
+            buf[lo..hi].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    /// Recursive-doubling allreduce (power-of-two groups): log2(g) steps of
+    /// pairwise exchange+add. Higher bandwidth cost than ring for large
+    /// buffers but lower latency for small ones — the engine uses it for
+    /// the per-channel BN statistics.
+    pub fn allreduce_sum_rd(&self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+        let g = group.len();
+        if g == 1 {
+            return Ok(());
+        }
+        assert!(g.is_power_of_two(), "recursive doubling needs 2^k ranks");
+        self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
+        let me = self.me_in(group);
+        let mut dist = 1;
+        while dist < g {
+            let peer = group[me ^ dist];
+            self.send(peer, buf.to_vec());
+            let incoming = self.recv(peer)?;
+            for (dst, src) in buf.iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+            dist <<= 1;
+        }
+        Ok(())
+    }
+
+    /// Gather equal-length contributions from all of `group` onto every
+    /// member (flat exchange; used for small control data).
+    pub fn allgather(&self, mine: &[f32], group: &[usize]) -> Result<Vec<Vec<f32>>> {
+        let me = self.me_in(group);
+        for (i, &r) in group.iter().enumerate() {
+            if i != me {
+                self.send(r, mine.to_vec());
+            }
+        }
+        let mut out = Vec::with_capacity(group.len());
+        for (i, &r) in group.iter().enumerate() {
+            if i == me {
+                out.push(mine.to_vec());
+            } else {
+                out.push(self.recv(r)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gather variable-length f32 buffers to `group[0]`; returns Some(parts)
+    /// on the root (in group order), None elsewhere.
+    pub fn gather_to_root(&self, mine: &[f32], group: &[usize])
+                          -> Result<Option<Vec<Vec<f32>>>> {
+        let me = self.me_in(group);
+        if me == 0 {
+            let mut parts = Vec::with_capacity(group.len());
+            parts.push(mine.to_vec());
+            for &r in &group[1..] {
+                parts.push(self.recv(r)?);
+            }
+            Ok(Some(parts))
+        } else {
+            self.send(group[0], mine.to_vec());
+            Ok(None)
+        }
+    }
+
+    /// Broadcast from `group[0]` to the rest; non-roots pass an empty vec.
+    pub fn broadcast(&self, mine: Vec<f32>, group: &[usize]) -> Result<Vec<f32>> {
+        let me = self.me_in(group);
+        if me == 0 {
+            for &r in &group[1..] {
+                self.send(r, mine.clone());
+            }
+            Ok(mine)
+        } else {
+            self.recv(group[0])
+        }
+    }
+
+    /// Synchronization barrier over `group`.
+    pub fn barrier(&self, group: &[usize]) -> Result<()> {
+        self.gather_to_root(&[], group)?;
+        self.broadcast(vec![], group)?;
+        Ok(())
+    }
+}
+
+/// Even-ish chunking of `len` into `parts` (first `len % parts` chunks get
+/// one extra element).
+fn chunk_bounds(len: usize, parts: usize, idx: usize) -> (usize, usize) {
+    let base = len / parts;
+    let extra = len % parts;
+    let lo = idx * base + idx.min(extra);
+    let hi = lo + base + usize::from(idx < extra);
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::thread;
+
+    /// Endpoints are *moved into* their threads (Receiver is Send, not
+    /// Sync) — the same ownership pattern the engine uses.
+    fn run_world<F>(n: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(&Endpoint) -> Vec<f32> + Send + Sync + Copy,
+    {
+        let eps = world(n);
+        thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|ep| s.spawn(move || f(&ep)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn p2p_ordering() {
+        let out = run_world(2, |ep| {
+            if ep.rank == 0 {
+                ep.send(1, vec![1.0]);
+                ep.send(1, vec![2.0]);
+                vec![]
+            } else {
+                let a = ep.recv(0).unwrap();
+                let b = ep.recv(0).unwrap();
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ring_allreduce_matches_sum() {
+        for n in [2usize, 3, 4, 5, 8] {
+            let out = run_world(n, move |ep| {
+                let group: Vec<usize> = (0..ep.world).collect();
+                let mut buf: Vec<f32> =
+                    (0..10).map(|i| (ep.rank * 10 + i) as f32).collect();
+                ep.allreduce_sum(&mut buf, &group).unwrap();
+                buf
+            });
+            let expect: Vec<f32> = (0..10)
+                .map(|i| (0..n).map(|r| (r * 10 + i) as f32).sum())
+                .collect();
+            for r in 0..n {
+                assert_eq!(out[r], expect, "rank {r} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_bitwise_identical_across_ranks() {
+        // adversarial floats: results must still be *identical* on all ranks
+        let out = run_world(4, |ep| {
+            let group: Vec<usize> = (0..4).collect();
+            let mut buf: Vec<f32> = (0..33)
+                .map(|i| ((ep.rank + 1) as f32 * 1e-3).powi((i % 7) as i32 + 1))
+                .collect();
+            ep.allreduce_sum(&mut buf, &group).unwrap();
+            buf
+        });
+        for r in 1..4 {
+            assert_eq!(out[0], out[r]);
+        }
+    }
+
+    #[test]
+    fn rd_allreduce_matches_ring() {
+        let out = run_world(4, |ep| {
+            let group: Vec<usize> = (0..4).collect();
+            let mut a: Vec<f32> = (0..8).map(|i| (ep.rank + i) as f32).collect();
+            let mut b = a.clone();
+            ep.allreduce_sum(&mut a, &group).unwrap();
+            ep.allreduce_sum_rd(&mut b, &group).unwrap();
+            a.extend(b);
+            a
+        });
+        for o in &out {
+            let (a, b) = o.split_at(8);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn subgroup_allreduce() {
+        // two disjoint groups reduce independently
+        let out = run_world(4, |ep| {
+            let group: Vec<usize> = if ep.rank < 2 { vec![0, 1] } else { vec![2, 3] };
+            let mut buf = vec![ep.rank as f32];
+            ep.allreduce_sum(&mut buf, &group).unwrap();
+            buf
+        });
+        assert_eq!(out, vec![vec![1.0], vec![1.0], vec![5.0], vec![5.0]]);
+    }
+
+    #[test]
+    fn gather_broadcast_barrier() {
+        let out = run_world(3, |ep| {
+            let group: Vec<usize> = (0..3).collect();
+            let gathered = ep.gather_to_root(&[ep.rank as f32], &group).unwrap();
+            let val = if let Some(parts) = gathered {
+                parts.iter().map(|p| p[0]).sum::<f32>()
+            } else {
+                0.0
+            };
+            let out = ep.broadcast(vec![val], &group).unwrap();
+            ep.barrier(&group).unwrap();
+            out
+        });
+        assert_eq!(out, vec![vec![3.0]; 3]);
+    }
+
+    #[test]
+    fn allgather_order() {
+        let out = run_world(3, |ep| {
+            let group = [2usize, 0, 1]; // deliberately permuted group order
+            let parts = ep.allgather(&[ep.rank as f32 * 2.0], &group).unwrap();
+            parts.into_iter().flatten().collect()
+        });
+        for o in out {
+            assert_eq!(o, vec![4.0, 0.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut eps = world(2);
+        let c = eps[0].counters.clone();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        thread::scope(|s| {
+            s.spawn(move || e0.send(1, vec![0.0; 100]));
+            s.spawn(move || {
+                e1.recv(0).unwrap();
+            });
+        });
+        assert_eq!(c.bytes(), 400);
+        assert_eq!(c.messages(), 1);
+    }
+
+    #[test]
+    fn prop_chunk_bounds_cover() {
+        prop::check("chunk-cover", 200, |g| {
+            let len = g.usize_in(0, 200);
+            let parts = g.usize_in(1, 17);
+            let mut end = 0;
+            for i in 0..parts {
+                let (lo, hi) = chunk_bounds(len, parts, i);
+                if lo != end || hi < lo {
+                    return Err(format!("gap at chunk {i}: ({lo},{hi}) end={end}"));
+                }
+                end = hi;
+            }
+            if end != len {
+                return Err(format!("cover ended at {end} != {len}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ring_allreduce_random_groups() {
+        prop::check("ring-random", 12, |g| {
+            let n = g.usize_in(2, 6);
+            let len = g.usize_in(1, 40);
+            let vals: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_f32(len, 1.0)).collect();
+            let expect: Vec<f32> = (0..len)
+                .map(|i| vals.iter().map(|v| v[i]).sum())
+                .collect();
+            let eps = world(n);
+            let out: Vec<Vec<f32>> = thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .into_iter()
+                    .zip(&vals)
+                    .map(|(ep, v)| {
+                        let group: Vec<usize> = (0..n).collect();
+                        let mut buf = v.clone();
+                        s.spawn(move || {
+                            ep.allreduce_sum(&mut buf, &group).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (r, o) in out.iter().enumerate() {
+                for i in 0..len {
+                    if (o[i] - expect[i]).abs() > 1e-4 * expect[i].abs().max(1.0) {
+                        return Err(format!("rank {r} elt {i}: {} != {}", o[i],
+                                           expect[i]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,261 @@
+//! Experiment configuration: typed configs loadable from TOML or JSON files
+//! with CLI overrides.
+//!
+//! Every entry point (the `hydra3d` binary, examples, benches) builds one
+//! [`ExperimentConfig`]; `configs/` in the repo root holds the checked-in
+//! experiment files used by EXPERIMENTS.md.
+
+use crate::util::json::Json;
+use crate::util::toml;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Training hyper-parameters (paper §IV: Adam, linear LR decay to 0.01x,
+/// dropout keep 0.8, MSE loss).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub ways: usize,
+    pub groups: usize,
+    pub batch_global: usize,
+    pub steps: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub lr_decay_to: f64,
+    pub seed: u64,
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "cf16".into(),
+            ways: 1,
+            groups: 1,
+            batch_global: 4,
+            steps: 50,
+            epochs: 0, // 0 = use steps
+            lr: 1e-3,
+            lr_decay_to: 0.01, // paper: decays to 0.01x of initial
+            seed: 0xC05,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            adam_eps: 1e-8,
+            log_every: 10,
+        }
+    }
+}
+
+/// Dataset synthesis parameters (GRF universes / CT volumes; DESIGN.md §4).
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub size: usize,
+    pub seed: u64,
+    /// split each cube into (size/sub)^3 sub-volumes (paper's 128^3 regime)
+    pub subvolume: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig { n_train: 64, n_val: 8, n_test: 8, size: 16, seed: 42,
+                     subvolume: 0 }
+    }
+}
+
+/// The simulated cluster (defaults = Lassen, §V-A).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub gpus_per_node: usize,
+    /// peak dense f32 TFlop/s per GPU (V100: 15.7)
+    pub gpu_tflops: f64,
+    /// intra-socket NVLink2 bandwidth, GB/s per direction
+    pub nvlink_gbps: f64,
+    /// inter-node EDR InfiniBand (dual-rail), GB/s
+    pub ib_gbps: f64,
+    pub nvlink_latency_us: f64,
+    pub ib_latency_us: f64,
+    /// parallel file system aggregate bandwidth, GB/s (paper: 240 GB/s)
+    pub pfs_gbps: f64,
+    /// per-node share cap of PFS bandwidth, GB/s
+    pub pfs_per_node_gbps: f64,
+    pub gpu_mem_gib: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            gpus_per_node: 4,
+            gpu_tflops: 15.7,
+            nvlink_gbps: 60.0,
+            ib_gbps: 21.0,
+            nvlink_latency_us: 2.0,
+            ib_latency_us: 4.0,
+            pfs_gbps: 240.0,
+            pfs_per_node_gbps: 4.0,
+            gpu_mem_gib: 16.0,
+        }
+    }
+}
+
+/// Top-level experiment config.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub train: TrainConfig,
+    pub data: DataConfig,
+    pub cluster: ClusterConfig,
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    pub fn artifacts(&self) -> String {
+        if self.artifacts_dir.is_empty() {
+            std::env::var("HYDRA3D_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+        } else {
+            self.artifacts_dir.clone()
+        }
+    }
+
+    /// Load from a `.toml` or `.json` file.
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let v = match path.extension().and_then(|e| e.to_str()) {
+            Some("toml") => toml::parse_file(path)?,
+            Some("json") => Json::parse_file(path)?,
+            other => bail!("unknown config extension {other:?}"),
+        };
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(t) = v.get("train") {
+            let d = &mut cfg.train;
+            set_str(t, "model", &mut d.model)?;
+            set_usize(t, "ways", &mut d.ways)?;
+            set_usize(t, "groups", &mut d.groups)?;
+            set_usize(t, "batch_global", &mut d.batch_global)?;
+            set_usize(t, "steps", &mut d.steps)?;
+            set_usize(t, "epochs", &mut d.epochs)?;
+            set_f64(t, "lr", &mut d.lr)?;
+            set_f64(t, "lr_decay_to", &mut d.lr_decay_to)?;
+            set_u64(t, "seed", &mut d.seed)?;
+            set_usize(t, "log_every", &mut d.log_every)?;
+        }
+        if let Some(t) = v.get("data") {
+            let d = &mut cfg.data;
+            set_usize(t, "n_train", &mut d.n_train)?;
+            set_usize(t, "n_val", &mut d.n_val)?;
+            set_usize(t, "n_test", &mut d.n_test)?;
+            set_usize(t, "size", &mut d.size)?;
+            set_u64(t, "seed", &mut d.seed)?;
+            set_usize(t, "subvolume", &mut d.subvolume)?;
+        }
+        if let Some(t) = v.get("cluster") {
+            let d = &mut cfg.cluster;
+            set_usize(t, "gpus_per_node", &mut d.gpus_per_node)?;
+            set_f64(t, "gpu_tflops", &mut d.gpu_tflops)?;
+            set_f64(t, "nvlink_gbps", &mut d.nvlink_gbps)?;
+            set_f64(t, "ib_gbps", &mut d.ib_gbps)?;
+            set_f64(t, "nvlink_latency_us", &mut d.nvlink_latency_us)?;
+            set_f64(t, "ib_latency_us", &mut d.ib_latency_us)?;
+            set_f64(t, "pfs_gbps", &mut d.pfs_gbps)?;
+            set_f64(t, "pfs_per_node_gbps", &mut d.pfs_per_node_gbps)?;
+            set_f64(t, "gpu_mem_gib", &mut d.gpu_mem_gib)?;
+        }
+        if let Some(a) = v.get("artifacts_dir") {
+            cfg.artifacts_dir = a.as_str()?.to_string();
+        }
+        Ok(cfg)
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.train;
+        if t.batch_global % t.groups != 0 {
+            bail!("global batch {} not divisible by {} groups", t.batch_global,
+                  t.groups);
+        }
+        if t.ways == 0 || t.groups == 0 {
+            bail!("ways/groups must be positive");
+        }
+        Ok(())
+    }
+}
+
+fn set_usize(t: &Json, k: &str, dst: &mut usize) -> Result<()> {
+    if let Some(v) = t.get(k) {
+        *dst = v.as_usize().map_err(|e| anyhow!("{k}: {e}"))?;
+    }
+    Ok(())
+}
+fn set_u64(t: &Json, k: &str, dst: &mut u64) -> Result<()> {
+    if let Some(v) = t.get(k) {
+        *dst = v.as_f64().map_err(|e| anyhow!("{k}: {e}"))? as u64;
+    }
+    Ok(())
+}
+fn set_f64(t: &Json, k: &str, dst: &mut f64) -> Result<()> {
+    if let Some(v) = t.get(k) {
+        *dst = v.as_f64().map_err(|e| anyhow!("{k}: {e}"))?;
+    }
+    Ok(())
+}
+fn set_str(t: &Json, k: &str, dst: &mut String) -> Result<()> {
+    if let Some(v) = t.get(k) {
+        *dst = v.as_str().map_err(|e| anyhow!("{k}: {e}"))?.to_string();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_lassen() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.gpus_per_node, 4);
+        assert_eq!(c.pfs_gbps, 240.0);
+        assert_eq!(c.gpu_mem_gib, 16.0);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let doc = r#"
+[train]
+model = "cf32"
+ways = 4
+batch_global = 16
+lr = 2e-3
+
+[data]
+size = 32
+n_train = 128
+
+[cluster]
+nvlink_gbps = 50.0
+"#;
+        let v = toml::parse(doc).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.train.model, "cf32");
+        assert_eq!(cfg.train.ways, 4);
+        assert_eq!(cfg.train.lr, 2e-3);
+        assert_eq!(cfg.data.size, 32);
+        assert_eq!(cfg.cluster.nvlink_gbps, 50.0);
+        assert_eq!(cfg.cluster.ib_gbps, 21.0); // untouched default
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_batch() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.groups = 3;
+        cfg.train.batch_global = 4;
+        assert!(cfg.validate().is_err());
+    }
+}

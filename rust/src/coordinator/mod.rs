@@ -1,0 +1,223 @@
+//! The experiment coordinator: regenerates every table and figure of the
+//! paper's evaluation (§V) from the analytic models, the §III-C
+//! performance model, the cluster simulator and the I/O pipeline model.
+//! Shared by the `hydra3d` CLI and the `cargo bench` harnesses.
+
+use crate::config::ClusterConfig;
+use crate::iosim::pipeline::IoStrategy;
+use crate::models::{cosmoflow_paper, unet3d_paper};
+use crate::partition::Grid4;
+use crate::perfmodel::scaling::{speedup, strong_scaling, weak_scaling};
+use crate::perfmodel::PerfModel;
+use crate::sim::simulate_iteration;
+
+/// Table I: CosmoFlow architecture + analytic cost columns.
+pub fn table1() -> String {
+    let mut out = String::from(
+        "Table I: CosmoFlow network analytics (paper values in parentheses)\n\
+         ------------------------------------------------------------------\n\
+         W_i    conv GFlop (paper)   fwd GFlop (paper)   mem GiB (paper)   params\n",
+    );
+    let paper = [(128usize, 55.55, 18.52, 0.824), (256, 443.8, 147.9, 6.59),
+                 (512, 3550.0, 1183.0, 52.7)];
+    for (wi, pt, pf, pm) in paper {
+        let m = cosmoflow_paper(wi, false);
+        out.push_str(&format!(
+            "{:<6} {:>8.2} ({:>7.2})   {:>8.2} ({:>6.1})   {:>6.2} ({:>5.3})   {:.2}M\n",
+            wi,
+            m.conv_total_gflops(),
+            pt,
+            m.conv_fwd_gflops(),
+            pf,
+            m.activation_gib(),
+            pm,
+            m.param_count() as f64 / 1e6,
+        ));
+    }
+    out.push_str(&format!(
+        "min GPUs/sample @16GiB: 512^3 = {} (paper: 4), +BN = {} (paper: 8)\n",
+        cosmoflow_paper(512, false).min_gpus_per_sample(16.0, false),
+        cosmoflow_paper(512, false).min_gpus_per_sample(16.0, true),
+    ));
+    out
+}
+
+/// Table II: achieved conv performance relative to the cuDNN kernel peak.
+pub fn table2(cluster: &ClusterConfig) -> String {
+    let m = cosmoflow_paper(512, false);
+    let pm = PerfModel::new(cluster);
+    let mut out = String::from(
+        "Table II: distributed conv vs kernel-only peak, 512^3, N=64\n\
+         Depth    Layer   Rel [%]   (paper)\n",
+    );
+    for (ways, layer, paper) in [
+        (8usize, None, 95.6),
+        (32, None, 82.4),
+        (8, Some("conv1"), 93.8),
+        (32, Some("conv1"), 64.7),
+    ] {
+        let rel = pm.conv_rel_to_peak(&m, Grid4::depth_only(64, ways), 64, layer);
+        out.push_str(&format!(
+            "{:>2}-way   {:<6}  {:>6.1}    ({:.1})\n",
+            ways,
+            layer.unwrap_or("All"),
+            rel * 100.0,
+            paper,
+        ));
+    }
+    out
+}
+
+fn render_points(points: &[crate::perfmodel::scaling::ScalePoint], label: &str)
+                 -> String {
+    let mut out = format!("{label}\n  GPUs   ways     N   iter[ms]  model[ms]  samples/s  io[ms]\n");
+    for p in points {
+        out.push_str(&format!(
+            "{:>6} {:>6} {:>5}   {:>8.1}   {:>8.1}   {:>8.2}  {:>6.1}{}\n",
+            p.gpus,
+            p.ways,
+            p.n,
+            p.iter_s * 1e3,
+            p.model_iter_s * 1e3,
+            p.samples_per_s,
+            p.io_s * 1e3,
+            if p.feasible { "" } else { "  (OOM)" },
+        ));
+    }
+    out.push_str(&format!("  speedup (last/first): {:.2}x\n", speedup(points)));
+    out
+}
+
+/// Fig. 4: strong scaling of CosmoFlow 512^3 across mini-batch sizes.
+pub fn fig4(cluster: &ClusterConfig) -> String {
+    let m = cosmoflow_paper(512, false);
+    let mut out = String::from(
+        "Fig. 4: CosmoFlow 512^3 strong scaling (spatially-parallel I/O)\n",
+    );
+    for n in [1usize, 2, 4, 16, 64] {
+        let ways: Vec<usize> = [8usize, 16, 32, 64]
+            .iter()
+            .copied()
+            .filter(|w| n * w <= 2048)
+            .collect();
+        let pts = strong_scaling(&m, cluster, n, &ways, IoStrategy::SpatialParallel);
+        out.push_str(&render_points(&pts, &format!("-- N = {n}")));
+    }
+    out.push_str("paper headlines: 1.98x @ 512/128 GPUs (N=16), 1.77x @ 2048/512 (N=64)\n");
+    out
+}
+
+/// Fig. 5: the same sweep without spatially-parallel I/O.
+pub fn fig5(cluster: &ClusterConfig) -> String {
+    let m = cosmoflow_paper(512, false);
+    let mut out = String::from(
+        "Fig. 5: CosmoFlow 512^3 strong scaling WITHOUT spatially-parallel I/O\n\
+         (distributed caching only; single reader per sample + scatter)\n",
+    );
+    let pts = strong_scaling(&m, cluster, 64, &[8, 16, 32],
+                             IoStrategy::SampleParallelCached);
+    out.push_str(&render_points(&pts, "-- N = 64, sample-parallel I/O"));
+    let good = strong_scaling(&m, cluster, 64, &[8, 16, 32],
+                              IoStrategy::SpatialParallel);
+    out.push_str(&render_points(&good, "-- N = 64, spatially-parallel I/O (ref)"));
+    out
+}
+
+/// Fig. 6: single-GPU execution timelines, 8 vs 16 GPUs/sample, N=4.
+pub fn fig6(cluster: &ClusterConfig, emit_trace: Option<&std::path::Path>) -> String {
+    let m = cosmoflow_paper(512, false);
+    let mut out = String::from("Fig. 6: execution timelines (512^3, N=4)\n");
+    for ways in [8usize, 16] {
+        let t = simulate_iteration(&m, cluster, Grid4::depth_only(4, ways), 4);
+        out.push_str(&format!(
+            "\n-- {} GPUs/sample ({} total), iteration {:.1} ms, main occupancy {:.1}%\n{}",
+            ways,
+            4 * ways,
+            t.iter_s * 1e3,
+            t.main_occupancy() * 100.0,
+            t.ascii(96),
+        ));
+        if let Some(dir) = emit_trace {
+            let path = dir.join(format!("fig6_timeline_{ways}way.trace.json"));
+            let _ = std::fs::write(&path, t.chrome_trace());
+            out.push_str(&format!("   chrome trace -> {}\n", path.display()));
+        }
+    }
+    let s = simulate_iteration(&m, cluster, Grid4::depth_only(4, 8), 4).iter_s
+        / simulate_iteration(&m, cluster, Grid4::depth_only(4, 16), 4).iter_s;
+    out.push_str(&format!("\n8->16 way speedup: {s:.2}x (paper: ~1.66x)\n"));
+    out
+}
+
+/// Fig. 7: 3D U-Net 256^3 strong scaling.
+pub fn fig7(cluster: &ClusterConfig) -> String {
+    let m = unet3d_paper(256, 3);
+    let mut out = String::from("Fig. 7: 3D U-Net 256^3 strong scaling\n");
+    for n in [1usize, 4, 16] {
+        let ways: Vec<usize> = [16usize, 32, 64]
+            .iter()
+            .copied()
+            .filter(|w| n * w <= 2048)
+            .collect();
+        let pts = strong_scaling(&m, cluster, n, &ways, IoStrategy::SpatialParallel);
+        out.push_str(&render_points(&pts, &format!("-- N = {n}")));
+    }
+    out.push_str("paper headline: 1.42x @ 512/256 GPUs (N=16)\n");
+    out
+}
+
+/// Fig. 8: weak scaling of CosmoFlow (128^3 and 512^3) and the U-Net.
+pub fn fig8(cluster: &ClusterConfig) -> String {
+    let mut out = String::from("Fig. 8: weak scaling (per-group batch fixed)\n");
+    let cf128 = cosmoflow_paper(128, false);
+    for (label, ways) in [("data-parallel", 1usize), ("4-way", 4), ("8-way", 8)] {
+        let groups: Vec<usize> = [1usize, 4, 16, 64, 128, 512]
+            .iter()
+            .copied()
+            .filter(|g| g * ways <= 2048)
+            .collect();
+        let pts = weak_scaling(&cf128, cluster, ways, &groups, 8);
+        out.push_str(&render_points(&pts, &format!("-- CosmoFlow 128^3, {label}")));
+    }
+    let cf512 = cosmoflow_paper(512, false);
+    for (ways, paper) in [(8usize, 147.3), (16, 71.3), (32, 37.2)] {
+        let groups: Vec<usize> = [1usize, 2, 8, 32, 2048 / ways].to_vec();
+        let pts = weak_scaling(&cf512, cluster, ways, &groups, 1);
+        out.push_str(&render_points(
+            &pts,
+            &format!("-- CosmoFlow 512^3, {ways}-way (paper: {paper}x @2048)"),
+        ));
+    }
+    let unet = unet3d_paper(256, 3);
+    let pts = weak_scaling(&unet, cluster, 32, &[1, 2, 8, 32], 1);
+    out.push_str(&render_points(&pts, "-- 3D U-Net 256^3, 32-way (paper: 28.4x @1024)"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reports_render() {
+        let cl = ClusterConfig::default();
+        for s in [
+            table1(),
+            table2(&cl),
+            fig4(&cl),
+            fig5(&cl),
+            fig6(&cl, None),
+            fig7(&cl),
+            fig8(&cl),
+        ] {
+            assert!(s.len() > 100, "report too short:\n{s}");
+        }
+    }
+
+    #[test]
+    fn table1_mentions_paper_values() {
+        let t = table1();
+        assert!(t.contains("3550"));
+        assert!(t.contains("52.7"));
+    }
+}

@@ -1,0 +1,359 @@
+//! Depth-chunked binary volume container — the HDF5 stand-in.
+//!
+//! Layout (little-endian f32 payloads):
+//!
+//! ```text
+//! magic "H3D1" | u32 header_len | header JSON
+//! targets:  n_samples * target_len          (regression targets)
+//! inputs:   n_samples * C * D * H * W       (depth-major per channel)
+//! labels:   n_samples * K * D * H * W       (optional one-hot volumes)
+//! ```
+//!
+//! Because each (sample, channel) is depth-contiguous, a depth hyperslab
+//! read is one contiguous `pread` per channel — the access pattern parallel
+//! HDF5 gives the paper's spatially-parallel reader (§III-B). All reads go
+//! through `read_exact_at`, so a single [`Container`] serves every rank
+//! thread concurrently, and a byte counter feeds the I/O accounting.
+
+use crate::engine::hybrid::SampleSource;
+use crate::tensor::Tensor;
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, bail, Result};
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const MAGIC: &[u8; 4] = b"H3D1";
+
+/// Container metadata.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub n_samples: usize,
+    pub channels: usize,
+    pub size: usize,
+    pub target_len: usize,
+    pub label_channels: usize, // 0 = no label volumes
+}
+
+/// Streaming writer.
+pub struct ContainerWriter {
+    file: File,
+    meta: Meta,
+    written_targets: usize,
+    written_inputs: usize,
+    written_labels: usize,
+}
+
+impl ContainerWriter {
+    pub fn create(path: &Path, meta: Meta) -> Result<ContainerWriter> {
+        let mut file = File::create(path)?;
+        let hdr = obj(vec![
+            ("n_samples", meta.n_samples.into()),
+            ("channels", meta.channels.into()),
+            ("size", meta.size.into()),
+            ("target_len", meta.target_len.into()),
+            ("label_channels", meta.label_channels.into()),
+        ])
+        .to_string();
+        file.write_all(MAGIC)?;
+        file.write_all(&(hdr.len() as u32).to_le_bytes())?;
+        file.write_all(hdr.as_bytes())?;
+        Ok(ContainerWriter {
+            file,
+            meta,
+            written_targets: 0,
+            written_inputs: 0,
+            written_labels: 0,
+        })
+    }
+
+    /// Targets must be written first, then inputs, then labels (layout
+    /// order). Enforced by counters.
+    pub fn write_target(&mut self, t: &Tensor) -> Result<()> {
+        if t.numel() != self.meta.target_len {
+            bail!("target len {} != {}", t.numel(), self.meta.target_len);
+        }
+        if self.written_inputs > 0 {
+            bail!("targets must precede inputs");
+        }
+        write_f32s(&mut self.file, t.data())?;
+        self.written_targets += 1;
+        Ok(())
+    }
+
+    pub fn write_input(&mut self, x: &Tensor) -> Result<()> {
+        let m = &self.meta;
+        let want = [1, m.channels, m.size, m.size, m.size];
+        if x.shape() != want {
+            bail!("input shape {:?} != {:?}", x.shape(), want);
+        }
+        if self.written_targets != m.n_samples {
+            bail!("write all {} targets before inputs", m.n_samples);
+        }
+        write_f32s(&mut self.file, x.data())?;
+        self.written_inputs += 1;
+        Ok(())
+    }
+
+    pub fn write_label(&mut self, l: &Tensor) -> Result<()> {
+        let m = &self.meta;
+        let want = [1, m.label_channels, m.size, m.size, m.size];
+        if l.shape() != want {
+            bail!("label shape {:?} != {:?}", l.shape(), want);
+        }
+        if self.written_inputs != m.n_samples {
+            bail!("write all inputs before labels");
+        }
+        write_f32s(&mut self.file, l.data())?;
+        self.written_labels += 1;
+        Ok(())
+    }
+
+    pub fn finish(self) -> Result<()> {
+        let m = &self.meta;
+        if self.written_inputs != m.n_samples
+            || (m.label_channels > 0 && self.written_labels != m.n_samples)
+        {
+            bail!("incomplete container");
+        }
+        self.file.sync_all()?;
+        Ok(())
+    }
+}
+
+fn write_f32s(f: &mut File, data: &[f32]) -> Result<()> {
+    // safe little-endian serialization
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Random-access reader (thread-safe: positioned reads only).
+pub struct Container {
+    file: File,
+    pub meta: Meta,
+    targets_off: u64,
+    inputs_off: u64,
+    labels_off: u64,
+    pub bytes_read: AtomicU64,
+    pub reads: AtomicU64,
+}
+
+impl Container {
+    pub fn open(path: &Path) -> Result<Container> {
+        let file = File::open(path).map_err(|e| anyhow!("open {path:?}: {e}"))?;
+        let mut head = [0u8; 8];
+        file.read_exact_at(&mut head, 0)?;
+        if &head[..4] != MAGIC {
+            bail!("{path:?}: not an H3D1 container");
+        }
+        let hdr_len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        let mut hdr = vec![0u8; hdr_len];
+        file.read_exact_at(&mut hdr, 8)?;
+        let v = Json::parse(std::str::from_utf8(&hdr)?)?;
+        let meta = Meta {
+            n_samples: v.req("n_samples")?.as_usize()?,
+            channels: v.req("channels")?.as_usize()?,
+            size: v.req("size")?.as_usize()?,
+            target_len: v.req("target_len")?.as_usize()?,
+            label_channels: v.req("label_channels")?.as_usize()?,
+        };
+        let targets_off = 8 + hdr_len as u64;
+        let vol = (meta.size * meta.size * meta.size) as u64;
+        let inputs_off = targets_off + (meta.n_samples * meta.target_len) as u64 * 4;
+        let labels_off = inputs_off + meta.n_samples as u64 * meta.channels as u64 * vol * 4;
+        Ok(Container {
+            file,
+            meta,
+            targets_off,
+            inputs_off,
+            labels_off,
+            bytes_read: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+        })
+    }
+
+    fn read_f32s(&self, off: u64, count: usize) -> Result<Vec<f32>> {
+        let mut buf = vec![0u8; count * 4];
+        self.file.read_exact_at(&mut buf, off)?;
+        self.bytes_read.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn read_target(&self, sample: usize) -> Result<Tensor> {
+        let tl = self.meta.target_len;
+        let v = self.read_f32s(self.targets_off + (sample * tl) as u64 * 4, tl)?;
+        Ok(Tensor::from_vec(&[1, tl], v))
+    }
+
+    /// Depth hyperslab of the input volume: one contiguous read per channel.
+    pub fn read_input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        self.read_shard(self.inputs_off, self.meta.channels, sample, d0, len)
+    }
+
+    /// Depth hyperslab of the one-hot label volume.
+    pub fn read_label_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        if self.meta.label_channels == 0 {
+            bail!("container has no labels");
+        }
+        self.read_shard(self.labels_off, self.meta.label_channels, sample, d0, len)
+    }
+
+    fn read_shard(&self, base: u64, channels: usize, sample: usize, d0: usize,
+                  len: usize) -> Result<Tensor> {
+        let s = self.meta.size;
+        if d0 + len > s {
+            bail!("hyperslab [{d0}, {}) out of depth {s}", d0 + len);
+        }
+        let plane = s * s;
+        let vol = (s * plane) as u64;
+        let mut data = Vec::with_capacity(channels * len * plane);
+        for c in 0..channels {
+            let off = base
+                + ((sample * channels + c) as u64 * vol + (d0 * plane) as u64) * 4;
+            data.extend(self.read_f32s(off, len * plane)?);
+        }
+        Ok(Tensor::from_vec(&[1, channels, len, s, s], data))
+    }
+}
+
+/// Direct-from-file shard source: every rank reads only its hyperslab —
+/// the paper's epoch-0 ingestion path.
+impl SampleSource for Container {
+    fn len(&self) -> usize {
+        self.meta.n_samples
+    }
+    fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        self.read_input_shard(sample, d0, len)
+    }
+    fn target_full(&self, sample: usize) -> Result<Tensor> {
+        self.read_target(sample)
+    }
+    fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        self.read_label_shard(sample, d0, len)
+    }
+}
+
+/// Write a whole in-memory dataset into a container file.
+pub fn write_dataset(
+    path: &Path,
+    inputs: &[Tensor],
+    targets: &[Tensor],
+    labels: Option<&[Tensor]>,
+) -> Result<()> {
+    assert!(!inputs.is_empty());
+    let shape = inputs[0].shape();
+    let meta = Meta {
+        n_samples: inputs.len(),
+        channels: shape[1],
+        size: shape[2],
+        target_len: targets[0].numel(),
+        label_channels: labels.map(|l| l[0].shape()[1]).unwrap_or(0),
+    };
+    let mut w = ContainerWriter::create(path, meta)?;
+    for t in targets {
+        w.write_target(t)?;
+    }
+    for x in inputs {
+        w.write_input(x)?;
+    }
+    if let Some(ls) = labels {
+        for l in ls {
+            w.write_label(l)?;
+        }
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hydra3d-test-{name}-{}", std::process::id()));
+        p
+    }
+
+    fn rand_tensor(rng: &mut Pcg, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn roundtrip_and_hyperslabs() {
+        let mut rng = Pcg::new(1, 1);
+        // container volumes are cubic (meta.size^3)
+        let inputs: Vec<Tensor> =
+            (0..3).map(|_| rand_tensor(&mut rng, &[1, 2, 8, 8, 8])).collect();
+        let targets: Vec<Tensor> =
+            (0..3).map(|_| rand_tensor(&mut rng, &[1, 4])).collect();
+        let path = tmpfile("roundtrip");
+        write_dataset(&path, &inputs, &targets, None).unwrap();
+
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.meta.n_samples, 3);
+        for s in 0..3 {
+            assert_eq!(c.read_target(s).unwrap(), targets[s]);
+            // full read == original
+            let full = c.read_input_shard(s, 0, 8).unwrap();
+            assert_eq!(full, inputs[s]);
+            // hyperslab == slice
+            let shard = c.read_input_shard(s, 2, 4).unwrap();
+            assert_eq!(shard, inputs[s].slice_d(2, 4));
+        }
+        // hyperslab reads touch only the bytes they need (per channel read)
+        c.bytes_read.store(0, Ordering::Relaxed);
+        let _ = c.read_input_shard(0, 0, 2).unwrap();
+        assert_eq!(c.bytes_read.load(Ordering::Relaxed), 2 * 2 * 64 * 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let mut rng = Pcg::new(2, 1);
+        let inputs: Vec<Tensor> =
+            (0..2).map(|_| rand_tensor(&mut rng, &[1, 1, 4, 4, 4])).collect();
+        let targets: Vec<Tensor> = (0..2).map(|_| Tensor::zeros(&[1, 1])).collect();
+        let labels: Vec<Tensor> =
+            (0..2).map(|_| rand_tensor(&mut rng, &[1, 3, 4, 4, 4])).collect();
+        let path = tmpfile("labels");
+        write_dataset(&path, &inputs, &targets, Some(&labels)).unwrap();
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.read_label_shard(1, 1, 2).unwrap(), labels[1].slice_d(1, 2));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_enforces_order_and_shapes() {
+        let path = tmpfile("order");
+        let meta = Meta { n_samples: 1, channels: 1, size: 4, target_len: 2,
+                          label_channels: 0 };
+        let mut w = ContainerWriter::create(&path, meta).unwrap();
+        assert!(w.write_input(&Tensor::zeros(&[1, 1, 4, 4, 4])).is_err());
+        w.write_target(&Tensor::zeros(&[1, 2])).unwrap();
+        assert!(w.write_input(&Tensor::zeros(&[1, 1, 2, 4, 4])).is_err());
+        w.write_input(&Tensor::zeros(&[1, 1, 4, 4, 4])).unwrap();
+        w.finish().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("magic");
+        std::fs::write(&path, b"NOTAHDF5FILE....").unwrap();
+        assert!(Container::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

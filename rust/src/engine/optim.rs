@@ -1,0 +1,153 @@
+//! Optimizers. The paper trains with Adam (β1=0.9, β2=0.999, ε=1e-8, §IV).
+//!
+//! The optimizer runs on the Rust side (replicated on every rank over
+//! already-allreduced gradients), mirroring how the paper's framework
+//! separates cuDNN compute from framework-side parameter updates.
+
+use crate::tensor::Tensor;
+
+/// Adam with bias correction.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(shapes: &[Vec<usize>], beta1: f64, beta2: f64, eps: f64) -> Adam {
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            t: 0,
+        }
+    }
+
+    pub fn for_params(params: &[Tensor]) -> Adam {
+        let shapes: Vec<Vec<usize>> = params.iter().map(|p| p.shape().to_vec()).collect();
+        Adam::new(&shapes, 0.9, 0.999, 1e-8)
+    }
+
+    /// One update step: `p -= lr * m_hat / (sqrt(v_hat) + eps)`.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1).powi(self.t as i32);
+        let bc2 = 1.0 - (self.beta2).powi(self.t as i32);
+        let step_scale = (lr / bc1) as f32;
+        let vbc = bc2 as f32;
+        let eps = self.eps as f32;
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            let pd = p.data_mut();
+            let gd = g.data();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            for i in 0..pd.len() {
+                md[i] = b1 * md[i] + (1.0 - b1) * gd[i];
+                vd[i] = b2 * vd[i] + (1.0 - b2) * gd[i] * gd[i];
+                let vhat = vd[i] / vbc;
+                pd[i] -= step_scale * md[i] / (vhat.sqrt() + eps);
+            }
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+/// Plain SGD (for ablations).
+#[derive(Clone, Debug, Default)]
+pub struct Sgd {
+    pub momentum: f64,
+    velocity: Vec<Tensor>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f64) -> Sgd {
+        Sgd { momentum, velocity: Vec::new() }
+    }
+
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        if self.velocity.is_empty() {
+            self.velocity = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        }
+        let mu = self.momentum as f32;
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
+            let pd = p.data_mut();
+            let gd = g.data();
+            let vd = v.data_mut();
+            for i in 0..pd.len() {
+                vd[i] = mu * vd[i] + gd[i];
+                pd[i] -= (lr as f32) * vd[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam on f(x) = x^2 converges toward 0.
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut p = vec![Tensor::from_vec(&[1], vec![5.0])];
+        let mut opt = Adam::for_params(&p);
+        for _ in 0..500 {
+            let g = vec![Tensor::from_vec(&[1], vec![2.0 * p[0].data()[0]])];
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!(p[0].data()[0].abs() < 0.05, "{}", p[0].data()[0]);
+    }
+
+    /// First Adam step size equals lr regardless of gradient scale
+    /// (bias-corrected signSGD-like behaviour).
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        for g0 in [1e-4f32, 1.0, 1e4] {
+            let mut p = vec![Tensor::from_vec(&[1], vec![0.0])];
+            let mut opt = Adam::for_params(&p);
+            opt.step(&mut p, &[Tensor::from_vec(&[1], vec![g0])], 0.01);
+            assert!((p[0].data()[0] + 0.01).abs() < 1e-4, "g0={g0}: {}", p[0].data()[0]);
+        }
+    }
+
+    #[test]
+    fn adam_deterministic() {
+        let run = || {
+            let mut p = vec![Tensor::from_vec(&[2], vec![1.0, -2.0])];
+            let mut opt = Adam::for_params(&p);
+            for i in 0..10 {
+                let g = vec![Tensor::from_vec(&[2], vec![0.1 * i as f32, -0.2])];
+                opt.step(&mut p, &g, 1e-2);
+            }
+            p[0].data().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn sgd_with_momentum_accelerates() {
+        let mut p = vec![Tensor::from_vec(&[1], vec![1.0])];
+        let mut opt = Sgd::new(0.9);
+        let g = vec![Tensor::from_vec(&[1], vec![1.0])];
+        opt.step(&mut p, &g, 0.1);
+        let d1 = 1.0 - p[0].data()[0];
+        opt.step(&mut p, &g, 0.1);
+        let d2 = 1.0 - d1 - p[0].data()[0];
+        assert!(d2 > d1, "momentum should grow the step: {d1} then {d2}");
+    }
+}

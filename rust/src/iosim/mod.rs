@@ -1,0 +1,18 @@
+//! The I/O pipeline: distributed in-memory data store (functional) and the
+//! PFS performance model (paper §III-B, Figs. 3 & 5).
+//!
+//! * [`store`] — the functional data store: epoch-0 hyperslab ingestion
+//!   where each rank reads only its slab of its owned samples, a global
+//!   owner map, and per-step redistribution over the communicator.
+//! * [`pfs`] — the parallel-file-system bandwidth model (240 GB/s aggregate
+//!   on Lassen) used by the Fig. 5 ablation.
+//! * [`pipeline`] — iteration-time composition: sample-parallel I/O
+//!   (baseline, does not strong-scale) vs spatially-parallel I/O with
+//!   caching and overlap (the paper's approach).
+
+pub mod pfs;
+pub mod pipeline;
+pub mod store;
+
+pub use pfs::Pfs;
+pub use store::DataStore;

@@ -1,0 +1,73 @@
+//! Parallel-file-system bandwidth model.
+//!
+//! Lassen's PFS sustains ~240 GB/s in aggregate (§III-B); a single client
+//! stream is capped far lower. Read time for a set of concurrent readers is
+//! governed by whichever saturates first:
+//!
+//! `t = bytes_total / min(aggregate_bw, readers * per_reader_bw)` + latency.
+
+/// PFS model parameters (defaults from the paper's system description).
+#[derive(Clone, Copy, Debug)]
+pub struct Pfs {
+    /// aggregate bandwidth, bytes/s
+    pub aggregate_bps: f64,
+    /// per-reader (per-process) streaming bandwidth, bytes/s
+    pub per_reader_bps: f64,
+    /// per-request latency, seconds
+    pub latency_s: f64,
+}
+
+impl Default for Pfs {
+    fn default() -> Self {
+        Pfs {
+            aggregate_bps: 240e9,
+            per_reader_bps: 1.0e9, // a single POSIX stream on Lassen's PFS
+            latency_s: 1e-3,
+        }
+    }
+}
+
+impl Pfs {
+    /// Time for `readers` concurrent processes to collectively read
+    /// `bytes_total`, split evenly.
+    pub fn read_time(&self, bytes_total: f64, readers: usize) -> f64 {
+        if bytes_total <= 0.0 {
+            return 0.0;
+        }
+        let readers = readers.max(1) as f64;
+        let bw = (readers * self.per_reader_bps).min(self.aggregate_bps);
+        self.latency_s + bytes_total / bw
+    }
+
+    /// Effective utilized bandwidth for a reader count.
+    pub fn effective_bw(&self, readers: usize) -> f64 {
+        (readers.max(1) as f64 * self.per_reader_bps).min(self.aggregate_bps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_scales_with_readers_until_saturation() {
+        let pfs = Pfs::default();
+        let one = pfs.read_time(64e9, 1);
+        let many = pfs.read_time(64e9, 64);
+        assert!(many < one / 30.0, "{one} vs {many}");
+        // beyond saturation more readers don't help
+        let sat = pfs.read_time(64e9, 240);
+        let sat2 = pfs.read_time(64e9, 2048);
+        assert!((sat - sat2).abs() / sat < 1e-9);
+        assert!((pfs.effective_bw(2048) - 240e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn paper_example_minibatch_load_time() {
+        // §III-B: "loading each mini-batch [64 x 1 GiB] requires at least
+        // 256 ms" at 240 GB/s.
+        let pfs = Pfs { latency_s: 0.0, ..Default::default() };
+        let t = pfs.read_time(64.0 * (1u64 << 30) as f64, 100_000);
+        assert!((t - 0.286).abs() < 0.03, "{t}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Iteration-time composition of compute and I/O — the model behind the
+//! paper's Fig. 5 ablation ("without spatial-parallel I/O, iteration time
+//! does not scale at all").
+//!
+//! Three ingestion strategies:
+//!
+//! * **SampleParallelPfs** — the conventional reader: one rank per sample
+//!   streams whole samples from the PFS every step. Reader parallelism is
+//!   capped by the mini-batch size N, so PFS bandwidth stops scaling with
+//!   GPUs; and because the sample must then be scattered to its group, a
+//!   redistribution cost grows with `ways`.
+//! * **SampleParallelCached** — Fig. 5's configuration: the dataset is
+//!   cached in host memory (Conduit-style) but each sample is still read
+//!   and scattered by a single rank — the scatter and the single-reader
+//!   memory bandwidth still bound the pipeline.
+//! * **SpatialParallel** — the paper's pipeline: every rank ingests /
+//!   receives only its hyperslab (store + owner map); steady-state I/O is a
+//!   group-to-group shard copy that shrinks 1/ways and overlaps with
+//!   compute, so it vanishes from the critical path.
+
+use super::pfs::Pfs;
+use crate::config::ClusterConfig;
+
+/// Ingestion strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoStrategy {
+    SampleParallelPfs,
+    SampleParallelCached,
+    SpatialParallel,
+}
+
+/// Per-iteration I/O time for a mini-batch of `n` samples of `sample_bytes`
+/// each, trained by `n * ways` GPUs.
+pub fn io_time_per_iter(
+    strategy: IoStrategy,
+    pfs: &Pfs,
+    cluster: &ClusterConfig,
+    sample_bytes: f64,
+    n: usize,
+    ways: usize,
+) -> f64 {
+    let host_bw = 16e9; // host memcpy stream bandwidth, bytes/s
+    let link_bw = cluster.ib_gbps * 1e9;
+    match strategy {
+        IoStrategy::SampleParallelPfs => {
+            // N concurrent whole-sample readers + scatter to `ways` peers
+            let read = pfs.read_time(sample_bytes * n as f64, n);
+            let scatter = scatter_time(sample_bytes, ways, link_bw);
+            read + scatter
+        }
+        IoStrategy::SampleParallelCached => {
+            // cached in host memory, still single-reader per sample
+            let read = sample_bytes / host_bw;
+            let scatter = scatter_time(sample_bytes, ways, link_bw);
+            read + scatter
+        }
+        IoStrategy::SpatialParallel => {
+            // every rank moves only its hyperslab, group-to-group, all
+            // pairs concurrently; the copy is fully overlapped with the
+            // previous iteration's compute, but we report its raw cost.
+            (sample_bytes / ways as f64) / link_bw
+        }
+    }
+}
+
+fn scatter_time(sample_bytes: f64, ways: usize, link_bw: f64) -> f64 {
+    if ways <= 1 {
+        0.0
+    } else {
+        // the reader sends (ways-1)/ways of the sample out over one link
+        sample_bytes * (ways - 1) as f64 / ways as f64 / link_bw
+    }
+}
+
+/// Whether the strategy's I/O overlaps with compute (the paper's pipeline
+/// prefetches the next mini-batch during the current iteration).
+pub fn overlaps(strategy: IoStrategy) -> bool {
+    matches!(strategy, IoStrategy::SpatialParallel)
+}
+
+/// Compose iteration time from compute and I/O.
+pub fn iteration_time(compute_s: f64, io_s: f64, overlapped: bool) -> f64 {
+    if overlapped {
+        compute_s.max(io_s)
+    } else {
+        compute_s + io_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Pfs, ClusterConfig) {
+        (Pfs::default(), ClusterConfig::default())
+    }
+
+    /// The Fig. 5 phenomenon: with sample-parallel I/O the per-iteration
+    /// I/O time is *independent of the GPU count* (fixed N), so strong
+    /// scaling stalls; spatial-parallel I/O shrinks 1/ways.
+    #[test]
+    fn sample_parallel_does_not_strong_scale() {
+        let (pfs, cl) = setup();
+        let gib = (1u64 << 30) as f64; // one 512^3 x 4ch sample
+        let n = 64;
+        let t8 = io_time_per_iter(IoStrategy::SampleParallelCached, &pfs, &cl, gib, n, 8);
+        let t32 = io_time_per_iter(IoStrategy::SampleParallelCached, &pfs, &cl, gib, n, 32);
+        assert!(t32 >= t8 * 0.95, "sample-parallel should not improve: {t8} vs {t32}");
+
+        let s8 = io_time_per_iter(IoStrategy::SpatialParallel, &pfs, &cl, gib, n, 8);
+        let s32 = io_time_per_iter(IoStrategy::SpatialParallel, &pfs, &cl, gib, n, 32);
+        assert!(s32 < s8 / 3.5, "spatial-parallel must scale: {s8} vs {s32}");
+        assert!(s8 < t8, "spatial beats sample-parallel at 8 ways");
+    }
+
+    #[test]
+    fn pfs_reads_dominate_uncached() {
+        let (pfs, cl) = setup();
+        let gib = (1u64 << 30) as f64;
+        let t = io_time_per_iter(IoStrategy::SampleParallelPfs, &pfs, &cl, gib, 64, 8);
+        // 64 GiB over min(64 x 1 GB/s, 240 GB/s) = 64 GB/s -> ~1 s
+        assert!(t > 0.5, "{t}");
+    }
+
+    #[test]
+    fn overlap_composition() {
+        assert_eq!(iteration_time(0.2, 0.05, true), 0.2);
+        assert_eq!(iteration_time(0.2, 0.5, true), 0.5);
+        assert_eq!(iteration_time(0.2, 0.05, false), 0.25);
+        assert!(overlaps(IoStrategy::SpatialParallel));
+        assert!(!overlaps(IoStrategy::SampleParallelCached));
+    }
+}

@@ -1,0 +1,223 @@
+//! The distributed in-memory data store (paper §III-B, Fig. 3).
+//!
+//! Epoch 0: every rank ingests *only its own hyperslabs* of the samples it
+//! owns (spatially-parallel ingestion — each rank reads the depth range
+//! matching its shard position, for the subset of samples assigned to it
+//! by the owner map). The aggregate of all ranks' caches is the full
+//! dataset, so the PFS is never touched again.
+//!
+//! Epoch 1+: before each step, the store redistributes cached hyperslabs so
+//! the ranks about to train on a sample hold its shards — peer-to-peer
+//! exchanges over the (fast) interconnect instead of PFS reads.
+//!
+//! The owner map distributes samples round-robin over *positions within
+//! groups*, so a rank only ever caches hyperslabs of its own depth range:
+//! redistribution is a pure group-to-group transfer, never a re-slicing —
+//! the "aligns the spatially parallel I/O, training, and data caching"
+//! property of §III-B.
+
+use crate::comm::Endpoint;
+use crate::data::container::Container;
+use crate::engine::hybrid::SampleSource;
+use crate::partition::{DepthPartition, Topology};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Global owner map: which *group* caches each sample (every member of the
+/// group holds its own depth shard of it).
+#[derive(Clone, Debug)]
+pub struct OwnerMap {
+    pub n_samples: usize,
+    pub groups: usize,
+}
+
+impl OwnerMap {
+    pub fn owner_group(&self, sample: usize) -> usize {
+        sample % self.groups
+    }
+
+    /// Samples owned by `group`.
+    pub fn samples_of(&self, group: usize) -> Vec<usize> {
+        (0..self.n_samples).filter(|s| self.owner_group(*s) == group).collect()
+    }
+}
+
+/// One rank's shard cache + redistribution logic.
+pub struct DataStore {
+    pub topo: Topology,
+    pub rank: usize,
+    pub owner: OwnerMap,
+    pub part: DepthPartition,
+    /// sample -> cached (input shard, target) — this rank's depth range only
+    cache: HashMap<usize, (Tensor, Tensor)>,
+    /// per-step staging of shards fetched from owners
+    staged: HashMap<usize, (Tensor, Tensor)>,
+    pub ingest_bytes: u64,
+    pub redist_bytes: u64,
+    label_mode: bool,
+}
+
+impl DataStore {
+    /// Epoch-0 ingestion: read this rank's hyperslab of every owned sample.
+    /// `label_mode` caches spatial label shards (U-Net) instead of flat
+    /// targets (CosmoFlow).
+    pub fn ingest(
+        container: &Container,
+        topo: Topology,
+        rank: usize,
+        label_mode: bool,
+    ) -> Result<DataStore> {
+        let (group, pos) = topo.coords_of(rank);
+        let part = DepthPartition::new_even(container.meta.size, topo.d_ways)?;
+        let owner = OwnerMap { n_samples: container.meta.n_samples, groups: topo.groups };
+        let (d0, dlen) = (part.shard_start(pos), part.shard_len());
+        let mut cache = HashMap::new();
+        let before = container.bytes_read.load(std::sync::atomic::Ordering::Relaxed);
+        for s in owner.samples_of(group) {
+            let x = container.read_input_shard(s, d0, dlen)?;
+            let t = if label_mode {
+                container.read_label_shard(s, d0, dlen)?
+            } else {
+                container.read_target(s)?
+            };
+            cache.insert(s, (x, t));
+        }
+        let after = container.bytes_read.load(std::sync::atomic::Ordering::Relaxed);
+        Ok(DataStore {
+            topo,
+            rank,
+            owner,
+            part,
+            cache,
+            staged: HashMap::new(),
+            ingest_bytes: after - before,
+            redist_bytes: 0,
+            label_mode,
+        })
+    }
+
+    /// Number of cached samples (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Inspect a cached entry (diagnostics / tests).
+    pub fn cache_entry(&self, sample: usize) -> Option<&(Tensor, Tensor)> {
+        self.cache.get(&sample)
+    }
+
+    /// Redistribute shards for one step: `assignments[g]` is the list of
+    /// samples group `g` will train on. Each rank exchanges with the rank
+    /// at the *same shard position* in the owning/consuming group, so every
+    /// transfer stays within one depth range. Collective: every rank calls
+    /// this with identical `assignments`.
+    pub fn redistribute(&mut self, ep: &Endpoint, assignments: &[Vec<usize>])
+                        -> Result<()> {
+        let (my_group, pos) = self.topo.coords_of(self.rank);
+        self.staged.clear();
+        // send phase: for every sample I own that another group needs
+        for (g, samples) in assignments.iter().enumerate() {
+            for &s in samples {
+                if self.owner.owner_group(s) == my_group && g != my_group {
+                    let (x, t) = self
+                        .cache
+                        .get(&s)
+                        .ok_or_else(|| anyhow!("rank {}: sample {s} not cached",
+                                               self.rank))?;
+                    let dst = self.topo.rank_of(g, pos);
+                    ep.send(dst, x.data().to_vec());
+                    ep.send(dst, t.data().to_vec());
+                    self.redist_bytes += 4 * (x.numel() + t.numel()) as u64;
+                }
+            }
+        }
+        // receive phase: samples I need but don't own
+        for &s in &assignments[my_group] {
+            let og = self.owner.owner_group(s);
+            if og == my_group {
+                let (x, t) = self.cache.get(&s).unwrap();
+                self.staged.insert(s, (x.clone(), t.clone()));
+            } else {
+                let src = self.topo.rank_of(og, pos);
+                let xbuf = ep.recv(src)?;
+                let tbuf = ep.recv(src)?;
+                let (xs, ts) = self.shard_shapes()?;
+                self.staged.insert(
+                    s,
+                    (Tensor::from_vec(&xs, xbuf), Tensor::from_vec(&ts, tbuf)),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn shard_shapes(&self) -> Result<(Vec<usize>, Vec<usize>)> {
+        let (x, t) = self
+            .cache
+            .values()
+            .next()
+            .ok_or_else(|| anyhow!("empty cache on rank {}", self.rank))?;
+        Ok((x.shape().to_vec(), t.shape().to_vec()))
+    }
+
+    /// Fetch a staged shard (after [`redistribute`]).
+    pub fn staged_shard(&self, sample: usize) -> Result<&(Tensor, Tensor)> {
+        self.staged
+            .get(&sample)
+            .ok_or_else(|| anyhow!("sample {sample} not staged on rank {}", self.rank))
+    }
+
+    pub fn label_mode(&self) -> bool {
+        self.label_mode
+    }
+}
+
+/// A [`SampleSource`] over a store that has been fully pre-staged for the
+/// samples a rank will consume (used by the store-backed training path).
+pub struct StagedSource {
+    pub shards: HashMap<(usize, usize, usize), Tensor>, // (sample, d0, len)
+    pub targets: HashMap<usize, Tensor>,
+    pub n: usize,
+}
+
+impl SampleSource for StagedSource {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        self.shards
+            .get(&(sample, d0, len))
+            .cloned()
+            .ok_or_else(|| anyhow!("shard ({sample},{d0},{len}) not staged"))
+    }
+    fn target_full(&self, sample: usize) -> Result<Tensor> {
+        self.targets
+            .get(&sample)
+            .cloned()
+            .ok_or_else(|| anyhow!("target {sample} not staged"))
+    }
+    fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        let t = self.target_full(sample)?;
+        Ok(t.slice_d(d0, len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_map_partitions_samples() {
+        let om = OwnerMap { n_samples: 10, groups: 3 };
+        let mut seen = vec![false; 10];
+        for g in 0..3 {
+            for s in om.samples_of(g) {
+                assert!(!seen[s]);
+                seen[s] = true;
+                assert_eq!(om.owner_group(s), g);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

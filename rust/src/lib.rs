@@ -1,0 +1,37 @@
+//! # HYDRA-3D
+//!
+//! Reproduction of *"The Case for Strong Scaling in Deep Learning: Training
+//! Large 3D CNNs with Hybrid Parallelism"* (Oyama et al., 2020) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is **Layer 3**: the distributed coordinator. It owns
+//!
+//! * the process topology and the simulated multi-rank communicator
+//!   ([`comm`], [`partition`]),
+//! * the hybrid-parallel training engine — spatial (depth) partitioning with
+//!   halo exchange, distributed batch-norm, data-parallel gradient
+//!   allreduce ([`engine`]),
+//! * the spatially-parallel I/O pipeline: hyperslab readers and the
+//!   distributed in-memory data store ([`data`], [`iosim`]),
+//! * the paper's §III-C performance model and a discrete-event cluster
+//!   simulator used to regenerate the paper-scale figures ([`perfmodel`],
+//!   [`sim`]),
+//! * the PJRT runtime that loads and executes the AOT-compiled JAX/Pallas
+//!   artifacts ([`runtime`]); Python never runs at training time.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod tensor;
+pub mod partition;
+pub mod comm;
+pub mod config;
+pub mod runtime;
+pub mod models;
+pub mod engine;
+pub mod data;
+pub mod iosim;
+pub mod perfmodel;
+pub mod sim;
+pub mod coordinator;

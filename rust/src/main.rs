@@ -1,0 +1,174 @@
+//! `hydra3d` — the leader CLI.
+//!
+//! Subcommands:
+//!   table1 | table2 | fig --id N   regenerate the paper's tables/figures
+//!   train                          functional training (fused or hybrid)
+//!   info                           artifact/manifest summary
+//!
+//! Examples:
+//!   hydra3d table1
+//!   hydra3d fig --id 4
+//!   hydra3d train --model cf16 --ways 2 --groups 2 --batch 4 --steps 20
+//!   hydra3d train --model unet16 --ways 2 --task ct
+
+use anyhow::{bail, Result};
+use hydra3d::config::ClusterConfig;
+use hydra3d::coordinator;
+use hydra3d::data::ct::ct_dataset;
+use hydra3d::data::grf::{GrfConfig, GrfDataset};
+use hydra3d::engine::hybrid::{train_hybrid, HybridOpts, InMemorySource};
+use hydra3d::engine::LrSchedule;
+use hydra3d::runtime::RuntimeHandle;
+use hydra3d::util::cli::Command;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("HYDRA3D_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(String::as_str) else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    let cluster = ClusterConfig::default();
+    match cmd {
+        "table1" => print!("{}", coordinator::table1()),
+        "table2" => print!("{}", coordinator::table2(&cluster)),
+        "fig" => {
+            let c = Command::new("fig", "regenerate a paper figure")
+                .opt("id", "figure number (4,5,6,7,8)", None)
+                .opt("trace-dir", "directory for chrome traces (fig 6)", None);
+            let a = c.parse(rest)?;
+            let id = a.req("id")?.parse::<usize>()?;
+            let out = match id {
+                4 => coordinator::fig4(&cluster),
+                5 => coordinator::fig5(&cluster),
+                6 => coordinator::fig6(
+                    &cluster,
+                    a.get("trace-dir").map(std::path::Path::new),
+                ),
+                7 => coordinator::fig7(&cluster),
+                8 => coordinator::fig8(&cluster),
+                other => bail!("no figure {other} (the paper has 4-8 as \
+                                performance figures; 9/10 are produced by \
+                                examples/train_cosmoflow)"),
+            };
+            print!("{out}");
+        }
+        "train" => train_cmd(rest)?,
+        "info" => info_cmd()?,
+        "--help" | "-h" | "help" => println!("{}", usage()),
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+    Ok(())
+}
+
+fn usage() -> String {
+    "hydra3d — hybrid-parallel 3D CNN training (Oyama et al. 2020 reproduction)\n\
+     \n\
+     commands:\n\
+       table1            Table I analytics (architecture, GFlops, memory)\n\
+       table2            Table II achieved-vs-peak conv performance\n\
+       fig --id <4..8>   regenerate a performance figure\n\
+       train [...]       functional hybrid/fused training on synthetic data\n\
+       info              artifact manifest summary\n"
+        .into()
+}
+
+fn train_cmd(rest: &[String]) -> Result<()> {
+    let c = Command::new("train", "functional training on synthetic data")
+        .opt("model", "manifest model name", Some("cf16"))
+        .opt("ways", "spatial (depth) partitioning", Some("1"))
+        .opt("groups", "data-parallel groups", Some("1"))
+        .opt("batch", "global mini-batch", Some("2"))
+        .opt("steps", "training steps", Some("20"))
+        .opt("lr", "initial learning rate", Some("1e-3"))
+        .opt("seed", "experiment seed", Some("7"))
+        .opt("samples", "dataset size", Some("16"))
+        .opt("task", "grf | ct", Some("grf"));
+    let a = c.parse(rest)?;
+    let model = a.req("model")?.to_string();
+    let rt = RuntimeHandle::start(&artifacts_dir())?;
+    let info = rt.manifest().model(&model)?.clone();
+    let size = info.input_size;
+    let n = a.get_usize("samples")?.unwrap();
+    let seed = a.get_usize("seed")?.unwrap() as u64;
+
+    let source: Arc<InMemorySource> = if a.req("task")? == "ct" {
+        let (inputs, labels) = ct_dataset(size, info.n_classes.max(2), n, seed);
+        Arc::new(InMemorySource { inputs, targets: labels })
+    } else {
+        let ds = GrfDataset::generate(&GrfConfig { size, seed }, n);
+        Arc::new(InMemorySource { inputs: ds.inputs, targets: ds.targets })
+    };
+
+    let steps = a.get_usize("steps")?.unwrap();
+    let opts = HybridOpts {
+        model,
+        ways: a.get_usize("ways")?.unwrap(),
+        groups: a.get_usize("groups")?.unwrap(),
+        batch_global: a.get_usize("batch")?.unwrap(),
+        steps,
+        seed,
+        schedule: LrSchedule {
+            lr0: a.get_f64("lr")?.unwrap(),
+            floor_frac: 0.01,
+            total_steps: steps,
+        },
+        log_every: (steps / 10).max(1),
+    };
+    let t0 = std::time::Instant::now();
+    let rep = train_hybrid(&rt, &opts, source)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "trained {} for {} steps: loss {:.6} -> {:.6} in {:.1}s \
+         ({:.0} KiB comm, phases: fwd {:.1}s bwd {:.1}s halo {:.2}s ar {:.2}s)",
+        opts.model,
+        steps,
+        rep.records.first().map(|r| r.loss).unwrap_or(f32::NAN),
+        rep.final_loss(),
+        dt,
+        rep.comm_bytes as f64 / 1024.0,
+        rep.phases.fwd_compute,
+        rep.phases.bwd_compute,
+        rep.phases.halo,
+        rep.phases.allreduce,
+    );
+    Ok(())
+}
+
+fn info_cmd() -> Result<()> {
+    let rt = RuntimeHandle::start(&artifacts_dir())?;
+    let man = rt.manifest();
+    println!("artifacts: {} entries, {} models", man.entries.len(), man.models.len());
+    let mut names: Vec<&String> = man.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &man.models[name];
+        let mut ways: Vec<&usize> = m.hybrid.keys().collect();
+        ways.sort();
+        println!(
+            "  {:<12} {:<10} input {:>3}^3  params {:>9}  bn {}  hybrid ways {:?}",
+            name,
+            m.kind,
+            m.input_size,
+            m.param_count(),
+            if m.use_bn { "yes" } else { "no " },
+            ways,
+        );
+    }
+    Ok(())
+}

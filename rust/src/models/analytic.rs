@@ -1,0 +1,407 @@
+//! Paper-scale network analytics: Table I regenerated from first
+//! principles.
+//!
+//! The extended CosmoFlow model (§IV, Table I): 7 convolutions of 3^3
+//! filters over a 4-channel input (the "2019_05_4parE" dataset stores 4
+//! redshifts per universe), `c4` with stride 2, pooling inserted so the
+//! final spatial extent is 2^3 at every input size, and fc layers
+//! 2048-256-4. Verified invariants (tests below):
+//!
+//! * 9.44 M parameters at every input size,
+//! * 55.55 / 443.8 / 3550 GFlop of conv work per sample (fwd+bwd),
+//! * 18.52 / 147.9 / 1183 GFlop forward-only,
+//! * 0.824 / 6.59 / 52.7 GiB activation memory per sample (±10 %).
+
+/// Layer kinds that matter for cost accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Deconv,
+    Pool,
+    BatchNorm,
+    Fc,
+}
+
+/// One layer of a paper-scale model.
+#[derive(Clone, Debug)]
+pub struct AnalyticLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    /// input spatial extent (cubic)
+    pub d_in: usize,
+    /// output spatial extent (cubic)
+    pub d_out: usize,
+}
+
+impl AnalyticLayer {
+    /// Forward FLOPs per sample (multiply-add = 2 flops).
+    pub fn fwd_flops(&self) -> f64 {
+        let vox_out = (self.d_out as f64).powi(3);
+        match self.kind {
+            LayerKind::Conv => {
+                2.0 * (self.k as f64).powi(3) * self.cin as f64 * self.cout as f64
+                    * vox_out
+            }
+            LayerKind::Deconv => {
+                // transposed conv: every input voxel scatters k^3*cout MACs
+                let vox_in = (self.d_in as f64).powi(3);
+                2.0 * (self.k as f64).powi(3) * self.cin as f64 * self.cout as f64
+                    * vox_in
+            }
+            LayerKind::Pool => (self.cin as f64) * vox_out * 8.0,
+            LayerKind::BatchNorm => 4.0 * self.cout as f64 * vox_out,
+            LayerKind::Fc => 2.0 * self.cin as f64 * self.cout as f64,
+        }
+    }
+
+    /// fwd + bwd-data + bwd-filter (the paper's "# conv ops" counts 3x fwd).
+    pub fn total_flops(&self) -> f64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Deconv | LayerKind::Fc => 3.0 * self.fwd_flops(),
+            _ => 2.0 * self.fwd_flops(),
+        }
+    }
+
+    /// Output activation elements per sample.
+    pub fn out_elems(&self) -> f64 {
+        match self.kind {
+            LayerKind::Fc => self.cout as f64,
+            _ => self.cout as f64 * (self.d_out as f64).powi(3),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Deconv => {
+                self.cin * self.cout * self.k * self.k * self.k
+            }
+            LayerKind::BatchNorm => 2 * self.cout,
+            LayerKind::Fc => self.cin * self.cout + self.cout,
+            LayerKind::Pool => 0,
+        }
+    }
+
+    /// Bytes of one depth-halo face under `ways`-way depth partitioning
+    /// (f32; zero if the layer exchanges no halo).
+    pub fn halo_face_bytes(&self, ways: usize) -> f64 {
+        if ways <= 1 || self.kind != LayerKind::Conv || self.k <= 1 {
+            return 0.0;
+        }
+        let halo = (self.k - 1) / 2;
+        4.0 * self.cin as f64 * halo as f64 * (self.d_in as f64).powi(2)
+    }
+}
+
+/// A full analytic model.
+#[derive(Clone, Debug)]
+pub struct AnalyticModel {
+    pub name: String,
+    pub input_size: usize,
+    pub in_channels: usize,
+    pub layers: Vec<AnalyticLayer>,
+}
+
+impl AnalyticModel {
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    pub fn conv_total_gflops(&self) -> f64 {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Deconv))
+            .map(|l| l.total_flops())
+            .sum::<f64>()
+            / 1e9
+    }
+
+    pub fn conv_fwd_gflops(&self) -> f64 {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Deconv))
+            .map(|l| l.fwd_flops())
+            .sum::<f64>()
+            / 1e9
+    }
+
+    /// Activation-memory estimate per sample, bytes: every inter-layer
+    /// tensor is stored once as an activation and once as a gradient, and
+    /// each is registered both as "output of layer i" and "input of layer
+    /// i+1" in the framework's buffer accounting — 4 bytes * 4 *
+    /// sum(out_elems), plus the input tensor itself. Matches Table I
+    /// within ~10 %.
+    pub fn activation_bytes(&self) -> f64 {
+        let input = self.in_channels as f64 * (self.input_size as f64).powi(3);
+        let acts: f64 = self.layers.iter().map(|l| l.out_elems()).sum();
+        4.0 * (input + 4.0 * acts)
+    }
+
+    pub fn activation_gib(&self) -> f64 {
+        self.activation_bytes() / (1u64 << 30) as f64
+    }
+
+    /// Minimum GPUs per sample given a memory capacity (the paper's
+    /// feasibility argument: 512^3 + BN needs >= 8 V100s).
+    pub fn min_gpus_per_sample(&self, gpu_mem_gib: f64, with_bn: bool) -> usize {
+        let need = self.activation_gib() * if with_bn { 2.0 } else { 1.0 };
+        // power-of-two partitioning as in the paper's ways
+        let mut g = 1;
+        while (need / g as f64) > gpu_mem_gib * 0.9 {
+            g *= 2;
+        }
+        g
+    }
+}
+
+/// CosmoFlow at input size `wi` (128 / 256 / 512), per Table I.
+/// `use_bn` appends a batch-norm after every conv (the §IV extension).
+pub fn cosmoflow_paper(wi: usize, use_bn: bool) -> AnalyticModel {
+    let channels = [16usize, 32, 64, 128, 256, 256, 256];
+    // pooling layout per Table I: p_i follows c_i while spatial > 2
+    let mut layers = Vec::new();
+    let mut s = wi;
+    let mut cin = 4; // 4 redshift channels
+    for (i, &c) in channels.iter().enumerate() {
+        let stride = if i == 3 { 2 } else { 1 }; // c4 has stride 2
+        let conv_out = s / stride;
+        layers.push(AnalyticLayer {
+            name: format!("conv{}", i + 1),
+            kind: LayerKind::Conv,
+            cin,
+            cout: c,
+            k: 3,
+            stride,
+            d_in: s,
+            d_out: conv_out,
+        });
+        if use_bn {
+            layers.push(AnalyticLayer {
+                name: format!("bn{}", i + 1),
+                kind: LayerKind::BatchNorm,
+                cin: c,
+                cout: c,
+                k: 0,
+                stride: 1,
+                d_in: conv_out,
+                d_out: conv_out,
+            });
+        }
+        s = conv_out;
+        if s > 2 {
+            layers.push(AnalyticLayer {
+                name: format!("pool{}", i + 1),
+                kind: LayerKind::Pool,
+                cin: c,
+                cout: c,
+                k: 2,
+                stride: 2,
+                d_in: s,
+                d_out: s / 2,
+            });
+            s /= 2;
+        }
+        cin = c;
+    }
+    assert_eq!(s, 2, "CosmoFlow must flatten at 2^3 (wi={wi})");
+    let flat = cin * s * s * s;
+    for (j, &f) in [2048usize, 256, 4].iter().enumerate() {
+        layers.push(AnalyticLayer {
+            name: format!("fc{}", j + 1),
+            kind: LayerKind::Fc,
+            cin: if j == 0 { flat } else { layers.last().unwrap().cout },
+            cout: f,
+            k: 0,
+            stride: 1,
+            d_in: 1,
+            d_out: 1,
+        });
+    }
+    AnalyticModel {
+        name: format!("cosmoflow-{wi}{}", if use_bn { "-bn" } else { "" }),
+        input_size: wi,
+        in_channels: 4,
+        layers,
+    }
+}
+
+/// The original 3D U-Net (Çiçek et al. 2016) at cubic input `wi`
+/// (paper §V uses 256^3, 1 input channel, 3 output classes for LiTS).
+pub fn unet3d_paper(wi: usize, n_classes: usize) -> AnalyticModel {
+    let mut layers = Vec::new();
+    let mut s = wi;
+    fn push_conv(layers: &mut Vec<AnalyticLayer>, name: String, cin: usize,
+                 cout: usize, s: usize) {
+        layers.push(AnalyticLayer {
+            name,
+            kind: LayerKind::Conv,
+            cin,
+            cout,
+            k: 3,
+            stride: 1,
+            d_in: s,
+            d_out: s,
+        });
+        layers.push(AnalyticLayer {
+            name: "bn".into(),
+            kind: LayerKind::BatchNorm,
+            cin: cout,
+            cout,
+            k: 0,
+            stride: 1,
+            d_in: s,
+            d_out: s,
+        });
+    }
+    // analysis path: (32,64) (64,128) (128,256)
+    let downs = [(1usize, 32usize, 64usize), (64, 64, 128), (128, 128, 256)];
+    for (i, &(cin, ca, cb)) in downs.iter().enumerate() {
+        push_conv(&mut layers, format!("down{}a", i), cin, ca, s);
+        push_conv(&mut layers, format!("down{}b", i), ca, cb, s);
+        layers.push(AnalyticLayer {
+            name: format!("pool{}", i),
+            kind: LayerKind::Pool,
+            cin: cb,
+            cout: cb,
+            k: 2,
+            stride: 2,
+            d_in: s,
+            d_out: s / 2,
+        });
+        s /= 2;
+    }
+    push_conv(&mut layers, "bottom_a".into(), 256, 256, s);
+    push_conv(&mut layers, "bottom_b".into(), 256, 512, s);
+    // synthesis path
+    let ups = [(512usize, 512usize, 256usize, 256usize), (256, 256, 128, 128),
+               (128, 128, 64, 64)];
+    for (i, &(cin, cskip_plus, ca, cb)) in ups.iter().enumerate() {
+        layers.push(AnalyticLayer {
+            name: format!("up{}deconv", i),
+            kind: LayerKind::Deconv,
+            cin,
+            cout: cin,
+            k: 2,
+            stride: 2,
+            d_in: s,
+            d_out: s * 2,
+        });
+        s *= 2;
+        push_conv(&mut layers, format!("up{}a", i), cin + cskip_plus / 2, ca, s);
+        push_conv(&mut layers, format!("up{}b", i), ca, cb, s);
+    }
+    layers.push(AnalyticLayer {
+        name: "head".into(),
+        kind: LayerKind::Conv,
+        cin: 64,
+        cout: n_classes,
+        k: 1,
+        stride: 1,
+        d_in: s,
+        d_out: s,
+    });
+    AnalyticModel { name: format!("unet3d-{wi}"), input_size: wi, in_channels: 1, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn within(x: f64, want: f64, tol: f64) -> bool {
+        (x - want).abs() / want <= tol
+    }
+
+    #[test]
+    fn table1_output_widths() {
+        for (wi, wants) in [
+            (128usize, vec![(128, 64), (64, 32), (32, 16), (8, 4), (4, 2), (2, 2), (2, 2)]),
+            (256, vec![(256, 128), (128, 64), (64, 32), (16, 8), (8, 4), (4, 2), (2, 2)]),
+            (512, vec![(512, 256), (256, 128), (128, 64), (32, 16), (16, 8), (8, 4), (4, 2)]),
+        ] {
+            let m = cosmoflow_paper(wi, false);
+            let convs: Vec<&AnalyticLayer> =
+                m.layers.iter().filter(|l| l.kind == LayerKind::Conv).collect();
+            for (i, (conv_out, after_pool)) in wants.iter().enumerate() {
+                assert_eq!(convs[i].d_out, *conv_out, "wi={wi} c{}", i + 1);
+                // after-pool width = next conv's input (or flatten extent)
+                let next_in = convs.get(i + 1).map(|c| c.d_in).unwrap_or(2);
+                assert_eq!(next_in, *after_pool, "wi={wi} p{}", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn table1_param_count() {
+        for wi in [128, 256, 512] {
+            let m = cosmoflow_paper(wi, false);
+            let p = m.param_count() as f64 / 1e6;
+            assert!(within(p, 9.44, 0.005), "wi={wi}: {p} M params");
+        }
+    }
+
+    #[test]
+    fn table1_conv_gflops() {
+        let want_total = [(128, 55.55), (256, 443.8), (512, 3550.0)];
+        let want_fwd = [(128, 18.52), (256, 147.9), (512, 1183.0)];
+        for ((wi, t), (_, f)) in want_total.iter().zip(&want_fwd) {
+            let m = cosmoflow_paper(*wi, false);
+            assert!(within(m.conv_total_gflops(), *t, 0.01),
+                    "wi={wi} total {} vs {t}", m.conv_total_gflops());
+            assert!(within(m.conv_fwd_gflops(), *f, 0.01),
+                    "wi={wi} fwd {} vs {f}", m.conv_fwd_gflops());
+        }
+    }
+
+    #[test]
+    fn table1_memory_estimate() {
+        for (wi, want) in [(128usize, 0.824f64), (256, 6.59), (512, 52.7)] {
+            let m = cosmoflow_paper(wi, false);
+            let got = m.activation_gib();
+            assert!(within(got, want, 0.10), "wi={wi}: {got} GiB vs {want}");
+        }
+    }
+
+    #[test]
+    fn memory_feasibility_matches_paper() {
+        // §IV: 512^3 needs 4 GPUs; with BN memory doubles -> at least 8.
+        let m = cosmoflow_paper(512, false);
+        assert_eq!(m.min_gpus_per_sample(16.0, false), 4);
+        assert_eq!(m.min_gpus_per_sample(16.0, true), 8);
+        // 128^3 fits on one GPU
+        assert_eq!(cosmoflow_paper(128, false).min_gpus_per_sample(16.0, false), 1);
+    }
+
+    #[test]
+    fn bn_variant_adds_only_bn_params() {
+        let a = cosmoflow_paper(512, false).param_count();
+        let b = cosmoflow_paper(512, true).param_count();
+        assert_eq!(b - a, 2 * (16 + 32 + 64 + 128 + 256 + 256 + 256));
+    }
+
+    #[test]
+    fn unet_structure() {
+        let m = unet3d_paper(256, 3);
+        // U-Net memory at 256^3 exceeds CosmoFlow at 256^3 by a lot (§II-C)
+        let cf = cosmoflow_paper(256, false);
+        assert!(m.activation_gib() > 3.0 * cf.activation_gib(),
+                "unet {} vs cf {}", m.activation_gib(), cf.activation_gib());
+        // symmetric: ends at full resolution
+        assert_eq!(m.layers.last().unwrap().d_out, 256);
+        assert_eq!(m.layers.last().unwrap().cout, 3);
+        // §V-B: 256^3 U-Net needs at least 16 GPUs per sample
+        assert!(m.min_gpus_per_sample(16.0, false) >= 16,
+                "min gpus {}", m.min_gpus_per_sample(16.0, false));
+    }
+
+    #[test]
+    fn halo_bytes_sane() {
+        let m = cosmoflow_paper(512, false);
+        let c1 = &m.layers[0];
+        // conv1 halo face: 4 ch * 1 plane * 512^2 * 4 B = 4 MiB
+        assert_eq!(c1.halo_face_bytes(8), 4.0 * 512.0 * 512.0 * 4.0);
+        assert_eq!(c1.halo_face_bytes(1), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Network definitions and analytics.
+//!
+//! [`analytic`] holds the *paper-scale* architectures (CosmoFlow at
+//! 128^3/256^3/512^3 exactly as Table I, and the original 3D U-Net at
+//! 256^3) with per-layer FLOP, activation-memory and halo-volume
+//! accounting. These drive Table I/II and feed the §III-C performance
+//! model; they are never compiled to HLO.
+//!
+//! The miniaturized *functional* models executed by the engine are defined
+//! once in `python/compile/model.py` and arrive here through the AOT
+//! manifest ([`crate::runtime::ModelInfo`]).
+
+pub mod analytic;
+
+pub use analytic::{cosmoflow_paper, unet3d_paper, AnalyticLayer, AnalyticModel, LayerKind};

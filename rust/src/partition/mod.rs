@@ -1,0 +1,252 @@
+//! Process topology and spatial partitioning.
+//!
+//! The paper's notation (§III): with `G` total GPUs and a `D×H×W`-way
+//! spatial split, the GPUs form `G / (D·H·W)` *sample groups*; each group
+//! holds one sample, partitioned in the spatial dims, and groups advance
+//! the mini-batch in data-parallel fashion ("hybrid parallelism").
+//!
+//! The functional engine uses depth-only splits ([`Topology`]); the
+//! performance model and simulator use the general grid ([`Grid4`]).
+
+use anyhow::{bail, Result};
+
+/// Hybrid topology: `groups x d_ways` ranks; group = data-parallel index,
+/// position = depth-shard index within the sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub groups: usize,
+    pub d_ways: usize,
+}
+
+impl Topology {
+    pub fn new(groups: usize, d_ways: usize) -> Topology {
+        assert!(groups > 0 && d_ways > 0);
+        Topology { groups, d_ways }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.groups * self.d_ways
+    }
+
+    /// Rank layout: group-major (`rank = group * d_ways + pos`), matching
+    /// the paper's node-packing (Figure 2: the 4 GPUs of a node hold
+    /// adjacent shards of one sample, so halo exchange prefers NVLink).
+    pub fn rank_of(&self, group: usize, pos: usize) -> usize {
+        debug_assert!(group < self.groups && pos < self.d_ways);
+        group * self.d_ways + pos
+    }
+
+    pub fn coords_of(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.world_size());
+        (rank / self.d_ways, rank % self.d_ways)
+    }
+
+    /// Neighbour toward lower depth (pos-1) if any.
+    pub fn up(&self, rank: usize) -> Option<usize> {
+        let (g, p) = self.coords_of(rank);
+        (p > 0).then(|| self.rank_of(g, p - 1))
+    }
+
+    /// Neighbour toward higher depth (pos+1) if any.
+    pub fn down(&self, rank: usize) -> Option<usize> {
+        let (g, p) = self.coords_of(rank);
+        (p + 1 < self.d_ways).then(|| self.rank_of(g, p + 1))
+    }
+
+    /// Ranks of one sample group.
+    pub fn group_ranks(&self, group: usize) -> Vec<usize> {
+        (0..self.d_ways).map(|p| self.rank_of(group, p)).collect()
+    }
+
+    /// Ranks holding the same shard position across groups (the BN /
+    /// gradient allreduce never needs this split, but the data store does).
+    pub fn position_ranks(&self, pos: usize) -> Vec<usize> {
+        (0..self.groups).map(|g| self.rank_of(g, pos)).collect()
+    }
+}
+
+/// An even depth partition of `d` planes over `ways` shards.
+#[derive(Clone, Copy, Debug)]
+pub struct DepthPartition {
+    pub d: usize,
+    pub ways: usize,
+}
+
+impl DepthPartition {
+    /// The engine requires even splits (the AOT shard executables are
+    /// lowered at a single shard shape).
+    pub fn new_even(d: usize, ways: usize) -> Result<DepthPartition> {
+        if ways == 0 || d % ways != 0 {
+            bail!("depth {d} not divisible by {ways} ways");
+        }
+        Ok(DepthPartition { d, ways })
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.d / self.ways
+    }
+
+    pub fn shard_start(&self, pos: usize) -> usize {
+        debug_assert!(pos < self.ways);
+        pos * self.shard_len()
+    }
+
+    /// Global depth range [start, end) of shard `pos`.
+    pub fn range(&self, pos: usize) -> (usize, usize) {
+        let s = self.shard_start(pos);
+        (s, s + self.shard_len())
+    }
+}
+
+/// General `N x D x H x W`-way decomposition used by the performance model
+/// and the cluster simulator (the paper's Figs. 4/7/8 sweep these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid4 {
+    pub n: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Grid4 {
+    pub fn depth_only(n: usize, d: usize) -> Grid4 {
+        Grid4 { n, d, h: 1, w: 1 }
+    }
+
+    pub fn spatial_ways(&self) -> usize {
+        self.d * self.h * self.w
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.n * self.spatial_ways()
+    }
+
+    /// Shard extents (ceil-split) of a global (D, H, W) volume.
+    pub fn shard_extent(&self, vol: (usize, usize, usize)) -> (usize, usize, usize) {
+        (div_ceil(vol.0, self.d), div_ceil(vol.1, self.h), div_ceil(vol.2, self.w))
+    }
+
+    /// Per-spatial-dim halo *face* areas (elements) for a k^3 stride-1 conv
+    /// on a (D, H, W) shard of `c` channels: one face per partitioned dim
+    /// side. Dims that are not partitioned contribute no halo.
+    pub fn halo_faces(&self, c: usize, vol: (usize, usize, usize), k: usize)
+                      -> [usize; 3] {
+        let (sd, sh, sw) = self.shard_extent(vol);
+        let halo = (k - 1) / 2;
+        [
+            if self.d > 1 { c * halo * sh * sw } else { 0 },
+            if self.h > 1 { c * halo * sd * sw } else { 0 },
+            if self.w > 1 { c * halo * sd * sh } else { 0 },
+        ]
+    }
+}
+
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let t = Topology::new(4, 8);
+        assert_eq!(t.world_size(), 32);
+        for r in 0..t.world_size() {
+            let (g, p) = t.coords_of(r);
+            assert_eq!(t.rank_of(g, p), r);
+        }
+    }
+
+    #[test]
+    fn neighbours() {
+        let t = Topology::new(2, 4);
+        let r = t.rank_of(1, 0);
+        assert_eq!(t.up(r), None);
+        assert_eq!(t.down(r), Some(t.rank_of(1, 1)));
+        let r = t.rank_of(1, 3);
+        assert_eq!(t.down(r), None);
+        assert_eq!(t.up(r), Some(t.rank_of(1, 2)));
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        let t = Topology::new(3, 4);
+        let mut seen = vec![false; t.world_size()];
+        for g in 0..t.groups {
+            for r in t.group_ranks(g) {
+                assert!(!seen[r], "rank {r} in two groups");
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn depth_partition_covers() {
+        let p = DepthPartition::new_even(64, 4).unwrap();
+        assert_eq!(p.shard_len(), 16);
+        let mut end = 0;
+        for pos in 0..4 {
+            let (s, e) = p.range(pos);
+            assert_eq!(s, end);
+            end = e;
+        }
+        assert_eq!(end, 64);
+        assert!(DepthPartition::new_even(10, 4).is_err());
+    }
+
+    #[test]
+    fn grid4_shards_and_halos() {
+        let g = Grid4 { n: 2, d: 4, h: 2, w: 1 };
+        assert_eq!(g.world_size(), 16);
+        assert_eq!(g.shard_extent((512, 512, 512)), (128, 256, 512));
+        let faces = g.halo_faces(16, (512, 512, 512), 3);
+        assert_eq!(faces, [16 * 1 * 256 * 512, 16 * 1 * 128 * 512, 0]);
+    }
+
+    #[test]
+    fn prop_topology_bijection() {
+        prop::check("topology-bijection", 100, |g| {
+            let groups = g.usize_in(1, 16);
+            let ways = g.pow2_in(1, 32);
+            let t = Topology::new(groups, ways);
+            for r in 0..t.world_size() {
+                let (gr, p) = t.coords_of(r);
+                if t.rank_of(gr, p) != r {
+                    return Err(format!("rank {r} not stable"));
+                }
+                // neighbour symmetry: down(up(r)) == r
+                if let Some(u) = t.up(r) {
+                    if t.down(u) != Some(r) {
+                        return Err(format!("asym neighbours at {r}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_depth_partition_exact_cover() {
+        prop::check("depth-cover", 100, |g| {
+            let ways = g.pow2_in(1, 16);
+            let d = ways * g.usize_in(1, 32);
+            let p = DepthPartition::new_even(d, ways).map_err(|e| e.to_string())?;
+            let mut covered = vec![0u8; d];
+            for pos in 0..ways {
+                let (s, e) = p.range(pos);
+                for i in s..e {
+                    covered[i] += 1;
+                }
+            }
+            if covered.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err("not an exact cover".into())
+            }
+        });
+    }
+}

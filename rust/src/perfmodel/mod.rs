@@ -1,0 +1,375 @@
+//! The §III-C performance model.
+//!
+//! Predicts per-iteration training time for a (model, partitioning,
+//! mini-batch, cluster) configuration:
+//!
+//! ```text
+//! FP_l  = max{ Comp_l(D_main), Σ_d 2 SR(D_halo_d) } + Comp_l(D_halo)
+//! Cost  = Σ_l FP_l + max{ Σ_l (BD_l + BF_l), Σ_l AR(θ_l) }
+//! ```
+//!
+//! `Comp_l` comes from a calibrated V100/cuDNN kernel cost model
+//! ([`KernelModel`] — the paper benchmarks cuDNN directly; we encode the
+//! same efficiency structure: peak fraction degraded by narrow channels,
+//! small extents, and thin non-cube shards, the effect the paper blames
+//! for the 1.66x speedup at 2x GPUs in §V-B). `SR` is a linear latency +
+//! bandwidth link model fitted the way the paper fits Aluminum ping-pong
+//! benchmarks; `AR` is the standard ring-allreduce model over the
+//! bottleneck link.
+
+pub mod scaling;
+
+use crate::config::ClusterConfig;
+use crate::models::{AnalyticLayer, AnalyticModel, LayerKind};
+use crate::partition::Grid4;
+use crate::util::stats::linreg;
+
+/// Link kinds on the simulated cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Link {
+    NvLink,
+    InfiniBand,
+}
+
+/// Linear point-to-point model t(bytes) = alpha + bytes / bw.
+#[derive(Clone, Copy, Debug)]
+pub struct SrModel {
+    pub alpha_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl SrModel {
+    pub fn from_cluster(cluster: &ClusterConfig, link: Link) -> SrModel {
+        match link {
+            Link::NvLink => SrModel {
+                alpha_s: cluster.nvlink_latency_us * 1e-6,
+                bytes_per_s: cluster.nvlink_gbps * 1e9,
+            },
+            Link::InfiniBand => SrModel {
+                alpha_s: cluster.ib_latency_us * 1e-6,
+                bytes_per_s: cluster.ib_gbps * 1e9,
+            },
+        }
+    }
+
+    pub fn time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            0.0
+        } else {
+            self.alpha_s + bytes / self.bytes_per_s
+        }
+    }
+
+    /// Fit from (bytes, seconds) measurements — the paper's methodology
+    /// (linear regression over Aluminum ping-pong data).
+    pub fn fit(bytes: &[f64], secs: &[f64]) -> SrModel {
+        let (a, b, _r2) = linreg(bytes, secs);
+        SrModel { alpha_s: a.max(0.0), bytes_per_s: if b > 0.0 { 1.0 / b } else { f64::MAX } }
+    }
+}
+
+/// NCCL-style allreduce over `n` ranks: hierarchical/tree latency
+/// (O(log n) startup, as the paper's log-transformed regression captures)
+/// plus the ring bandwidth term 2(n-1)/n * bytes / bw.
+pub fn allreduce_time(bytes: f64, n: usize, link: &SrModel) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let lat = 2.0 * (n as f64).log2().ceil() * link.alpha_s;
+    let bw = 2.0 * (n as f64 - 1.0) / n as f64 * bytes / link.bytes_per_s;
+    lat + bw
+}
+
+/// Calibrated per-GPU kernel cost model (V100, cuDNN-like efficiency).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelModel {
+    pub peak_flops: f64,
+    /// HBM stream bandwidth for pointwise/pooling layers
+    pub mem_bps: f64,
+    /// base fraction of peak dense conv achieves
+    pub conv_eff: f64,
+}
+
+impl KernelModel {
+    pub fn v100(cluster: &ClusterConfig) -> KernelModel {
+        KernelModel {
+            peak_flops: cluster.gpu_tflops * 1e12,
+            mem_bps: 900e9 * 0.75,
+            conv_eff: 0.30,
+        }
+    }
+
+    /// Effective conv efficiency for a shard of `cin` input channels, local
+    /// depth extent `dsh` (output planes this GPU computes) and full
+    /// H-extent `ext`. Encodes the paper's observations: narrow channels
+    /// (conv1) and thin non-cube domains under-utilize cuDNN kernels.
+    fn conv_shard_eff(&self, cin: usize, dsh: usize, ext: usize) -> f64 {
+        let f_cin = (cin as f64 / (cin as f64 + 2.0)).powf(0.35);
+        // thin-slab penalty: cuDNN's 3D kernels lose efficiency as the
+        // local depth extent shrinks below a few tens of planes (the paper
+        // blames exactly this for the 1.66x speedup at 2x GPUs, §V-B).
+        let f_thin = dsh as f64 / (dsh as f64 + 10.0);
+        let f_small = if ext < 8 { 0.4 } else { 1.0 };
+        self.conv_eff * f_cin * f_thin * f_small
+    }
+
+    /// Forward-pass compute time of layer `l` on one GPU holding `1/ways`
+    /// of the depth (no communication).
+    pub fn comp_fwd(&self, l: &AnalyticLayer, ways: usize) -> f64 {
+        let frac = 1.0 / ways as f64;
+        match l.kind {
+            LayerKind::Conv | LayerKind::Deconv => {
+                let dsh = (l.d_out / ways).max(1);
+                l.fwd_flops() * frac
+                    / (self.peak_flops * self.conv_shard_eff(l.cin, dsh, l.d_out))
+            }
+            LayerKind::Pool | LayerKind::BatchNorm => {
+                // bandwidth-bound: read + write the shard
+                let bytes = 8.0 * l.out_elems() * frac;
+                bytes / self.mem_bps
+            }
+            LayerKind::Fc => l.fwd_flops() / (self.peak_flops * 0.10),
+        }
+    }
+}
+
+/// The full §III-C model for one configuration.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub kernel: KernelModel,
+    pub nvlink: SrModel,
+    pub ib: SrModel,
+    pub gpus_per_node: usize,
+}
+
+/// Per-layer predicted times (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct LayerCost {
+    pub name: String,
+    pub fp: f64,
+    pub bd: f64,
+    pub bf: f64,
+    pub halo: f64,
+    pub comp_fwd: f64,
+}
+
+/// End-to-end prediction for one iteration.
+#[derive(Clone, Debug)]
+pub struct IterCost {
+    pub layers: Vec<LayerCost>,
+    pub fwd: f64,
+    pub bwd: f64,
+    pub allreduce: f64,
+    /// allreduce overlaps backward (paper Fig. 6): iteration = fwd +
+    /// max(bwd, allreduce)
+    pub total: f64,
+    /// kernel-only (communication-free) total — Table II's "Peak"
+    pub kernel_only: f64,
+    pub samples_per_s: f64,
+    pub feasible: bool,
+}
+
+impl PerfModel {
+    pub fn new(cluster: &ClusterConfig) -> PerfModel {
+        PerfModel {
+            kernel: KernelModel::v100(cluster),
+            nvlink: SrModel::from_cluster(cluster, Link::NvLink),
+            ib: SrModel::from_cluster(cluster, Link::InfiniBand),
+            gpus_per_node: cluster.gpus_per_node,
+        }
+    }
+
+    /// Halo link for a `ways`-way depth split: shards are packed onto
+    /// nodes in depth order (paper Fig. 2), so splits within a node ride
+    /// NVLink; wider splits bottleneck on InfiniBand.
+    fn halo_link(&self, ways: usize) -> &SrModel {
+        if ways <= self.gpus_per_node {
+            &self.nvlink
+        } else {
+            &self.ib
+        }
+    }
+
+    /// One training iteration of `model` under `grid` with global
+    /// mini-batch `n` on a `gpu_mem_gib`-limited device.
+    pub fn iteration(&self, model: &AnalyticModel, grid: Grid4, n: usize,
+                     gpu_mem_gib: f64) -> IterCost {
+        let ways = grid.spatial_ways();
+        let groups = grid.n.max(1);
+        let world = grid.world_size();
+        let samples_per_group = (n as f64 / groups as f64).max(1.0);
+        let mem_per_gpu = model.activation_gib() / ways as f64;
+        let feasible = mem_per_gpu <= gpu_mem_gib * 0.95;
+
+        let mut layers = Vec::new();
+        let (mut fwd, mut bwd, mut kernel_only) = (0.0f64, 0.0f64, 0.0f64);
+        let mut ar_total = 0.0f64;
+        for l in &model.layers {
+            let comp = self.kernel.comp_fwd(l, ways);
+            // halo: one face each side, overlapped with main compute
+            let face = l.halo_face_bytes(ways);
+            let sr = self.halo_link(ways).time(face);
+            let halo_frac = if l.kind == LayerKind::Conv && ways > 1 && l.k > 1 {
+                (l.k - 1) as f64 / (l.d_in as f64 / ways as f64 + (l.k - 1) as f64)
+            } else {
+                0.0
+            };
+            let comp_halo = comp * halo_frac;
+            let fp = comp.max(2.0 * sr) + comp_halo;
+            // backward-data and backward-filter each cost ~one forward conv
+            let (bd, bf) = match l.kind {
+                LayerKind::Conv | LayerKind::Deconv | LayerKind::Fc => {
+                    (comp.max(2.0 * sr) + comp_halo, comp)
+                }
+                _ => (comp, 0.0),
+            };
+            // parameter-gradient allreduce over all GPUs (ring on the
+            // bottleneck link once the job spans nodes)
+            let link = if world <= self.gpus_per_node { &self.nvlink } else { &self.ib };
+            ar_total += allreduce_time(4.0 * l.param_count() as f64, world, link);
+            fwd += fp * samples_per_group;
+            bwd += (bd + bf) * samples_per_group;
+            kernel_only += (comp + bd.min(comp + comp_halo) + bf) * samples_per_group;
+            layers.push(LayerCost {
+                name: l.name.clone(),
+                fp: fp * samples_per_group,
+                bd: bd * samples_per_group,
+                bf: bf * samples_per_group,
+                halo: 2.0 * sr * samples_per_group,
+                comp_fwd: comp * samples_per_group,
+            });
+        }
+        let total = fwd + bwd.max(ar_total);
+        IterCost {
+            layers,
+            fwd,
+            bwd,
+            allreduce: ar_total,
+            total,
+            kernel_only,
+            samples_per_s: n as f64 / total,
+            feasible,
+        }
+    }
+
+    /// Conv-layers-only achieved-vs-peak ratio (Table II's "Rel" column):
+    /// kernel-only conv time / conv time including halo overheads.
+    pub fn conv_rel_to_peak(&self, model: &AnalyticModel, grid: Grid4, n: usize,
+                            conv_name: Option<&str>) -> f64 {
+        let it = self.iteration(model, grid, n, f64::MAX);
+        let sel = |lc: &&LayerCost| {
+            lc.name.starts_with("conv")
+                && conv_name.map(|c| lc.name == c).unwrap_or(true)
+        };
+        let with: f64 = it.layers.iter().filter(sel).map(|l| l.fp + l.bd + l.bf).sum();
+        let kernel: f64 = it
+            .layers
+            .iter()
+            .filter(sel)
+            .map(|l| 3.0 * l.comp_fwd)
+            .sum();
+        kernel / with
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::cosmoflow_paper;
+
+    fn pm() -> PerfModel {
+        PerfModel::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn sr_fit_recovers_line() {
+        let truth = SrModel { alpha_s: 3e-6, bytes_per_s: 50e9 };
+        let bytes: Vec<f64> = (1..20).map(|i| i as f64 * 1e6).collect();
+        let secs: Vec<f64> = bytes.iter().map(|&b| truth.time(b)).collect();
+        let fit = SrModel::fit(&bytes, &secs);
+        assert!((fit.alpha_s - truth.alpha_s).abs() < 1e-7);
+        assert!((fit.bytes_per_s - truth.bytes_per_s).abs() / truth.bytes_per_s < 0.01);
+    }
+
+    #[test]
+    fn allreduce_scales_with_ranks_and_bytes() {
+        let link = SrModel { alpha_s: 4e-6, bytes_per_s: 21e9 };
+        let t1 = allreduce_time(37.8e6, 512, &link);
+        let t2 = allreduce_time(37.8e6, 2048, &link);
+        assert!(t2 > t1); // latency term grows
+        assert!(allreduce_time(0.0, 512, &link) == 0.0);
+        assert!(allreduce_time(1e6, 1, &link) == 0.0);
+    }
+
+    /// Strong scaling of the 512^3 model, N=64: going 512 -> 2048 GPUs
+    /// (8-way -> 32-way) must land near the paper's 1.77x.
+    #[test]
+    fn fig4_headline_speedup() {
+        let m = cosmoflow_paper(512, false);
+        let p = pm();
+        let t8 = p.iteration(&m, Grid4::depth_only(64, 8), 64, 16.0);
+        let t32 = p.iteration(&m, Grid4::depth_only(64, 32), 64, 16.0);
+        let speedup = t8.total / t32.total;
+        assert!(
+            (1.4..2.6).contains(&speedup),
+            "512->2048 GPU speedup {speedup:.2} (paper: 1.77x)"
+        );
+        assert!(t8.feasible && t32.feasible);
+    }
+
+    /// N=16: 128 -> 512 GPUs speedup near the paper's 1.98x.
+    #[test]
+    fn fig4_n16_speedup() {
+        let m = cosmoflow_paper(512, false);
+        let p = pm();
+        let a = p.iteration(&m, Grid4::depth_only(16, 8), 16, 16.0);
+        let b = p.iteration(&m, Grid4::depth_only(16, 32), 16, 16.0);
+        let s = a.total / b.total;
+        assert!((1.4..2.9).contains(&s), "{s:.2} (paper: 1.98x)");
+    }
+
+    /// Table II structure: achieved/peak ratio decreases with more ways,
+    /// conv1 (narrow channels) scales worse than the full network.
+    #[test]
+    fn table2_rel_to_peak_structure() {
+        let m = cosmoflow_paper(512, false);
+        let p = pm();
+        let all8 = p.conv_rel_to_peak(&m, Grid4::depth_only(64, 8), 64, None);
+        let all32 = p.conv_rel_to_peak(&m, Grid4::depth_only(64, 32), 64, None);
+        let c1_8 = p.conv_rel_to_peak(&m, Grid4::depth_only(64, 8), 64, Some("conv1"));
+        let c1_32 = p.conv_rel_to_peak(&m, Grid4::depth_only(64, 32), 64, Some("conv1"));
+        assert!(all8 > 0.88 && all8 <= 1.0, "8-way rel {all8} (paper 95.6%)");
+        assert!(all32 < all8, "rel must drop with ways: {all8} -> {all32}");
+        assert!((0.55..0.95).contains(&all32), "32-way rel {all32} (paper 82.4%)");
+        assert!(c1_32 < c1_8, "conv1 rel: {c1_8} -> {c1_32} (paper 93.8 -> 64.7)");
+    }
+
+    /// Memory feasibility drives the minimum ways (Fig. 4 has no 4-way
+    /// bars for 512^3 + BN).
+    #[test]
+    fn infeasible_configs_flagged() {
+        let m = cosmoflow_paper(512, true); // with BN: x2 memory modeled via bn layers
+        let p = pm();
+        let it = p.iteration(&m, Grid4::depth_only(1, 4), 1, 16.0);
+        assert!(!it.feasible, "512^3+BN on 4 GPUs must be infeasible");
+        let it8 = p.iteration(&m, Grid4::depth_only(1, 8), 1, 16.0);
+        assert!(it8.feasible);
+    }
+
+    /// conv1 dominates runtime (§V-B: "conv1 accounts for almost half").
+    #[test]
+    fn conv1_dominates() {
+        let m = cosmoflow_paper(512, false);
+        let p = pm();
+        let it = p.iteration(&m, Grid4::depth_only(64, 8), 64, 16.0);
+        let conv1 = it.layers.iter().find(|l| l.name == "conv1").unwrap();
+        let conv_total: f64 = it
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("conv"))
+            .map(|l| l.fp + l.bd + l.bf)
+            .sum();
+        let frac = (conv1.fp + conv1.bd + conv1.bf) / conv_total;
+        assert!((0.3..0.7).contains(&frac), "conv1 fraction {frac}");
+    }
+}

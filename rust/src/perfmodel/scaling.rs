@@ -1,0 +1,170 @@
+//! Scaling sweeps: the data series behind Figs. 4, 5, 7 and 8.
+
+use super::PerfModel;
+use crate::config::ClusterConfig;
+use crate::iosim::pfs::Pfs;
+use crate::iosim::pipeline::{io_time_per_iter, iteration_time, overlaps, IoStrategy};
+use crate::models::AnalyticModel;
+use crate::partition::Grid4;
+
+/// One point of a scaling curve.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub gpus: usize,
+    pub ways: usize,
+    pub n: usize,
+    pub iter_s: f64,
+    pub model_iter_s: f64, // the §III-C prediction (shaded bars in Fig. 4)
+    pub samples_per_s: f64,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub io_s: f64,
+    pub feasible: bool,
+}
+
+/// Strong scaling (Fig. 4 / Fig. 7): fixed global mini-batch `n`, growing
+/// spatial ways. `io` selects the ingestion strategy (Fig. 5 uses
+/// `SampleParallelCached`).
+pub fn strong_scaling(
+    model: &AnalyticModel,
+    cluster: &ClusterConfig,
+    n: usize,
+    ways_list: &[usize],
+    io: IoStrategy,
+) -> Vec<ScalePoint> {
+    let pm = PerfModel::new(cluster);
+    let pfs = Pfs::default();
+    let sample_bytes = 4.0 * model.in_channels as f64
+        * (model.input_size as f64).powi(3);
+    ways_list
+        .iter()
+        .map(|&ways| {
+            let grid = Grid4::depth_only(n, ways);
+            let it = pm.iteration(model, grid, n, cluster.gpu_mem_gib);
+            let io_s = io_time_per_iter(io, &pfs, cluster, sample_bytes, n, ways);
+            let iter_s = iteration_time(it.total, io_s, overlaps(io));
+            ScalePoint {
+                gpus: grid.world_size(),
+                ways,
+                n,
+                iter_s,
+                model_iter_s: it.total,
+                samples_per_s: n as f64 / iter_s,
+                fwd_s: it.fwd,
+                bwd_s: it.bwd.max(it.allreduce),
+                io_s,
+                feasible: it.feasible,
+            }
+        })
+        .collect()
+}
+
+/// Weak scaling (Fig. 8): fixed per-group batch, growing group count at a
+/// fixed spatial partitioning.
+pub fn weak_scaling(
+    model: &AnalyticModel,
+    cluster: &ClusterConfig,
+    ways: usize,
+    groups_list: &[usize],
+    per_group_batch: usize,
+) -> Vec<ScalePoint> {
+    let pm = PerfModel::new(cluster);
+    groups_list
+        .iter()
+        .map(|&groups| {
+            let n = groups * per_group_batch;
+            let grid = Grid4 { n: groups, d: ways, h: 1, w: 1 };
+            let it = pm.iteration(model, grid, n, cluster.gpu_mem_gib);
+            ScalePoint {
+                gpus: grid.world_size(),
+                ways,
+                n,
+                iter_s: it.total,
+                model_iter_s: it.total,
+                samples_per_s: it.samples_per_s,
+                fwd_s: it.fwd,
+                bwd_s: it.bwd.max(it.allreduce),
+                io_s: 0.0,
+                feasible: it.feasible,
+            }
+        })
+        .collect()
+}
+
+/// Throughput speedup of the last point relative to the first.
+pub fn speedup(points: &[ScalePoint]) -> f64 {
+    points.last().unwrap().samples_per_s / points[0].samples_per_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::cosmoflow_paper;
+
+    /// Fig. 5: with sample-parallel I/O, strong scaling stalls — iteration
+    /// time barely improves with 4x GPUs; with spatially-parallel I/O it
+    /// keeps scaling.
+    #[test]
+    fn fig5_io_ablation() {
+        let m = cosmoflow_paper(512, false);
+        let cl = ClusterConfig::default();
+        let bad = strong_scaling(&m, &cl, 64, &[8, 16, 32], IoStrategy::SampleParallelCached);
+        let good = strong_scaling(&m, &cl, 64, &[8, 16, 32], IoStrategy::SpatialParallel);
+        let bad_speedup = speedup(&bad);
+        let good_speedup = speedup(&good);
+        assert!(good_speedup > 1.9, "spatial-parallel speedup {good_speedup}");
+        assert!(
+            bad_speedup < 0.75 * good_speedup,
+            "sample-parallel I/O should stall scaling: {bad_speedup} vs {good_speedup}"
+        );
+        // I/O is fully overlapped in the good pipeline at this scale
+        for p in &good {
+            assert!(p.io_s < p.model_iter_s, "io visible at {} ways", p.ways);
+        }
+    }
+
+    /// Fig. 8 (128^3, pure data parallel): near-linear weak scaling —
+    /// paper reports 65.4x on 512 GPUs over 4.
+    #[test]
+    fn fig8_weak_scaling_dataparallel() {
+        let m = cosmoflow_paper(128, false);
+        let cl = ClusterConfig::default();
+        let pts = weak_scaling(&m, &cl, 1, &[4, 16, 64, 128, 512], 8);
+        let s = speedup(&pts);
+        assert!((50.0..129.0).contains(&s), "weak scaling 4->512 GPUs: {s:.1}x");
+        // hybrid configs trade throughput for memory (paper: "increasing
+        // spatial parallelism results in lower throughput")
+        let hybrid = weak_scaling(&m, &cl, 4, &[1, 4, 16, 32, 128], 8);
+        assert!(hybrid[4].samples_per_s < pts[4].samples_per_s);
+    }
+
+    /// Fig. 8 (512^3): weak scaling at 8/16/32-way to 2048 GPUs — the
+    /// paper reports 147x / 71x / 37x over the 1-group baselines.
+    #[test]
+    fn fig8_weak_scaling_512() {
+        let m = cosmoflow_paper(512, false);
+        let cl = ClusterConfig::default();
+        for (ways, max_groups, paper) in [(8usize, 256usize, 147.3), (16, 128, 71.3), (32, 64, 37.2)] {
+            let pts = weak_scaling(&m, &cl, ways, &[1, max_groups], 1);
+            let s = speedup(&pts);
+            // qualitative: close to linear in groups, within a wide band of
+            // the paper's number
+            assert!(
+                s > 0.35 * max_groups as f64 && s <= 1.02 * max_groups as f64,
+                "{ways}-way: {s:.1}x vs paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn strong_scaling_monotone_until_overdecomposed() {
+        let m = cosmoflow_paper(512, false);
+        let cl = ClusterConfig::default();
+        let pts = strong_scaling(&m, &cl, 4, &[4, 8, 16, 32, 64], IoStrategy::SpatialParallel);
+        // throughput improves early, then flattens/drops when shards get thin
+        assert!(pts[1].samples_per_s > pts[0].samples_per_s);
+        let gain_late = pts[4].samples_per_s / pts[3].samples_per_s;
+        let gain_early = pts[1].samples_per_s / pts[0].samples_per_s;
+        assert!(gain_late < gain_early, "over-decomposition must bite: {gain_early} vs {gain_late}");
+    }
+}

@@ -1,0 +1,373 @@
+//! Typed view of `artifacts/manifest.json` — the single source of truth
+//! shared between the Python AOT compiler and the Rust engine.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT executable: HLO file + its signature.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Fused whole-model executables of one model.
+#[derive(Clone, Debug)]
+pub struct FusedInfo {
+    pub train_step: String,
+    pub predict: String,
+    /// per-call batch the fused graphs were lowered at
+    pub batch: usize,
+    pub n_masks: usize,
+    pub n_bn: usize,
+}
+
+/// A layer of the (hybrid) execution plan. Entry-name fields are `None` in
+/// the generic plan and populated in per-ways hybrid plans.
+#[derive(Clone, Debug)]
+pub enum LayerDesc {
+    Conv {
+        tag: String,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        d: usize,
+        h: usize,
+        w: usize,
+        halo: usize,
+        fwd: Option<String>,
+        bwd_data: Option<String>,
+        bwd_filter: Option<String>,
+    },
+    Deconv {
+        tag: String,
+        cin: usize,
+        cout: usize,
+        d: usize,
+        h: usize,
+        w: usize,
+        fwd: Option<String>,
+        bwd_data: Option<String>,
+        bwd_filter: Option<String>,
+    },
+    Pool {
+        op: String,
+        c: usize,
+        d: usize,
+        h: usize,
+        w: usize,
+        fwd: Option<String>,
+        bwd: Option<String>,
+    },
+    Bn {
+        tag: String,
+        c: usize,
+        d: usize,
+        h: usize,
+        w: usize,
+        apply: Option<String>,
+        bwd_partials: Option<String>,
+        bwd_apply: Option<String>,
+    },
+    Act { c: usize, d: usize, h: usize, w: usize },
+    Flatten { c: usize, d: usize, h: usize, w: usize },
+    SaveSkip { slot: usize, c: usize, d: usize, h: usize, w: usize },
+    ConcatSkip { slot: usize, c_skip: usize, c_up: usize, d: usize, h: usize, w: usize },
+    Fc {
+        tag: String,
+        fin: usize,
+        fout: usize,
+        act: bool,
+        dropout: bool,
+        fwd: Option<String>,
+        bwd: Option<String>,
+    },
+    Mse { n: usize, fwd_bwd: Option<String> },
+    Xent { n_classes: usize, d: usize, h: usize, w: usize, fwd_bwd: Option<String> },
+}
+
+/// One model's metadata.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String, // "cosmoflow" | "unet"
+    pub input_size: usize,
+    pub in_channels: usize,
+    pub use_bn: bool,
+    /// ordered (name, shape) — grads in train_step mirror this order
+    pub params: Vec<(String, Vec<usize>)>,
+    pub bn_layers: Vec<String>,
+    pub plan: Vec<LayerDesc>,
+    pub fused: FusedInfo,
+    /// ways -> plan with executable entry names
+    pub hybrid: HashMap<usize, Vec<LayerDesc>>,
+    pub n_targets: usize,
+    pub n_classes: usize,
+    pub dropout_keep: f64,
+}
+
+impl ModelInfo {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|(n, _)| n == name)
+    }
+
+    /// BN channel widths in forward order.
+    pub fn bn_channels(&self) -> Vec<usize> {
+        self.bn_layers
+            .iter()
+            .map(|l| {
+                self.params
+                    .iter()
+                    .find(|(n, _)| *n == format!("{l}.gamma"))
+                    .map(|(_, s)| s[0])
+                    .expect("bn layer without gamma")
+            })
+            .collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, Entry>,
+    pub models: HashMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = Json::parse_file(&dir.join("manifest.json"))?;
+        if v.req("version")?.as_usize()? != 1 {
+            bail!("unsupported manifest version");
+        }
+        let mut entries = HashMap::new();
+        for (name, e) in v.req("entries")?.as_obj()? {
+            let inputs = e.req("inputs")?.as_arr()?.iter()
+                .map(|s| s.as_shape()).collect::<Result<Vec<_>>>()?;
+            let outputs = e.req("outputs")?.as_arr()?.iter()
+                .map(|s| s.as_shape()).collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), Entry {
+                name: name.clone(),
+                file: dir.join(e.req("file")?.as_str()?),
+                inputs,
+                outputs,
+            });
+        }
+        let mut models = HashMap::new();
+        for (name, m) in v.req("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries, models })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).ok_or_else(|| anyhow!("no entry {name:?}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| anyhow!("no model {name:?}"))
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let params = m.req("params")?.as_arr()?.iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            Ok((p[0].as_str()?.to_string(), p[1].as_shape()?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let bn_layers = m.req("bn_layers")?.as_arr()?.iter()
+        .map(|s| Ok(s.as_str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    let f = m.req("fused")?;
+    let fused = FusedInfo {
+        train_step: f.req("train_step")?.as_str()?.to_string(),
+        predict: f.req("predict")?.as_str()?.to_string(),
+        batch: f.req("batch")?.as_usize()?,
+        n_masks: f.req("n_masks")?.as_usize()?,
+        n_bn: f.req("n_bn")?.as_usize()?,
+    };
+    let plan = m.req("plan")?.as_arr()?.iter()
+        .map(parse_layer)
+        .collect::<Result<Vec<_>>>()?;
+    let mut hybrid = HashMap::new();
+    for (ways, p) in m.req("hybrid")?.as_obj()? {
+        let w: usize = ways.parse()?;
+        hybrid.insert(
+            w,
+            p.as_arr()?.iter().map(parse_layer).collect::<Result<Vec<_>>>()?,
+        );
+    }
+    Ok(ModelInfo {
+        name: name.to_string(),
+        kind: m.req("kind")?.as_str()?.to_string(),
+        input_size: m.req("input_size")?.as_usize()?,
+        in_channels: m.req("in_channels")?.as_usize()?,
+        use_bn: m.req("use_bn")?.as_bool()?,
+        params,
+        bn_layers,
+        plan,
+        fused,
+        hybrid,
+        n_targets: m.get("n_targets").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+        n_classes: m.get("n_classes").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+        dropout_keep: m.get("dropout_keep").map(|v| v.as_f64()).transpose()?
+            .unwrap_or(1.0),
+    })
+}
+
+fn parse_layer(l: &Json) -> Result<LayerDesc> {
+    let kind = l.req("kind")?.as_str()?;
+    let u = |k: &str| -> Result<usize> { l.req(k)?.as_usize() };
+    let opt = |k: &str| -> Option<String> {
+        l.get(k).and_then(|v| v.as_str().ok()).map(str::to_string)
+    };
+    let tag = || opt("tag").unwrap_or_default();
+    Ok(match kind {
+        "conv" => LayerDesc::Conv {
+            tag: tag(),
+            cin: u("cin")?,
+            cout: u("cout")?,
+            k: u("k")?,
+            stride: u("stride")?,
+            d: u("d")?,
+            h: u("h")?,
+            w: u("w")?,
+            halo: l.get("halo").map(|v| v.as_usize()).transpose()?
+                .unwrap_or((u("k")? - 1) / 2),
+            fwd: opt("fwd"),
+            bwd_data: opt("bwd_data"),
+            bwd_filter: opt("bwd_filter"),
+        },
+        "deconv" => LayerDesc::Deconv {
+            tag: tag(),
+            cin: u("cin")?,
+            cout: u("cout")?,
+            d: u("d")?,
+            h: u("h")?,
+            w: u("w")?,
+            fwd: opt("fwd"),
+            bwd_data: opt("bwd_data"),
+            bwd_filter: opt("bwd_filter"),
+        },
+        "pool" => LayerDesc::Pool {
+            op: l.req("op")?.as_str()?.to_string(),
+            c: u("c")?,
+            d: u("d")?,
+            h: u("h")?,
+            w: u("w")?,
+            fwd: opt("fwd"),
+            bwd: opt("bwd"),
+        },
+        "bn" => LayerDesc::Bn {
+            tag: tag(),
+            c: u("c")?,
+            d: u("d")?,
+            h: u("h")?,
+            w: u("w")?,
+            apply: opt("apply"),
+            bwd_partials: opt("bwd_partials"),
+            bwd_apply: opt("bwd_apply"),
+        },
+        "act" => LayerDesc::Act { c: u("c")?, d: u("d")?, h: u("h")?, w: u("w")? },
+        "flatten" => LayerDesc::Flatten { c: u("c")?, d: u("d")?, h: u("h")?, w: u("w")? },
+        "save_skip" => LayerDesc::SaveSkip {
+            slot: u("slot")?, c: u("c")?, d: u("d")?, h: u("h")?, w: u("w")?,
+        },
+        "concat_skip" => LayerDesc::ConcatSkip {
+            slot: u("slot")?,
+            c_skip: u("c_skip")?,
+            c_up: u("c_up")?,
+            d: u("d")?,
+            h: u("h")?,
+            w: u("w")?,
+        },
+        "fc" => LayerDesc::Fc {
+            tag: tag(),
+            fin: u("fin")?,
+            fout: u("fout")?,
+            act: l.req("act")?.as_bool()?,
+            dropout: l.req("dropout")?.as_bool()?,
+            fwd: opt("fwd"),
+            bwd: opt("bwd"),
+        },
+        "mse" => LayerDesc::Mse { n: u("n")?, fwd_bwd: opt("fwd_bwd") },
+        "xent" => LayerDesc::Xent {
+            n_classes: u("n_classes")?,
+            d: u("d")?,
+            h: u("h")?,
+            w: u("w")?,
+            fwd_bwd: opt("fwd_bwd"),
+        },
+        other => bail!("unknown layer kind {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_repo_manifest() {
+        let Some(dir) = repo_artifacts() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.entries.len() > 100, "{}", man.entries.len());
+        let m = man.model("cf16").unwrap();
+        assert_eq!(m.kind, "cosmoflow");
+        assert_eq!(m.input_size, 16);
+        assert_eq!(m.n_targets, 4);
+        assert!(!m.use_bn);
+        assert!(m.hybrid.contains_key(&2));
+        // every referenced entry file exists
+        for e in man.entries.values() {
+            assert!(e.file.exists(), "{:?}", e.file);
+        }
+    }
+
+    #[test]
+    fn hybrid_plan_entries_resolve() {
+        let Some(dir) = repo_artifacts() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("cf16-bn").unwrap();
+        for (ways, plan) in &m.hybrid {
+            for l in plan {
+                let names: Vec<Option<&String>> = match l {
+                    LayerDesc::Conv { fwd, bwd_data, bwd_filter, .. } =>
+                        vec![fwd.as_ref(), bwd_data.as_ref(), bwd_filter.as_ref()],
+                    LayerDesc::Bn { apply, bwd_partials, bwd_apply, .. } =>
+                        vec![apply.as_ref(), bwd_partials.as_ref(), bwd_apply.as_ref()],
+                    LayerDesc::Pool { fwd, bwd, .. } => vec![fwd.as_ref(), bwd.as_ref()],
+                    LayerDesc::Fc { fwd, bwd, .. } => vec![fwd.as_ref(), bwd.as_ref()],
+                    LayerDesc::Mse { fwd_bwd, .. } => vec![fwd_bwd.as_ref()],
+                    _ => vec![],
+                };
+                for n in names.into_iter().flatten() {
+                    assert!(man.entries.contains_key(n), "ways={ways}: {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bn_channels_match_plan() {
+        let Some(dir) = repo_artifacts() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("cf16-bn").unwrap();
+        assert_eq!(m.bn_channels(), vec![16, 32]);
+        assert_eq!(m.fused.n_bn, 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! Python is build-time only; this module is the entire compute backend of
+//! the training path. It wraps the `xla` crate (PJRT C API, CPU client):
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! The `xla` crate's client types are `Rc`-based (not `Send`), while the
+//! engine runs one thread per simulated GPU. All PJRT state therefore lives
+//! on a dedicated **runtime service thread** (the analogue of a GPU stream
+//! executor); rank threads hold a cloneable [`RuntimeHandle`] and submit
+//! calls over a channel. On the single-core testbed this serialization
+//! costs nothing and keeps the FFI perfectly thread-safe.
+
+pub mod manifest;
+pub mod service;
+
+pub use manifest::{FusedInfo, LayerDesc, Manifest, ModelInfo};
+pub use service::{RuntimeHandle, RuntimeStats};

@@ -1,0 +1,207 @@
+//! The PJRT runtime service thread and its cloneable handle.
+//!
+//! One OS thread owns the `PjRtClient`, the lazily-compiled executable
+//! cache, and all `Literal` marshaling; engine rank threads submit
+//! [`RuntimeHandle::call`]s over an mpsc channel. Executables compile on
+//! first use (HLO text → `HloModuleProto` → `XlaComputation` → PJRT) and
+//! are cached for the life of the service.
+
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Aggregated runtime statistics (perf pass + Fig 6-style accounting).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    /// entry -> (calls, total seconds, compile seconds)
+    pub per_entry: HashMap<String, (u64, f64, f64)>,
+}
+
+impl RuntimeStats {
+    pub fn total_exec_secs(&self) -> f64 {
+        self.per_entry.values().map(|(_, t, _)| t).sum()
+    }
+    pub fn total_calls(&self) -> u64 {
+        self.per_entry.values().map(|(c, _, _)| c).sum()
+    }
+    pub fn total_compile_secs(&self) -> f64 {
+        self.per_entry.values().map(|(_, _, c)| c).sum()
+    }
+}
+
+enum Request {
+    Call { entry: String, inputs: Vec<Tensor>, reply: Sender<Result<Vec<Tensor>>> },
+    Stats { reply: Sender<RuntimeStats> },
+    /// Pre-compile an entry (warm the cache off the hot path).
+    Warm { entry: String, reply: Sender<Result<()>> },
+}
+
+/// Cloneable handle to the runtime service.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+    manifest: Arc<Manifest>,
+}
+
+impl RuntimeHandle {
+    /// Start the service for an artifact directory.
+    pub fn start(artifacts_dir: &Path) -> Result<RuntimeHandle> {
+        let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+        let (tx, rx) = channel::<Request>();
+        let man = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let mut svc = match Service::new(man) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("runtime service failed to start: {e:#}");
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    svc.handle(req);
+                }
+            })
+            .context("spawn runtime thread")?;
+        Ok(RuntimeHandle { tx, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute `entry` with the given inputs; returns its output tuple.
+    pub fn call(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Call { entry: entry.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    /// Compile an entry ahead of time.
+    pub fn warm(&self, entry: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Warm { entry: entry.to_string(), reply })
+            .map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))
+    }
+}
+
+struct Service {
+    manifest: Arc<Manifest>,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: RuntimeStats,
+}
+
+impl Service {
+    fn new(manifest: Arc<Manifest>) -> Result<Service> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Service { manifest, client, cache: HashMap::new(), stats: RuntimeStats::default() })
+    }
+
+    fn handle(&mut self, req: Request) {
+        match req {
+            Request::Call { entry, inputs, reply } => {
+                let res = self.call(&entry, inputs);
+                let _ = reply.send(res);
+            }
+            Request::Warm { entry, reply } => {
+                let res = self.ensure_compiled(&entry).map(|_| ());
+                let _ = reply.send(res);
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(self.stats.clone());
+            }
+        }
+    }
+
+    fn ensure_compiled(&mut self, entry: &str) -> Result<()> {
+        if self.cache.contains_key(entry) {
+            return Ok(());
+        }
+        let e = self.manifest.entry(entry)?;
+        let t0 = Instant::now();
+        let path = e.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?;
+        // HLO *text* interchange: the 0.5.1 extension rejects jax>=0.5
+        // serialized protos (64-bit ids); the text parser reassigns ids.
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|err| anyhow!("parse {path}: {err}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|err| anyhow!("compile {entry}: {err}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let s = self.stats.per_entry.entry(entry.to_string()).or_default();
+        s.2 += dt;
+        self.cache.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    fn call(&mut self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(entry)?;
+        let e = self.manifest.entry(entry)?.clone();
+        if inputs.len() != e.inputs.len() {
+            bail!("{entry}: got {} inputs, expected {}", inputs.len(), e.inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, want)) in inputs.iter().zip(&e.inputs).enumerate() {
+            if t.shape() != &want[..] {
+                bail!("{entry}: input {i} shape {:?}, expected {:?}", t.shape(), want);
+            }
+            let dims: Vec<i64> = want.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .map_err(|err| anyhow!("{entry}: reshape input {i}: {err}"))?;
+            literals.push(lit);
+        }
+        let t0 = Instant::now();
+        let exe = self.cache.get(entry).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|err| anyhow!("execute {entry}: {err}"))?;
+        let root = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{entry}: empty result"))?
+            .to_literal_sync()
+            .map_err(|err| anyhow!("{entry}: to_literal: {err}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = root
+            .to_tuple()
+            .map_err(|err| anyhow!("{entry}: decompose tuple: {err}"))?;
+        if parts.len() != e.outputs.len() {
+            bail!("{entry}: got {} outputs, expected {}", parts.len(), e.outputs.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.into_iter().zip(&e.outputs) {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|err| anyhow!("{entry}: literal to_vec: {err}"))?;
+            out.push(Tensor::from_vec(shape, v));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let s = self.stats.per_entry.entry(entry.to_string()).or_default();
+        s.0 += 1;
+        s.1 += dt;
+        Ok(out)
+    }
+}

@@ -1,0 +1,401 @@
+//! Packed f32 n-d tensors (NCDHW convention for activations).
+//!
+//! This is the host-side tensor the coordinator shuffles between the PJRT
+//! executables, the communicator, and the data pipeline. It deliberately
+//! supports exactly what the engine hot path needs — depth-slab views
+//! (hyperslabs), halo padding, per-channel reductions for distributed
+//! batch-norm, and the elementwise tails (activations/dropout) the engine
+//! keeps on the Rust side. Heavy lifting (conv/pool/fc) happens inside the
+//! AOT executables.
+//!
+//! Depth slabs of an NCDHW tensor are contiguous per (n, c) pair, so every
+//! slab copy below is a strided sequence of `copy_from_slice` memcpys —
+//! this is the same insight behind the paper's optimized halo pack/unpack
+//! CUDA kernels (§III-A), and it is benchmarked in `benches/micro.rs`.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- NCDHW geometry ---------------------------------------------------
+
+    fn dims5(&self) -> (usize, usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 5, "expected 5-d NCDHW, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3], self.shape[4])
+    }
+
+    /// Copy out a depth slab `[d0, d0+len)` (axis 2) of an NCDHW tensor.
+    pub fn slice_d(&self, d0: usize, len: usize) -> Tensor {
+        let (n, c, d, h, w) = self.dims5();
+        assert!(d0 + len <= d, "slab [{d0}, {}) out of depth {d}", d0 + len);
+        let plane = h * w;
+        let mut out = Tensor::zeros(&[n, c, len, h, w]);
+        for nc in 0..n * c {
+            let src = (nc * d + d0) * plane;
+            let dst = nc * len * plane;
+            out.data[dst..dst + len * plane]
+                .copy_from_slice(&self.data[src..src + len * plane]);
+        }
+        out
+    }
+
+    /// Write `slab` into depth offset `d0` of self.
+    pub fn set_slice_d(&mut self, d0: usize, slab: &Tensor) {
+        let (n, c, d, h, w) = self.dims5();
+        let (sn, sc, sd, sh, sw) = slab.dims5();
+        assert!((sn, sc, sh, sw) == (n, c, h, w) && d0 + sd <= d,
+                "slab {:?} @d{} into {:?}", slab.shape, d0, self.shape);
+        let plane = h * w;
+        for nc in 0..n * c {
+            let dst = (nc * d + d0) * plane;
+            let src = nc * sd * plane;
+            self.data[dst..dst + sd * plane]
+                .copy_from_slice(&slab.data[src..src + sd * plane]);
+        }
+    }
+
+    /// Accumulate (`+=`) `slab` into depth offset `d0` — the reverse halo
+    /// exchange (gradients of shared planes are summed into the owner).
+    pub fn add_slice_d(&mut self, d0: usize, slab: &Tensor) {
+        let (n, c, d, h, w) = self.dims5();
+        let (_, _, sd, _, _) = slab.dims5();
+        assert!(d0 + sd <= d);
+        let plane = h * w;
+        for nc in 0..n * c {
+            let dst = (nc * d + d0) * plane;
+            let src = nc * sd * plane;
+            for i in 0..sd * plane {
+                self.data[dst + i] += slab.data[src + i];
+            }
+        }
+    }
+
+    /// New tensor with `lo` zero planes before and `hi` after in depth.
+    ///
+    /// Single-pass construction (zero-fill and copy interleaved per
+    /// (n, c) block) — this runs once per conv layer per sample in the
+    /// halo exchange, and the two-pass zeros+copy version cost ~1.7x as
+    /// much memory traffic (EXPERIMENTS.md §Perf).
+    pub fn pad_d(&self, lo: usize, hi: usize) -> Tensor {
+        let (n, c, d, h, w) = self.dims5();
+        let plane = h * w;
+        let dp = d + lo + hi;
+        let mut data = Vec::with_capacity(n * c * dp * plane);
+        for nc in 0..n * c {
+            data.resize(data.len() + lo * plane, 0.0);
+            let src = nc * d * plane;
+            data.extend_from_slice(&self.data[src..src + d * plane]);
+            data.resize(data.len() + hi * plane, 0.0);
+        }
+        Tensor { shape: vec![n, c, dp, h, w], data }
+    }
+
+    /// Drop `lo` planes from the front and `hi` from the back in depth.
+    pub fn crop_d(&self, lo: usize, hi: usize) -> Tensor {
+        let (_, _, d, _, _) = self.dims5();
+        self.slice_d(lo, d - lo - hi)
+    }
+
+    /// Concatenate along depth (axis 2).
+    pub fn concat_d(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let (n, c, _, h, w) = parts[0].dims5();
+        let total: usize = parts.iter().map(|p| p.dims5().2).sum();
+        let mut out = Tensor::zeros(&[n, c, total, h, w]);
+        let mut d0 = 0;
+        for p in parts {
+            out.set_slice_d(d0, p);
+            d0 += p.dims5().2;
+        }
+        out
+    }
+
+    /// Concatenate along channels (axis 1) — U-Net skip connections.
+    pub fn concat_c(a: &Tensor, b: &Tensor) -> Tensor {
+        let (n, ca, d, h, w) = a.dims5();
+        let (nb, cb, db, hb, wb) = b.dims5();
+        assert!((n, d, h, w) == (nb, db, hb, wb));
+        let mut out = Tensor::zeros(&[n, ca + cb, d, h, w]);
+        let block = d * h * w;
+        for i in 0..n {
+            let dst = i * (ca + cb) * block;
+            out.data[dst..dst + ca * block]
+                .copy_from_slice(&a.data[i * ca * block..(i + 1) * ca * block]);
+            out.data[dst + ca * block..dst + (ca + cb) * block]
+                .copy_from_slice(&b.data[i * cb * block..(i + 1) * cb * block]);
+        }
+        out
+    }
+
+    /// Split channels (inverse of [`concat_c`]): returns (first `ca`, rest).
+    pub fn split_c(&self, ca: usize) -> (Tensor, Tensor) {
+        let (n, c, d, h, w) = self.dims5();
+        assert!(ca < c);
+        let cb = c - ca;
+        let block = d * h * w;
+        let mut a = Tensor::zeros(&[n, ca, d, h, w]);
+        let mut b = Tensor::zeros(&[n, cb, d, h, w]);
+        for i in 0..n {
+            let src = i * c * block;
+            a.data[i * ca * block..(i + 1) * ca * block]
+                .copy_from_slice(&self.data[src..src + ca * block]);
+            b.data[i * cb * block..(i + 1) * cb * block]
+                .copy_from_slice(&self.data[src + ca * block..src + c * block]);
+        }
+        (a, b)
+    }
+
+    // ---- per-channel reductions (distributed batch-norm) ------------------
+
+    /// (sum, sum of squares) per channel over (n, d, h, w).
+    pub fn channel_stats(&self) -> (Vec<f32>, Vec<f32>) {
+        let (n, c, d, h, w) = self.dims5();
+        let block = d * h * w;
+        let mut s1 = vec![0.0f32; c];
+        let mut s2 = vec![0.0f32; c];
+        for i in 0..n {
+            for ch in 0..c {
+                let off = (i * c + ch) * block;
+                let (mut a, mut b) = (0.0f64, 0.0f64);
+                for &v in &self.data[off..off + block] {
+                    a += v as f64;
+                    b += (v as f64) * (v as f64);
+                }
+                s1[ch] += a as f32;
+                s2[ch] += b as f32;
+            }
+        }
+        (s1, s2)
+    }
+
+    /// Elements per channel (n*d*h*w) — the BN `count` term.
+    pub fn per_channel_count(&self) -> usize {
+        let (n, _, d, h, w) = self.dims5();
+        n * d * h * w
+    }
+
+    // ---- elementwise -----------------------------------------------------
+
+    pub fn leaky_relu(&self, slope: f32) -> Tensor {
+        let data = self.data.iter().map(|&x| if x >= 0.0 { x } else { slope * x })
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// dL/dx of leaky-ReLU given the *pre-activation* input.
+    pub fn leaky_relu_bwd(&self, dy: &Tensor, slope: f32) -> Tensor {
+        assert_eq!(self.shape, dy.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&dy.data)
+            .map(|(&x, &g)| if x >= 0.0 { g } else { slope * g })
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn mul_elem(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Max |a - b| — for tests and equivalence checks.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 difference ||a-b|| / (||b|| + eps).
+    pub fn rel_l2_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        (num.sqrt() / (den.sqrt() + 1e-12)) as f32
+    }
+
+    pub fn assert_close(&self, other: &Tensor, tol: f32, what: &str) -> Result<()> {
+        let d = self.max_abs_diff(other);
+        if d > tol {
+            bail!("{what}: max abs diff {d} > tol {tol}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn slab_roundtrip() {
+        let t = seq(&[2, 3, 8, 2, 2]);
+        let slab = t.slice_d(2, 4);
+        assert_eq!(slab.shape(), &[2, 3, 4, 2, 2]);
+        let mut t2 = Tensor::zeros(t.shape());
+        t2.set_slice_d(2, &slab);
+        let back = t2.slice_d(2, 4);
+        assert_eq!(back, slab);
+    }
+
+    #[test]
+    fn slab_values_match_manual_index() {
+        let t = seq(&[1, 2, 4, 2, 2]);
+        let slab = t.slice_d(1, 2);
+        // element (n=0, c=1, d=1(global d=2), h=1, w=0):
+        let manual = t.data()[((0 * 2 + 1) * 4 + 2) * 4 + 2];
+        let got = slab.data()[((0 * 2 + 1) * 2 + 1) * 4 + 2];
+        assert_eq!(manual, got);
+    }
+
+    #[test]
+    fn pad_crop_inverse() {
+        let t = seq(&[1, 2, 4, 3, 3]);
+        let p = t.pad_d(1, 2);
+        assert_eq!(p.shape(), &[1, 2, 7, 3, 3]);
+        assert_eq!(p.crop_d(1, 2), t);
+        // padding planes are zero
+        assert!(p.slice_d(0, 1).data().iter().all(|&x| x == 0.0));
+        assert!(p.slice_d(5, 2).data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn add_slice_accumulates() {
+        let mut t = Tensor::zeros(&[1, 1, 4, 2, 2]);
+        let ones = Tensor::from_vec(&[1, 1, 2, 2, 2], vec![1.0; 8]);
+        t.add_slice_d(1, &ones);
+        t.add_slice_d(2, &ones);
+        let expect = [0.0, 1.0, 2.0, 1.0];
+        for d in 0..4 {
+            assert!(t.slice_d(d, 1).data().iter().all(|&x| x == expect[d]));
+        }
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let a = seq(&[2, 3, 2, 2, 2]);
+        let b = seq(&[2, 5, 2, 2, 2]);
+        let c = Tensor::concat_c(&a, &b);
+        assert_eq!(c.shape(), &[2, 8, 2, 2, 2]);
+        let (a2, b2) = c.split_c(3);
+        assert_eq!(a2, a);
+        assert_eq!(b2, b);
+
+        let parts = [a.slice_d(0, 1), a.slice_d(1, 1)];
+        let whole = Tensor::concat_d(&[&parts[0], &parts[1]]);
+        assert_eq!(whole, a);
+    }
+
+    #[test]
+    fn channel_stats_match_naive() {
+        let t = seq(&[2, 2, 2, 2, 2]);
+        let (s1, s2) = t.channel_stats();
+        // naive per channel
+        for c in 0..2 {
+            let (mut a, mut b) = (0.0, 0.0);
+            for n in 0..2 {
+                for i in 0..8 {
+                    let v = t.data()[(n * 2 + c) * 8 + i];
+                    a += v;
+                    b += v * v;
+                }
+            }
+            assert!((s1[c] - a).abs() < 1e-3);
+            assert!((s2[c] - b).abs() < 1e-1);
+        }
+        assert_eq!(t.per_channel_count(), 16);
+    }
+
+    #[test]
+    fn leaky_and_bwd() {
+        let t = Tensor::from_vec(&[2, 2], vec![-2.0, -0.5, 0.5, 2.0]);
+        let y = t.leaky_relu(0.1);
+        assert_eq!(y.data(), &[-0.2, -0.05, 0.5, 2.0]);
+        let dy = Tensor::from_vec(&[2, 2], vec![1.0; 4]);
+        let dx = t.leaky_relu_bwd(&dy, 0.1);
+        assert_eq!(dx.data(), &[0.1, 0.1, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, discards
+//! warmup, and reports median / p10 / p90 over sample batches. Used by the
+//! `cargo bench` targets in `rust/benches/` (`harness = false`).
+
+use super::stats;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// seconds per iteration
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median
+    }
+}
+
+/// Harness configuration.
+pub struct Bench {
+    pub warmup_secs: f64,
+    pub measure_secs: f64,
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_secs: 0.3, measure_secs: 1.0, samples: 11, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_secs: 0.05, measure_secs: 0.2, samples: 5, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly and record a measurement under `name`.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.measure_secs / self.samples as f64) / per_iter.max(1e-9))
+            .ceil()
+            .max(1.0) as u64;
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            median: stats::median(&times),
+            p10: stats::percentile(&times, 10.0),
+            p90: stats::percentile(&times, 90.0),
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!(
+            "{:<48} {:>12}  (p10 {:>10}, p90 {:>10}, {} x {} iters)",
+            m.name,
+            super::human_time(m.median),
+            super::human_time(m.p10),
+            super::human_time(m.p90),
+            m.samples,
+            m.iters_per_sample,
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Time a single execution of `f` (for expensive end-to-end cases).
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) -> Measurement {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        let m = Measurement {
+            name: name.to_string(),
+            median: dt,
+            p10: dt,
+            p90: dt,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        println!("{:<48} {:>12}  (single run)", m.name, super::human_time(dt));
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Standard header for a bench binary.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::quick();
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1u64));
+        });
+        assert!(m.median > 0.0);
+        assert!(m.p10 <= m.median && m.median <= m.p90 * 1.0001);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn run_once_records() {
+        let mut b = Bench::quick();
+        let m = b.run_once("sleepless", || {
+            std::hint::black_box(17);
+        });
+        assert_eq!(m.samples, 1);
+    }
+}

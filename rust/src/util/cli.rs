@@ -1,0 +1,188 @@
+//! Declarative command-line parsing (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Auto-generates `--help` text from the declarations.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// A parsed argument set.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing --{name}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    /// Parse a comma-separated usize list (e.g. `--ways 1,2,4`).
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse::<usize>().map_err(|e| anyhow!("--{name}: {e}")))
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+}
+
+/// A command with declared options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str,
+               default: Option<&'static str>) -> Self {
+        self.opts.push(Opt { name, help, default, takes_value: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, takes_value: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let tail = if o.takes_value {
+                format!(" <v>{}", o.default.map(|d| format!("  [default: {d}]"))
+                        .unwrap_or_default())
+            } else {
+                String::new()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, tail, o.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (not including argv[0] / the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n{}", self.usage()))?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .ok_or_else(|| anyhow!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    values.insert(key.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{key} takes no value");
+                    }
+                    flags.push(key.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("model", "model name", Some("cf16"))
+            .opt("steps", "number of steps", Some("100"))
+            .opt("ways", "partition ways", None)
+            .flag("verbose", "chatty")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&s(&["--steps", "5", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("model"), Some("cf16"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(5));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = cmd().parse(&s(&["--ways=1,2,4"])).unwrap();
+        assert_eq!(a.get_usize_list("ways").unwrap(), Some(vec![1, 2, 4]));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(cmd().parse(&s(&["--nope"])).is_err());
+        assert!(cmd().parse(&s(&["--steps"])).is_err()); // missing value
+    }
+}

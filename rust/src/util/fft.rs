@@ -1,0 +1,183 @@
+//! Radix-2 complex FFT (1D iterative, plus a 3D transform over packed
+//! volumes). Powers the Gaussian-random-field synthesizer in [`crate::data`]
+//! that stands in for the CosmoFlow N-body dataset (DESIGN.md §4): a GRF is
+//! synthesized in Fourier space with a parameter-dependent power spectrum
+//! and inverse-transformed to a density cube.
+
+use std::f64::consts::PI;
+
+/// In-place iterative Cooley–Tukey FFT on interleaved (re, im) f64 pairs.
+/// `inverse` applies the conjugate transform and 1/n scaling.
+pub fn fft1d(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft size must be a power of two");
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let (mut cr, mut ci) = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let a = start + k;
+                let b = start + k + len / 2;
+                let (tr, ti) = (re[b] * cr - im[b] * ci, re[b] * ci + im[b] * cr);
+                re[b] = re[a] - tr;
+                im[b] = im[a] - ti;
+                re[a] += tr;
+                im[a] += ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for i in 0..n {
+            re[i] *= inv;
+            im[i] *= inv;
+        }
+    }
+}
+
+/// In-place 3D FFT of an n^3 complex volume (row-major, d-h-w order).
+pub fn fft3d(re: &mut [f64], im: &mut [f64], n: usize, inverse: bool) {
+    assert_eq!(re.len(), n * n * n);
+    let mut tr = vec![0.0; n];
+    let mut ti = vec![0.0; n];
+    // transform along w (contiguous rows)
+    for row in 0..n * n {
+        let s = row * n;
+        fft1d(&mut re[s..s + n], &mut im[s..s + n], inverse);
+    }
+    // along h
+    for d in 0..n {
+        for w in 0..n {
+            for h in 0..n {
+                let idx = (d * n + h) * n + w;
+                tr[h] = re[idx];
+                ti[h] = im[idx];
+            }
+            fft1d(&mut tr, &mut ti, inverse);
+            for h in 0..n {
+                let idx = (d * n + h) * n + w;
+                re[idx] = tr[h];
+                im[idx] = ti[h];
+            }
+        }
+    }
+    // along d
+    for h in 0..n {
+        for w in 0..n {
+            for d in 0..n {
+                let idx = (d * n + h) * n + w;
+                tr[d] = re[idx];
+                ti[d] = im[idx];
+            }
+            fft1d(&mut tr, &mut ti, inverse);
+            for d in 0..n {
+                let idx = (d * n + h) * n + w;
+                re[idx] = tr[d];
+                im[idx] = ti[d];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn fft_roundtrip_1d() {
+        let mut rng = Pcg::new(1, 1);
+        let n = 64;
+        let re0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let im0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fft1d(&mut re, &mut im, false);
+        fft1d(&mut re, &mut im, true);
+        for i in 0..n {
+            assert!((re[i] - re0[i]).abs() < 1e-9);
+            assert!((im[i] - im0[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_impulse_is_flat() {
+        let n = 16;
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        re[0] = 1.0;
+        fft1d(&mut re, &mut im, false);
+        for i in 0..n {
+            assert!((re[i] - 1.0).abs() < 1e-12);
+            assert!(im[i].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_small() {
+        let n = 8;
+        let mut rng = Pcg::new(5, 2);
+        let re0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let im0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fft1d(&mut re, &mut im, false);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for t in 0..n {
+                let ang = -2.0 * PI * (k * t) as f64 / n as f64;
+                sr += re0[t] * ang.cos() - im0[t] * ang.sin();
+                si += re0[t] * ang.sin() + im0[t] * ang.cos();
+            }
+            assert!((re[k] - sr).abs() < 1e-9, "k={k}");
+            assert!((im[k] - si).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip_3d() {
+        let n = 8;
+        let mut rng = Pcg::new(3, 3);
+        let re0: Vec<f64> = (0..n * n * n).map(|_| rng.normal()).collect();
+        let im0 = vec![0.0; n * n * n];
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fft3d(&mut re, &mut im, n, false);
+        fft3d(&mut re, &mut im, n, true);
+        for i in 0..re.len() {
+            assert!((re[i] - re0[i]).abs() < 1e-9);
+            assert!(im[i].abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval_3d() {
+        let n = 8;
+        let mut rng = Pcg::new(9, 4);
+        let re0: Vec<f64> = (0..n * n * n).map(|_| rng.normal()).collect();
+        let (mut re, mut im) = (re0.clone(), vec![0.0; n * n * n]);
+        fft3d(&mut re, &mut im, n, false);
+        let e_t: f64 = re0.iter().map(|x| x * x).sum();
+        let e_f: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+        assert!((e_f / (n * n * n) as f64 - e_t).abs() / e_t < 1e-9);
+    }
+}

@@ -1,0 +1,66 @@
+//! Small self-contained substrates.
+//!
+//! The build environment is fully offline with a fixed vendored crate set
+//! (see `.cargo/config.toml`), so the usual ecosystem crates — `serde`,
+//! `clap`, `rand`, `criterion`, `proptest`, `toml` — are unavailable. Each
+//! submodule here is a purpose-built replacement scoped to exactly what
+//! HYDRA-3D needs (DESIGN.md §8):
+//!
+//! * [`rng`] — PCG64 PRNG + normal/Bernoulli sampling + shuffles (`rand`)
+//! * [`json`] — JSON value model, parser and writer (`serde_json`)
+//! * [`toml`] — TOML-subset config parser (`toml`)
+//! * [`cli`] — declarative flag/subcommand parser (`clap`)
+//! * [`stats`] — summaries + (log-)linear regression for the §III-C model
+//! * [`bench`] — micro-benchmark harness with warmup/median (`criterion`)
+//! * [`prop`] — seeded property-test runner (`proptest`)
+//! * [`fft`] — radix-2 complex FFT (1D/3D) for Gaussian random fields
+
+pub mod bench;
+pub mod cli;
+pub mod fft;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+
+/// Format a byte count human-readably (GiB/MiB/KiB).
+pub fn human_bytes(b: u64) -> String {
+    const G: f64 = (1u64 << 30) as f64;
+    const M: f64 = (1u64 << 20) as f64;
+    const K: f64 = (1u64 << 10) as f64;
+    let b = b as f64;
+    if b >= G {
+        format!("{:.2} GiB", b / G)
+    } else if b >= M {
+        format!("{:.2} MiB", b / M)
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.1} us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2 << 20), "2.00 MiB");
+        assert_eq!(human_time(0.25), "250.000 ms");
+        assert_eq!(human_time(2.0), "2.000 s");
+    }
+}

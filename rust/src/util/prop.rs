@@ -1,0 +1,120 @@
+//! Seeded property-test runner (offline stand-in for `proptest`).
+//!
+//! A property is a closure from a [`Gen`] (a seeded random source with
+//! convenience generators) to `Result<(), String>`. The runner executes N
+//! cases with derived seeds and reports the first failing seed so a failure
+//! is exactly reproducible with `check_seed`.
+
+use super::rng::Pcg;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// A power of two in [lo, hi] (both must be powers of two).
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_e = lo.trailing_zeros() as usize;
+        let hi_e = hi.trailing_zeros() as usize;
+        1 << self.usize_in(lo_e, hi_e)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, scale);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing seed if any
+/// case fails.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_base_seed(name, 0x9E3779B97F4A7C15, cases, prop)
+}
+
+/// Re-run a single failing case by seed (printed on failure).
+pub fn check_seed<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Pcg::new(seed, 7), case: 0 };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property {name} failed at seed {seed:#x}: {msg}");
+    }
+}
+
+fn check_base_seed<F>(name: &str, base: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0xD1B54A32D192ED03);
+        let mut g = Gen { rng: Pcg::new(seed, 7), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name} failed (case {case}, seed {seed:#x}):\n  {msg}\n\
+                 reproduce with util::prop::check_seed(\"{name}\", {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0);
+        check("add-commutes", 50, |g| {
+            let (a, b) = (g.f32_in(-10.0, 10.0), g.f32_in(-10.0, 10.0));
+            count.set(count.get() + 1);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+        assert_eq!(count.get_mut(), &50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        check("pow2-in-range", 100, |g| {
+            let x = g.pow2_in(2, 64);
+            if x.is_power_of_two() && (2..=64).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,170 @@
+//! Summary statistics and regression — the numeric substrate of the paper's
+//! §III-C performance model, which fits:
+//!
+//! * a **linear** model `t(bytes) = alpha + beta * bytes` to ping-pong
+//!   send/recv benchmarks (Aluminum's SR model), and
+//! * a **log-log linear** model over (message size, GPU count) to NCCL
+//!   allreduce timings (Thakur et al. / Oyama et al. style).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    match v.len() {
+        0 => f64::NAN,
+        n if n % 2 == 1 => v[n / 2],
+        n => 0.5 * (v[n / 2 - 1] + v[n / 2]),
+    }
+}
+
+/// Percentile in [0, 100] with linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+}
+
+/// Ordinary least squares for y = a + b*x. Returns (a, b, r2).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Multi-variate OLS y = w.x + c via normal equations (tiny systems only:
+/// the allreduce model has 3 features). Returns (weights, intercept).
+pub fn linreg_multi(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
+    let n = xs.len();
+    assert!(n > 0 && n == ys.len());
+    let d = xs[0].len();
+    // design matrix with bias column; solve (A^T A) w = A^T y by Gaussian
+    // elimination with partial pivoting.
+    let cols = d + 1;
+    let mut ata = vec![vec![0.0; cols]; cols];
+    let mut aty = vec![0.0; cols];
+    for (x, &y) in xs.iter().zip(ys) {
+        let mut row = x.clone();
+        row.push(1.0);
+        for i in 0..cols {
+            aty[i] += row[i] * y;
+            for j in 0..cols {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    let w = solve(&mut ata, &mut aty);
+    let (weights, bias) = w.split_at(d);
+    (weights.to_vec(), bias[0])
+}
+
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let p = a[col][col];
+        if p.abs() < 1e-12 {
+            continue; // singular direction; leave zero
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / p;
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    (0..n)
+        .map(|i| if a[i][i].abs() < 1e-12 { 0.0 } else { b[i] / a[i][i] })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_summaries() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((stddev(&xs) - 1.118).abs() < 1e-3);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b, r2) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linreg_multi_recovers_plane() {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                let (x1, x2) = (i as f64, j as f64);
+                xs.push(vec![x1, x2]);
+                ys.push(2.0 * x1 - 1.5 * x2 + 7.0);
+            }
+        }
+        let (w, c) = linreg_multi(&xs, &ys);
+        assert!((w[0] - 2.0).abs() < 1e-8);
+        assert!((w[1] + 1.5).abs() < 1e-8);
+        assert!((c - 7.0).abs() < 1e-8);
+    }
+}

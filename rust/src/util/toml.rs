@@ -1,0 +1,165 @@
+//! TOML-subset parser for experiment configs (offline stand-in for `toml`).
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays, plus `#` comments.
+//! Values land in a [`crate::util::json::Json`] object tree so the config
+//! layer has a single value model for both formats.
+
+use super::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Parse TOML text into a JSON object tree.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut root: Vec<(String, Json)> = Vec::new();
+    let mut path: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated table header", lineno + 1))?;
+            path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &path)?;
+        } else {
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().trim_matches('"').to_string();
+            let val = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            insert(&mut root, &path, key, val)?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<Json> {
+    parse(&std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("read {}: {e}", path.display()))?)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Json> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Json::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        return inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()
+            .map(Json::Arr);
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow!("cannot parse value {s:?}"))
+}
+
+fn ensure_table(root: &mut Vec<(String, Json)>, path: &[String]) -> Result<()> {
+    let mut cur = root;
+    for seg in path {
+        if !cur.iter().any(|(k, _)| k == seg) {
+            cur.push((seg.clone(), Json::Obj(vec![])));
+        }
+        let entry = cur.iter_mut().find(|(k, _)| k == seg).unwrap();
+        match &mut entry.1 {
+            Json::Obj(o) => cur = o,
+            _ => bail!("{seg} is not a table"),
+        }
+    }
+    Ok(())
+}
+
+fn insert(root: &mut Vec<(String, Json)>, path: &[String], key: String,
+          val: Json) -> Result<()> {
+    ensure_table(root, path)?;
+    let mut cur = root;
+    for seg in path {
+        let entry = cur.iter_mut().find(|(k, _)| k == seg).unwrap();
+        match &mut entry.1 {
+            Json::Obj(o) => cur = o,
+            _ => unreachable!(),
+        }
+    }
+    if cur.iter().any(|(k, _)| *k == key) {
+        bail!("duplicate key {key}");
+    }
+    cur.push((key, val));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let doc = r#"
+# experiment config
+name = "fig4"     # inline comment
+steps = 100
+lr = 1.0e-3
+verbose = true
+ways = [1, 2, 4]
+
+[cluster]
+nodes = 512
+gpus_per_node = 4
+
+[cluster.links]
+nvlink_gbps = 60.0
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fig4");
+        assert_eq!(v.get("steps").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(v.get("lr").unwrap().as_f64().unwrap(), 1.0e-3);
+        assert!(v.get("verbose").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("ways").unwrap().as_shape().unwrap(), vec![1, 2, 4]);
+        let cl = v.get("cluster").unwrap();
+        assert_eq!(cl.get("nodes").unwrap().as_usize().unwrap(), 512);
+        assert_eq!(
+            cl.get("links").unwrap().get("nvlink_gbps").unwrap().as_f64().unwrap(),
+            60.0
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @@").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+}

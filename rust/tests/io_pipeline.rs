@@ -1,0 +1,176 @@
+//! I/O pipeline integration: GRF synthesis → container file → epoch-0
+//! hyperslab ingestion → owner-mapped data store → per-step redistribution
+//! (the functional realization of the paper's Fig. 3).
+
+use hydra3d::comm::world;
+use hydra3d::data::container::{write_dataset, Container};
+use hydra3d::data::grf::{GrfConfig, GrfDataset};
+use hydra3d::iosim::store::DataStore;
+use hydra3d::partition::Topology;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("hydra3d-io-{name}-{}", std::process::id()));
+    p
+}
+
+/// Epoch-0 ingestion reads each input byte of the dataset exactly once
+/// across all ranks (spatially-parallel ingestion: no redundant reads), and
+/// the union of rank caches is the full dataset.
+#[test]
+fn epoch0_ingestion_is_exactly_once() {
+    let ds = GrfDataset::generate(&GrfConfig { size: 8, seed: 3 }, 6);
+    let path = tmpfile("ingest");
+    write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
+    let c = Arc::new(Container::open(&path).unwrap());
+
+    let topo = Topology::new(3, 2); // 3 groups x 2-way depth
+    let mut stores = Vec::new();
+    for r in 0..topo.world_size() {
+        stores.push(DataStore::ingest(&c, topo, r, false).unwrap());
+    }
+    // each group owns 2 of 6 samples; each rank caches its depth half
+    for st in &stores {
+        assert_eq!(st.cached(), 2);
+    }
+    // input voxels read exactly once in total; targets once per position
+    let total_bytes: u64 = stores.iter().map(|s| s.ingest_bytes).sum();
+    let vol_bytes = 6 * 8 * 8 * 8 * 4;
+    let target_bytes = 6 * 4 * 4 * 2;
+    assert_eq!(total_bytes, vol_bytes + target_bytes);
+
+    // shard contents match the source dataset
+    for st in &stores {
+        let (group, pos) = topo.coords_of(st.rank);
+        for s in st.owner.samples_of(group) {
+            let (x, t) = st.cache_entry(s).unwrap();
+            assert_eq!(x, &ds.inputs[s].slice_d(pos * 4, 4));
+            assert_eq!(t.data(), ds.targets[s].data());
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Steady-state redistribution: after `redistribute`, every rank holds the
+/// shards of the samples its group is about to train on, moved only over
+/// the communicator (zero PFS reads).
+#[test]
+fn steady_state_redistribution() {
+    let ds = GrfDataset::generate(&GrfConfig { size: 8, seed: 4 }, 4);
+    let path = tmpfile("redist");
+    write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
+    let c = Arc::new(Container::open(&path).unwrap());
+
+    let topo = Topology::new(2, 2);
+    // step assignment: group 0 trains on sample 3, group 1 on sample 0 —
+    // both owned by the *other* group (owner = sample % 2).
+    let assignments = vec![vec![3usize], vec![0usize]];
+
+    let eps = world(topo.world_size());
+    let results: Vec<(u64, Vec<(usize, hydra3d::tensor::Tensor)>)> =
+        std::thread::scope(|s| {
+            eps.into_iter()
+                .enumerate()
+                .map(|(r, ep)| {
+                    let c = c.clone();
+                    let assignments = assignments.clone();
+                    s.spawn(move || {
+                        let mut st = DataStore::ingest(&c, topo, r, false).unwrap();
+                        // all ranks finish ingesting before we snapshot the
+                        // (shared) PFS byte counter
+                        let all: Vec<usize> = (0..topo.world_size()).collect();
+                        ep.barrier(&all).unwrap();
+                        let before = c.bytes_read.load(Ordering::Relaxed);
+                        st.redistribute(&ep, &assignments).unwrap();
+                        let after = c.bytes_read.load(Ordering::Relaxed);
+                        assert_eq!(before, after, "redistribution must not hit PFS");
+                        let (group, _) = topo.coords_of(r);
+                        let got: Vec<_> = assignments[group]
+                            .iter()
+                            .map(|&smp| (smp, st.staged_shard(smp).unwrap().0.clone()))
+                            .collect();
+                        (st.redist_bytes, got)
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+
+    for (r, (_, got)) in results.iter().enumerate() {
+        let (_, pos) = topo.coords_of(r);
+        for (smp, x) in got {
+            assert_eq!(x, &ds.inputs[*smp].slice_d(pos * 4, 4),
+                       "rank {r} sample {smp}");
+        }
+    }
+    // both owner groups sent their shards: nonzero redistribution traffic
+    let total: u64 = results.iter().map(|(b, _)| b).sum();
+    assert!(total > 0);
+    std::fs::remove_file(&path).ok();
+}
+
+/// A self-owned assignment needs no communication.
+#[test]
+fn self_owned_assignment_is_local() {
+    let ds = GrfDataset::generate(&GrfConfig { size: 8, seed: 5 }, 2);
+    let path = tmpfile("local");
+    write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
+    let c = Arc::new(Container::open(&path).unwrap());
+    let topo = Topology::new(2, 1);
+    let assignments = vec![vec![0usize], vec![1usize]]; // owner == consumer
+    let eps = world(2);
+    std::thread::scope(|s| {
+        for (r, ep) in eps.into_iter().enumerate() {
+            let c = c.clone();
+            let assignments = assignments.clone();
+            s.spawn(move || {
+                let mut st = DataStore::ingest(&c, topo, r, false).unwrap();
+                st.redistribute(&ep, &assignments).unwrap();
+                assert_eq!(st.redist_bytes, 0, "no traffic for self-owned samples");
+            });
+        }
+    });
+    std::fs::remove_file(&path).ok();
+}
+
+/// Label-mode store: U-Net style spatially partitioned ground truth
+/// (the paper: "we also spatially distribute the ground-truth
+/// segmentation").
+#[test]
+fn label_mode_store_caches_label_shards() {
+    let (inputs, labels) = hydra3d::data::ct::ct_dataset(8, 2, 2, 7);
+    let targets: Vec<hydra3d::tensor::Tensor> =
+        (0..2).map(|_| hydra3d::tensor::Tensor::zeros(&[1, 1])).collect();
+    let path = tmpfile("labels");
+    write_dataset(&path, &inputs, &targets, Some(&labels)).unwrap();
+    let c = Container::open(&path).unwrap();
+    let topo = Topology::new(1, 2);
+    let st = DataStore::ingest(&c, topo, 1, true).unwrap();
+    let (group, pos) = topo.coords_of(1);
+    for s in st.owner.samples_of(group) {
+        let (x, l) = st.cache_entry(s).unwrap();
+        assert_eq!(x, &inputs[s].slice_d(pos * 4, 4));
+        assert_eq!(l, &labels[s].slice_d(pos * 4, 4));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Container-as-SampleSource: direct epoch-0 training path reads shards
+/// straight from the file.
+#[test]
+fn container_is_a_sample_source() {
+    use hydra3d::engine::hybrid::SampleSource;
+    let ds = GrfDataset::generate(&GrfConfig { size: 8, seed: 6 }, 3);
+    let path = tmpfile("source");
+    write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
+    let c = Container::open(&path).unwrap();
+    assert_eq!(SampleSource::len(&c), 3);
+    let shard = c.input_shard(1, 2, 4).unwrap();
+    assert_eq!(shard, ds.inputs[1].slice_d(2, 4));
+    assert_eq!(c.target_full(2).unwrap().data(), ds.targets[2].data());
+    std::fs::remove_file(&path).ok();
+}

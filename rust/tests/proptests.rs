@@ -1,0 +1,166 @@
+//! Cross-module property tests on coordinator invariants (in-repo property
+//! harness; see util::prop for the seeded-reproduction story).
+
+use hydra3d::data::grf::{synthesize, GrfConfig, Universe};
+use hydra3d::engine::sample_schedule;
+use hydra3d::iosim::store::OwnerMap;
+use hydra3d::partition::{DepthPartition, Grid4, Topology};
+use hydra3d::tensor::Tensor;
+use hydra3d::util::prop;
+
+/// Halo-padded shards tile the padded global tensor: the algebraic core of
+/// the forward halo exchange, for arbitrary shapes and ways.
+#[test]
+fn prop_shard_pad_tiles_global() {
+    prop::check("shard-pad-tiles", 40, |g| {
+        let ways = g.pow2_in(1, 8);
+        let dsh = g.usize_in(1, 4);
+        let d = ways * dsh;
+        let (c, hw) = (g.usize_in(1, 3), g.usize_in(1, 4));
+        let mut x = Tensor::zeros(&[1, c, d, hw, hw]);
+        let data = g.vec_f32(x.numel(), 1.0);
+        x.data_mut().copy_from_slice(&data);
+        let halo = 1;
+        let padded = x.pad_d(halo, halo);
+        let part = DepthPartition::new_even(d, ways).map_err(|e| e.to_string())?;
+        for pos in 0..ways {
+            let want = padded.slice_d(part.shard_start(pos), part.shard_len() + 2 * halo);
+            // reconstruct what exchange_forward produces locally:
+            let shard = x.slice_d(part.shard_start(pos), part.shard_len());
+            let mut local = shard.pad_d(halo, halo);
+            if pos > 0 {
+                local.set_slice_d(0, &x.slice_d(part.shard_start(pos) - halo, halo));
+            }
+            if pos + 1 < ways {
+                local.set_slice_d(halo + part.shard_len(),
+                                  &x.slice_d(part.shard_start(pos) + part.shard_len(), halo));
+            }
+            if local != want {
+                return Err(format!("ways={ways} pos={pos} mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The sample schedule is a sequence of full epochs: across any window of
+/// ceil(n/b) consecutive steps' batches, sample counts differ by at most 1
+/// per epoch boundary, and every index is < n.
+#[test]
+fn prop_schedule_is_epoch_fair() {
+    prop::check("schedule-fair", 60, |g| {
+        let n = g.usize_in(2, 40);
+        let b = g.usize_in(1, 8);
+        let steps = g.usize_in(1, 30);
+        let sched = sample_schedule(g.rng.next_u64(), n, b, steps);
+        let mut counts = vec![0usize; n];
+        for batch in &sched {
+            if batch.len() != b {
+                return Err("batch size".into());
+            }
+            for &i in batch {
+                if i >= n {
+                    return Err(format!("index {i} >= {n}"));
+                }
+                counts[i] += 1;
+            }
+        }
+        let (lo, hi) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        if hi - lo > 1 {
+            return Err(format!("unfair: min {lo} max {hi}"));
+        }
+        Ok(())
+    });
+}
+
+/// Owner map + topology: every (sample, position) pair is cached by exactly
+/// one rank, and redistribution peers share the position.
+#[test]
+fn prop_owner_map_exactly_once() {
+    prop::check("owner-exactly-once", 60, |g| {
+        let groups = g.usize_in(1, 6);
+        let ways = g.pow2_in(1, 8);
+        let n = g.usize_in(1, 24);
+        let topo = Topology::new(groups, ways);
+        let om = OwnerMap { n_samples: n, groups };
+        let mut seen = vec![0usize; n * ways];
+        for r in 0..topo.world_size() {
+            let (grp, pos) = topo.coords_of(r);
+            for s in om.samples_of(grp) {
+                seen[s * ways + pos] += 1;
+            }
+        }
+        if seen.iter().all(|&c| c == 1) {
+            Ok(())
+        } else {
+            Err("coverage violated".into())
+        }
+    });
+}
+
+/// Grid4 shard extents always cover the volume.
+#[test]
+fn prop_grid4_covers_volume() {
+    prop::check("grid4-covers", 80, |g| {
+        let grid = Grid4 {
+            n: g.usize_in(1, 4),
+            d: g.pow2_in(1, 16),
+            h: g.pow2_in(1, 4),
+            w: g.pow2_in(1, 4),
+        };
+        let vol = (g.pow2_in(16, 512), g.pow2_in(16, 512), g.pow2_in(16, 512));
+        let (sd, sh, sw) = grid.shard_extent(vol);
+        if sd * grid.d >= vol.0 && sh * grid.h >= vol.1 && sw * grid.w >= vol.2 {
+            Ok(())
+        } else {
+            Err(format!("{grid:?} does not cover {vol:?}"))
+        }
+    });
+}
+
+/// GRF synthesis is parameter-sensitive: different parameters give
+/// different fields; identical parameters give identical fields.
+#[test]
+fn prop_grf_parameter_sensitivity() {
+    prop::check("grf-sensitivity", 8, |g| {
+        let cfg = GrfConfig { size: 8, seed: 11 };
+        let u1 = Universe {
+            amp: g.f32_in(-1.0, 1.0),
+            tilt: g.f32_in(-1.0, 1.0),
+            large: g.f32_in(-1.0, 1.0),
+            cut: g.f32_in(-1.0, 1.0),
+        };
+        let u2 = Universe { amp: u1.amp + 0.7_f32.copysign(-u1.amp), ..u1 };
+        let a = synthesize(&cfg, 0, &u1);
+        let b = synthesize(&cfg, 0, &u1);
+        let c = synthesize(&cfg, 0, &u2);
+        if a.max_abs_diff(&b) != 0.0 {
+            return Err("nondeterministic".into());
+        }
+        if a.max_abs_diff(&c) < 1e-4 {
+            return Err("amp change had no effect".into());
+        }
+        Ok(())
+    });
+}
+
+/// Tensor slab algebra: concat_d(slices) == identity for arbitrary splits.
+#[test]
+fn prop_concat_slices_identity() {
+    prop::check("concat-identity", 60, |g| {
+        let parts = g.usize_in(1, 5);
+        let per = g.usize_in(1, 3);
+        let d = parts * per;
+        let shape = [1, g.usize_in(1, 3), d, g.usize_in(1, 3), g.usize_in(1, 3)];
+        let mut x = Tensor::zeros(&shape);
+        let data = g.vec_f32(x.numel(), 2.0);
+        x.data_mut().copy_from_slice(&data);
+        let slabs: Vec<Tensor> = (0..parts).map(|p| x.slice_d(p * per, per)).collect();
+        let refs: Vec<&Tensor> = slabs.iter().collect();
+        if Tensor::concat_d(&refs) == x {
+            Ok(())
+        } else {
+            Err("concat(slice) != id".into())
+        }
+    });
+}
