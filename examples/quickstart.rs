@@ -1,13 +1,19 @@
 //! Quickstart: load the AOT artifacts, train a tiny CosmoFlow hybrid-
-//! parallel (2-way depth partitioning x 1 group), and evaluate.
+//! parallel (2-way depth partitioning x 1 group) on the *traced*
+//! communicator backend, evaluate, and replay the recorded communication
+//! against the §III-C performance model.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
+use hydra3d::comm::{CommBackend, GradReduce, TraceCollector};
+use hydra3d::config::ClusterConfig;
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
 use hydra3d::engine::dataparallel::eval_mse;
-use hydra3d::engine::hybrid::{train_hybrid, HybridOpts, InMemorySource};
+use hydra3d::engine::hybrid::{train_hybrid_with, HybridOpts, InMemorySource};
 use hydra3d::engine::LrSchedule;
+use hydra3d::perfmodel::trace::replay;
+use hydra3d::perfmodel::{Link, SrModel};
 use hydra3d::runtime::RuntimeHandle;
 use std::sync::Arc;
 
@@ -28,7 +34,9 @@ fn main() -> Result<()> {
     });
 
     // 3. hybrid-parallel training: 2 ranks split each sample's depth in
-    //    half, halo-exchange conv boundaries, and allreduce gradients.
+    //    half, halo-exchange conv boundaries, and allreduce gradients in
+    //    buckets overlapped with backward. The traced backend records
+    //    every message on the wire.
     let steps = 30;
     let opts = HybridOpts {
         model: "cf-nano".into(),
@@ -40,15 +48,35 @@ fn main() -> Result<()> {
         schedule: LrSchedule { lr0: 3e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 10,
     };
-    let rep = train_hybrid(&rt, &opts, source)?;
+    let trace = Arc::new(TraceCollector::new());
+    let rep = train_hybrid_with(&rt, &opts, source,
+                                &CommBackend::Traced(trace.clone()),
+                                GradReduce::default())?;
     println!(
-        "loss {:.4} -> {:.4} over {steps} steps ({} comm bytes)",
+        "loss {:.4} -> {:.4} over {steps} steps ({} comm bytes, \
+         allreduce {:.3}s exposed / {:.3}s overlapped)",
         rep.records[0].loss,
         rep.final_loss(),
-        rep.comm_bytes
+        rep.comm_bytes,
+        rep.phases.allreduce,
+        rep.phases.allreduce_overlapped,
     );
 
-    // 4. evaluate with the fused predict executable.
+    // 4. replay the recorded communication against the §III-C link model:
+    //    what would this exact message stream cost on Lassen's NVLink?
+    let link = SrModel::from_cluster(&ClusterConfig::default(), Link::NvLink);
+    let r = replay(&trace, opts.groups * opts.ways, &link);
+    println!(
+        "trace: {} messages / {} bytes / {} collectives -> p2p critical \
+         {:.3} ms, closed-form allreduce {:.3} ms",
+        r.messages,
+        r.bytes,
+        r.collectives,
+        r.p2p_critical_secs * 1e3,
+        r.allreduce_model_secs * 1e3,
+    );
+
+    // 5. evaluate with the fused predict executable.
     let mse = eval_mse(&rt, &info, &rep.params, &rep.running, &ds.inputs, &ds.targets)?;
     println!("train-set parameter MSE: {mse:.4}");
     Ok(())

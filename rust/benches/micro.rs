@@ -1,20 +1,32 @@
 //! `cargo bench --bench micro` — hot-path micro-benchmarks for the L3
 //! performance pass (DESIGN.md §7): halo pack/unpack bandwidth, ring
-//! allreduce throughput, container hyperslab reads, and PJRT call overhead.
-//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+//! allreduce throughput, bucketed-overlap exposed time, container
+//! hyperslab reads, and PJRT call overhead. Before/after numbers are
+//! recorded in EXPERIMENTS.md §Perf.
+//!
+//! Pass `--quick` (or set `HYDRA3D_BENCH_QUICK=1`) for the CI smoke mode:
+//! same code paths, much shorter measurement windows.
 
-use hydra3d::comm::world;
+use hydra3d::comm::{world, BucketPlan, Communicator, OverlapAllreduce};
 use hydra3d::data::container::{write_dataset, Container};
 use hydra3d::runtime::RuntimeHandle;
 use hydra3d::tensor::Tensor;
 use hydra3d::util::bench::{banner, Bench};
 use hydra3d::util::rng::Pcg;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 fn main() {
-    let mut b = Bench::default();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("HYDRA3D_BENCH_QUICK")
+            .is_ok_and(|v| !v.is_empty() && v != "0");
+    let mut b = if quick { Bench::quick() } else { Bench::default() };
+    if quick {
+        println!("(quick mode: short measurement windows)");
+    }
     halo_pack(&mut b);
-    allreduce(&mut b);
+    allreduce(&mut b, quick);
+    overlap(&mut b, quick);
     container_reads(&mut b);
     pjrt_overhead(&mut b);
 }
@@ -25,7 +37,7 @@ fn halo_pack(b: &mut Bench) {
     banner("halo pack/unpack (slab copies)");
     // conv2-of-cf64-like shard: 32 ch x 16 planes x 64 x 64
     let t = Tensor::zeros(&[1, 32, 16, 64, 64]);
-    let halo_bytes = (32 * 1 * 64 * 64 * 4) as f64;
+    let halo_bytes = (32 * 64 * 64 * 4) as f64;
     let m = b.run("slice_d 1-plane halo (32x64x64)", || {
         std::hint::black_box(t.slice_d(0, 1));
     });
@@ -48,9 +60,11 @@ fn halo_pack(b: &mut Bench) {
 
 /// Ring allreduce over thread-ranks: should be within a small factor of the
 /// memcpy roofline at MiB sizes.
-fn allreduce(b: &mut Bench) {
+fn allreduce(b: &mut Bench, quick: bool) {
     banner("ring allreduce (4 thread-ranks)");
-    for len in [1usize << 10, 1 << 16, 1 << 20] {
+    let sizes: &[usize] = if quick { &[1 << 10, 1 << 16] } else { &[1 << 10, 1 << 16, 1 << 20] };
+    let iters = if quick { 5 } else { 20 };
+    for &len in sizes {
         let name = format!("allreduce_sum {} f32 x4 ranks", len);
         let m = b.run_once(&name, || {
             let eps = world(4);
@@ -59,19 +73,101 @@ fn allreduce(b: &mut Bench) {
                     s.spawn(move || {
                         let group: Vec<usize> = (0..4).collect();
                         let mut buf = vec![1.0f32; len];
-                        for _ in 0..20 {
+                        for _ in 0..iters {
                             ep.allreduce_sum(&mut buf, &group).unwrap();
                         }
                     });
                 }
             });
         });
-        let per_iter = m.median / 20.0;
+        let per_iter = m.median / iters as f64;
         println!("   -> {:.2} MB buffers, {:.1} us/allreduce, {:.2} GB/s reduced",
                  len as f64 * 4.0 / 1e6,
                  per_iter * 1e6,
                  (len * 4) as f64 / per_iter / 1e9);
     }
+}
+
+/// Exposed (non-overlapped) gradient allreduce time: monolithic blocking
+/// allreduce after backward vs the bucketed path that launches each
+/// bucket's allreduce as its layer's backward completes. "Backward
+/// compute" is simulated with sleeps (accelerator compute does not occupy
+/// the host CPU), so the bucketed worker genuinely overlaps.
+fn overlap(b: &mut Bench, quick: bool) {
+    banner("gradient allreduce overlap (4 thread-ranks)");
+    let ranks = 4usize;
+    let layers = 12usize;
+    let per_layer = if quick { 1 << 13 } else { 1 << 15 }; // f32 elems
+    let compute = Duration::from_micros(if quick { 100 } else { 300 });
+    let sizes = vec![per_layer; layers];
+
+    // monolithic: full backward, then one blocking allreduce
+    let mono = b.run_once("monolithic allreduce after backward", || {
+        let eps = world(ranks);
+        let exposed: Vec<f64> = std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    s.spawn(move || {
+                        let group: Vec<usize> = (0..ranks).collect();
+                        for _ in 0..layers {
+                            std::thread::sleep(compute);
+                        }
+                        let mut flat = vec![1.0f32; layers * per_layer];
+                        let t0 = Instant::now();
+                        ep.allreduce_sum(&mut flat, &group).unwrap();
+                        t0.elapsed().as_secs_f64()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let worst = exposed.iter().copied().fold(0.0, f64::max);
+        println!("   -> exposed allreduce: {:.1} us (worst rank)", worst * 1e6);
+    });
+
+    // bucketed: one bucket per layer, launched as each "backward" finishes
+    let sizes_ref = &sizes;
+    let buck = b.run_once("bucketed overlap (1 bucket/layer)", || {
+        let grad_world = world(ranks);
+        let exposed: Vec<f64> = std::thread::scope(|s| {
+            let hs: Vec<_> = grad_world
+                .into_iter()
+                .map(|ep| {
+                    s.spawn(move || {
+                        let group: Vec<usize> = (0..ranks).collect();
+                        let plan = BucketPlan::new(sizes_ref, per_layer);
+                        let mut ov =
+                            OverlapAllreduce::start(Box::new(ep), group, plan);
+                        let mut grads: Vec<Tensor> = sizes_ref
+                            .iter()
+                            .map(|&sz| Tensor::from_vec(&[sz], vec![1.0; sz]))
+                            .collect();
+                        for pi in (0..layers).rev() {
+                            std::thread::sleep(compute); // this layer's backward
+                            let data = grads[pi].data().to_vec();
+                            ov.param_ready(pi, &data);
+                        }
+                        let rep = ov.finish(&mut grads).unwrap();
+                        ov.shutdown().unwrap();
+                        rep.exposed_secs
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let worst = exposed.iter().copied().fold(0.0, f64::max);
+        println!("   -> exposed allreduce: {:.1} us (worst rank)", worst * 1e6);
+    });
+    println!(
+        "   -> end-to-end {:.2} ms monolithic vs {:.2} ms bucketed \
+         ({:.2}x, {} x {} f32 grads)",
+        mono.median * 1e3,
+        buck.median * 1e3,
+        mono.median / buck.median,
+        layers,
+        per_layer,
+    );
 }
 
 /// Container hyperslab read throughput (the PFS-facing path).

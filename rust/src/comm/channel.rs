@@ -1,0 +1,88 @@
+//! The fully-connected channel-thread backend (the default world).
+//!
+//! Ranks are threads, links are unbounded `std::sync::mpsc` channels, so
+//! sends never block and the engine's send-then-receive halo protocol
+//! cannot deadlock; numerics are exactly what a real MPI/NCCL deployment
+//! computes (same reduction orders via the shared trait collectives).
+
+use super::{Collective, Communicator, Counters};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+type Msg = Vec<f32>;
+
+/// One rank's endpoint into a fully-connected channel world.
+pub struct Endpoint {
+    pub rank: usize,
+    pub world: usize,
+    txs: Vec<Sender<Msg>>,
+    rxs: Vec<Receiver<Msg>>,
+    pub counters: Arc<Counters>,
+}
+
+/// Build a fully-connected world of `n` endpoints.
+pub fn world(n: usize) -> Vec<Endpoint> {
+    let counters = Arc::new(Counters::default());
+    // txs[src][dst], rxs[dst][src]
+    let mut txs: Vec<Vec<Option<Sender<Msg>>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+    let mut rxs: Vec<Vec<Option<Receiver<Msg>>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+    for src in 0..n {
+        for dst in 0..n {
+            let (tx, rx) = channel();
+            txs[src][dst] = Some(tx);
+            rxs[dst][src] = Some(rx);
+        }
+    }
+    txs.into_iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(rank, (tx_row, rx_row))| Endpoint {
+            rank,
+            world: n,
+            txs: tx_row.into_iter().map(Option::unwrap).collect(),
+            rxs: rx_row.into_iter().map(Option::unwrap).collect(),
+            counters: counters.clone(),
+        })
+        .collect()
+}
+
+impl Communicator for Endpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    /// Asynchronous send (never blocks — unbounded channel).
+    fn send(&self, to: usize, data: Vec<f32>) {
+        self.counters
+            .bytes
+            .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.txs[to].send(data).expect("peer endpoint dropped");
+    }
+
+    fn recv(&self, from: usize) -> Result<Vec<f32>> {
+        self.rxs[from]
+            .recv()
+            .map_err(|_| anyhow!("rank {}: peer {from} disconnected", self.rank))
+    }
+
+    fn counters(&self) -> &Arc<Counters> {
+        &self.counters
+    }
+
+    fn on_collective(&self, op: Collective, _elems: usize, _group: &[usize]) {
+        if matches!(op, Collective::AllreduceRing | Collective::AllreduceRd) {
+            self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}

@@ -12,7 +12,7 @@
 //! Pack/unpack are contiguous-slab copies (see [`crate::tensor`]); the
 //! paper's equivalent is its suite of optimized CUDA packing kernels.
 
-use super::Endpoint;
+use super::Communicator;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
@@ -20,9 +20,11 @@ use anyhow::Result;
 /// each depth side (neighbour data or zeros at the global boundary).
 ///
 /// `up` is the rank holding the previous depth shard, `down` the next.
-/// All ranks of a sample group must call this collectively.
+/// All ranks of a sample group must call this collectively. Works with
+/// any [`Communicator`] backend (the send-then-receive protocol only
+/// requires non-blocking sends).
 pub fn exchange_forward(
-    ep: &Endpoint,
+    ep: &dyn Communicator,
     shard: &Tensor,
     halo: usize,
     up: Option<usize>,
@@ -58,7 +60,7 @@ pub fn exchange_forward(
 /// the shard and accumulate the halo-plane gradients received from the
 /// neighbours into the shard's boundary planes.
 pub fn exchange_backward(
-    ep: &Endpoint,
+    ep: &dyn Communicator,
     dx_padded: &Tensor,
     halo: usize,
     up: Option<usize>,
@@ -99,7 +101,7 @@ fn dims5(t: &Tensor) -> (usize, usize, usize, usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::world;
+    use crate::comm::{world, Loopback};
     use crate::partition::{DepthPartition, Topology};
     use crate::util::rng::Pcg;
     use std::thread;
@@ -212,5 +214,16 @@ mod tests {
         assert_eq!(p.data(), &[0.0, 1.0, 2.0, 0.0]);
         let dx = exchange_backward(&eps[0], &p, 1, None, None).unwrap();
         assert_eq!(dx.data(), &[1.0, 2.0]);
+    }
+
+    /// The loopback backend behaves identically for boundary-only ranks.
+    #[test]
+    fn loopback_backend_single_rank() {
+        let lb = Loopback::new();
+        let x = Tensor::from_vec(&[1, 1, 2, 1, 1], vec![3.0, 4.0]);
+        let p = exchange_forward(&lb, &x, 1, None, None).unwrap();
+        assert_eq!(p.data(), &[0.0, 3.0, 4.0, 0.0]);
+        let dx = exchange_backward(&lb, &p, 1, None, None).unwrap();
+        assert_eq!(dx.data(), &[3.0, 4.0]);
     }
 }

@@ -1,0 +1,58 @@
+//! Deterministic single-process loopback backend.
+//!
+//! A world of exactly one rank: self-sends go through an in-object FIFO
+//! queue, group-of-one collectives are no-ops (by the trait's early
+//! returns). No threads, no channels between ranks — ideal for fast unit
+//! tests and for single-rank engine runs that still need a
+//! [`Communicator`].
+
+use super::{Communicator, Counters};
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// The single-rank backend.
+#[derive(Default)]
+pub struct Loopback {
+    queue: Mutex<VecDeque<Vec<f32>>>,
+    counters: Arc<Counters>,
+}
+
+impl Loopback {
+    pub fn new() -> Loopback {
+        Loopback::default()
+    }
+}
+
+impl Communicator for Loopback {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn world_size(&self) -> usize {
+        1
+    }
+
+    fn send(&self, to: usize, data: Vec<f32>) {
+        assert_eq!(to, 0, "loopback world has a single rank");
+        self.counters
+            .bytes
+            .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.queue.lock().expect("loopback queue poisoned").push_back(data);
+    }
+
+    fn recv(&self, from: usize) -> Result<Vec<f32>> {
+        assert_eq!(from, 0, "loopback world has a single rank");
+        self.queue
+            .lock()
+            .expect("loopback queue poisoned")
+            .pop_front()
+            .ok_or_else(|| anyhow!("loopback recv with no pending self-message"))
+    }
+
+    fn counters(&self) -> &Arc<Counters> {
+        &self.counters
+    }
+}

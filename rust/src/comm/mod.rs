@@ -1,27 +1,65 @@
-//! Simulated multi-rank communicator: ranks are threads, links are
-//! channels.
+//! The communication layer: a [`Communicator`] trait with pluggable
+//! backends, collectives layered over point-to-point, and bucketed
+//! compute-overlapped gradient allreduce.
 //!
-//! The functional engine runs every GPU of the paper's cluster as a thread
-//! holding an [`Endpoint`]. Message passing is `std::sync::mpsc` with
-//! unbounded buffering, so sends never block and the engine's
-//! send-then-receive halo protocol cannot deadlock; numerics are exactly
-//! what a real MPI/NCCL deployment computes (same reduction orders), which
-//! is what the hybrid-vs-single-rank equivalence tests validate.
+//! # Layering
 //!
-//! Collectives are implemented *over* point-to-point — ring allreduce
-//! (reduce-scatter + allgather, the NCCL algorithm the paper leans on) and
-//! recursive doubling — so their communication structure can be counted,
-//! benchmarked (`benches/micro.rs`) and fed to the §III-C performance
-//! model.
+//! Collectives are *provided methods* of the trait, implemented over the
+//! backend's `send`/`recv` — ring allreduce (reduce-scatter + allgather,
+//! the NCCL algorithm the paper leans on), recursive doubling, allgather,
+//! gather/broadcast and barrier — so their communication structure is
+//! identical on every backend and can be counted, benchmarked
+//! (`benches/micro.rs`) and fed to the §III-C performance model. Reduction
+//! orders are deterministic and identical on every rank, which is what the
+//! engine hybrid-vs-single-rank equivalence tests validate.
+//!
+//! # Backends — which one to use
+//!
+//! * [`Endpoint`] (module [`channel`], built with [`world`]) — the
+//!   fully-connected channel-thread world: every rank is a thread, links
+//!   are unbounded `std::sync::mpsc` channels, so sends never block and
+//!   the engine's send-then-receive halo protocol cannot deadlock. This is
+//!   the default backend for multi-rank training and the numerical
+//!   reference (same reduction orders as a real MPI/NCCL deployment).
+//! * [`Loopback`] — a deterministic single-process, single-rank backend:
+//!   self-sends go through an in-object queue, group-of-one collectives
+//!   are no-ops. Use it in unit tests and single-rank runs that need a
+//!   `Communicator` without spawning a thread world.
+//! * [`Traced`] — wraps any other backend and records every message
+//!   (source, destination, bytes, sequence) and every logical collective
+//!   into a shared [`TraceCollector`]. Because collectives decompose into
+//!   `send`/`recv`, the trace captures the *actual* wire structure;
+//!   `perfmodel::trace` replays it against the §III-C link model to
+//!   predict communication time for a measured run. Use it to validate
+//!   the performance model or to audit communication volume.
+//!
+//! Backends are selected with [`CommBackend`]; the engines accept any of
+//! them and must produce identical training trajectories.
+//!
+//! # Overlap
+//!
+//! [`bucket`] implements the paper's backprop/allreduce overlap (Fig. 6):
+//! gradients are partitioned into fixed-size buckets and each bucket's
+//! ring allreduce is launched on a per-rank worker thread as soon as the
+//! owning layers' backward passes complete, instead of one blocking
+//! allreduce at the end of the step.
 
+pub mod bucket;
+mod channel;
 pub mod halo;
+pub mod loopback;
+pub mod traced;
 
-use anyhow::{anyhow, Result};
+pub use bucket::{BucketPlan, GradReduce, OverlapAllreduce, OverlapReport, DEFAULT_BUCKET_ELEMS};
+pub use channel::{world, Endpoint};
+pub use loopback::Loopback;
+pub use traced::{CollectiveEvent, MessageEvent, TraceCollector, Traced};
+
+use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-/// Global communication counters (shared by all endpoints).
+/// Global communication counters (shared by all endpoints of a world).
 #[derive(Default, Debug)]
 pub struct Counters {
     pub bytes: AtomicU64,
@@ -36,72 +74,58 @@ impl Counters {
     pub fn messages(&self) -> u64 {
         self.messages.load(Ordering::Relaxed)
     }
-}
-
-type Msg = Vec<f32>;
-
-/// One rank's endpoint into the world.
-pub struct Endpoint {
-    pub rank: usize,
-    pub world: usize,
-    txs: Vec<Sender<Msg>>,
-    rxs: Vec<Receiver<Msg>>,
-    pub counters: Arc<Counters>,
-}
-
-/// Build a fully-connected world of `n` endpoints.
-pub fn world(n: usize) -> Vec<Endpoint> {
-    let counters = Arc::new(Counters::default());
-    // txs[src][dst], rxs[dst][src]
-    let mut txs: Vec<Vec<Option<Sender<Msg>>>> = (0..n)
-        .map(|_| (0..n).map(|_| None).collect())
-        .collect();
-    let mut rxs: Vec<Vec<Option<Receiver<Msg>>>> = (0..n)
-        .map(|_| (0..n).map(|_| None).collect())
-        .collect();
-    for src in 0..n {
-        for dst in 0..n {
-            let (tx, rx) = channel();
-            txs[src][dst] = Some(tx);
-            rxs[dst][src] = Some(rx);
-        }
+    pub fn allreduces(&self) -> u64 {
+        self.allreduces.load(Ordering::Relaxed)
     }
-    txs.into_iter()
-        .zip(rxs)
-        .enumerate()
-        .map(|(rank, (tx_row, rx_row))| Endpoint {
-            rank,
-            world: n,
-            txs: tx_row.into_iter().map(Option::unwrap).collect(),
-            rxs: rx_row.into_iter().map(Option::unwrap).collect(),
-            counters: counters.clone(),
-        })
-        .collect()
 }
 
-impl Endpoint {
-    /// Asynchronous send (never blocks — unbounded channel).
-    pub fn send(&self, to: usize, data: Vec<f32>) {
-        self.counters
-            .bytes
-            .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
-        self.counters.messages.fetch_add(1, Ordering::Relaxed);
-        self.txs[to].send(data).expect("peer endpoint dropped");
-    }
+/// Collective operations, for the [`Communicator::on_collective`] hook and
+/// the traced backend's records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllreduceRing,
+    AllreduceRd,
+    ReduceScatter,
+    Allgather,
+    GatherToRoot,
+    Broadcast,
+    Barrier,
+}
+
+/// Position of `rank` within `group` (collectives address group members by
+/// index; `group` may be any permutation of any subset of the world).
+fn index_in(group: &[usize], rank: usize) -> usize {
+    group
+        .iter()
+        .position(|&r| r == rank)
+        .expect("rank not in group")
+}
+
+/// A rank's endpoint into a communication world.
+///
+/// Backends implement the five required methods; every collective is a
+/// provided method layered over `send`/`recv`, so all backends share one
+/// (deterministic, rank-identical) collective implementation.
+pub trait Communicator: Send {
+    /// This rank's id in the world.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the world.
+    fn world_size(&self) -> usize;
+
+    /// Asynchronous point-to-point send (must never block).
+    fn send(&self, to: usize, data: Vec<f32>);
 
     /// Blocking receive of the next message from `from` (program order).
-    pub fn recv(&self, from: usize) -> Result<Vec<f32>> {
-        self.rxs[from]
-            .recv()
-            .map_err(|_| anyhow!("rank {}: peer {from} disconnected", self.rank))
-    }
+    fn recv(&self, from: usize) -> Result<Vec<f32>>;
 
-    fn me_in(&self, group: &[usize]) -> usize {
-        group
-            .iter()
-            .position(|&r| r == self.rank)
-            .expect("rank not in group")
-    }
+    /// Shared traffic counters of this rank's world.
+    fn counters(&self) -> &Arc<Counters>;
+
+    /// Hook fired when a collective with more than one participant starts
+    /// on this rank. Backends use it for accounting (channel world) or
+    /// trace recording (traced backend).
+    fn on_collective(&self, _op: Collective, _elems: usize, _group: &[usize]) {}
 
     /// In-place sum-allreduce over `group` using the ring algorithm
     /// (reduce-scatter then allgather), 2(g-1) steps. Works for any group
@@ -110,30 +134,17 @@ impl Endpoint {
     /// Reduction order is identical on every rank (chunk r is always
     /// accumulated in ring order starting at rank r+1), so all members end
     /// with bit-identical results — required for the equivalence tests.
-    pub fn allreduce_sum(&self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+    fn allreduce_sum(&self, buf: &mut [f32], group: &[usize]) -> Result<()> {
         let g = group.len();
         if g == 1 {
             return Ok(());
         }
-        self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
-        let me = self.me_in(group);
+        self.on_collective(Collective::AllreduceRing, buf.len(), group);
+        let me = index_in(group, self.rank());
         let next = group[(me + 1) % g];
         let prev = group[(me + g - 1) % g];
         let bounds: Vec<(usize, usize)> = (0..g).map(|i| chunk_bounds(buf.len(), g, i)).collect();
-
-        // reduce-scatter: after step s, rank owns the full sum of chunk
-        // (me+1) after g-1 steps.
-        for s in 0..g - 1 {
-            let send_c = (me + g - s) % g;
-            let recv_c = (me + g - s - 1) % g;
-            let (lo, hi) = bounds[send_c];
-            self.send(next, buf[lo..hi].to_vec());
-            let incoming = self.recv(prev)?;
-            let (lo, hi) = bounds[recv_c];
-            for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
-                *dst += src;
-            }
-        }
+        ring_reduce_scatter(self, buf, group, &bounds)?;
         // allgather the reduced chunks around the ring.
         for s in 0..g - 1 {
             let send_c = (me + 1 + g - s) % g;
@@ -147,23 +158,40 @@ impl Endpoint {
         Ok(())
     }
 
+    /// Ring reduce-scatter: after the call, this rank's *owned chunk* —
+    /// returned as `[lo, hi)` bounds into `buf` — holds the full sum over
+    /// the group; the rest of `buf` holds partial sums. The owned chunk of
+    /// group index `me` is chunk `(me + 1) % g`, matching the first phase
+    /// of [`Communicator::allreduce_sum`].
+    fn reduce_scatter_sum(&self, buf: &mut [f32], group: &[usize]) -> Result<(usize, usize)> {
+        let g = group.len();
+        if g == 1 {
+            return Ok((0, buf.len()));
+        }
+        self.on_collective(Collective::ReduceScatter, buf.len(), group);
+        let bounds: Vec<(usize, usize)> = (0..g).map(|i| chunk_bounds(buf.len(), g, i)).collect();
+        ring_reduce_scatter(self, buf, group, &bounds)?;
+        Ok(bounds[(index_in(group, self.rank()) + 1) % g])
+    }
+
     /// Recursive-doubling allreduce (power-of-two groups): log2(g) steps of
     /// pairwise exchange+add. Higher bandwidth cost than ring for large
     /// buffers but lower latency for small ones — the engine uses it for
     /// the per-channel BN statistics.
-    pub fn allreduce_sum_rd(&self, buf: &mut [f32], group: &[usize]) -> Result<()> {
+    fn allreduce_sum_rd(&self, buf: &mut [f32], group: &[usize]) -> Result<()> {
         let g = group.len();
         if g == 1 {
             return Ok(());
         }
         assert!(g.is_power_of_two(), "recursive doubling needs 2^k ranks");
-        self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
-        let me = self.me_in(group);
+        self.on_collective(Collective::AllreduceRd, buf.len(), group);
+        let me = index_in(group, self.rank());
         let mut dist = 1;
         while dist < g {
             let peer = group[me ^ dist];
             self.send(peer, buf.to_vec());
             let incoming = self.recv(peer)?;
+            assert_eq!(incoming.len(), buf.len(), "rd schedule out of sync");
             for (dst, src) in buf.iter_mut().zip(&incoming) {
                 *dst += src;
             }
@@ -174,8 +202,11 @@ impl Endpoint {
 
     /// Gather equal-length contributions from all of `group` onto every
     /// member (flat exchange; used for small control data).
-    pub fn allgather(&self, mine: &[f32], group: &[usize]) -> Result<Vec<Vec<f32>>> {
-        let me = self.me_in(group);
+    fn allgather(&self, mine: &[f32], group: &[usize]) -> Result<Vec<Vec<f32>>> {
+        let me = index_in(group, self.rank());
+        if group.len() > 1 {
+            self.on_collective(Collective::Allgather, mine.len(), group);
+        }
         for (i, &r) in group.iter().enumerate() {
             if i != me {
                 self.send(r, mine.to_vec());
@@ -194,9 +225,11 @@ impl Endpoint {
 
     /// Gather variable-length f32 buffers to `group[0]`; returns Some(parts)
     /// on the root (in group order), None elsewhere.
-    pub fn gather_to_root(&self, mine: &[f32], group: &[usize])
-                          -> Result<Option<Vec<Vec<f32>>>> {
-        let me = self.me_in(group);
+    fn gather_to_root(&self, mine: &[f32], group: &[usize]) -> Result<Option<Vec<Vec<f32>>>> {
+        let me = index_in(group, self.rank());
+        if group.len() > 1 {
+            self.on_collective(Collective::GatherToRoot, mine.len(), group);
+        }
         if me == 0 {
             let mut parts = Vec::with_capacity(group.len());
             parts.push(mine.to_vec());
@@ -211,8 +244,11 @@ impl Endpoint {
     }
 
     /// Broadcast from `group[0]` to the rest; non-roots pass an empty vec.
-    pub fn broadcast(&self, mine: Vec<f32>, group: &[usize]) -> Result<Vec<f32>> {
-        let me = self.me_in(group);
+    fn broadcast(&self, mine: Vec<f32>, group: &[usize]) -> Result<Vec<f32>> {
+        let me = index_in(group, self.rank());
+        if group.len() > 1 {
+            self.on_collective(Collective::Broadcast, mine.len(), group);
+        }
         if me == 0 {
             for &r in &group[1..] {
                 self.send(r, mine.clone());
@@ -223,12 +259,105 @@ impl Endpoint {
         }
     }
 
-    /// Synchronization barrier over `group`.
-    pub fn barrier(&self, group: &[usize]) -> Result<()> {
-        self.gather_to_root(&[], group)?;
-        self.broadcast(vec![], group)?;
+    /// Synchronization barrier over `group` (gather of empties to the
+    /// group root, then a broadcast of empties back).
+    fn barrier(&self, group: &[usize]) -> Result<()> {
+        let g = group.len();
+        if g == 1 {
+            return Ok(());
+        }
+        self.on_collective(Collective::Barrier, 0, group);
+        let me = index_in(group, self.rank());
+        if me == 0 {
+            for &r in &group[1..] {
+                self.recv(r)?;
+            }
+            for &r in &group[1..] {
+                self.send(r, Vec::new());
+            }
+        } else {
+            self.send(group[0], Vec::new());
+            self.recv(group[0])?;
+        }
         Ok(())
     }
+}
+
+/// Backend selector for the training engines: every variant produces a
+/// world of [`Communicator`]s with identical collective semantics.
+#[derive(Clone)]
+pub enum CommBackend {
+    /// Fully-connected channel-thread world (the default).
+    Channel,
+    /// Deterministic single-process backend; only world size 1.
+    Loopback,
+    /// Channel world wrapped in message/collective tracing.
+    Traced(Arc<TraceCollector>),
+}
+
+impl CommBackend {
+    /// Build a world of `n` communicators.
+    pub fn build_world(&self, n: usize) -> Result<Vec<Box<dyn Communicator>>> {
+        match self {
+            CommBackend::Channel => Ok(world(n)
+                .into_iter()
+                .map(|e| Box::new(e) as Box<dyn Communicator>)
+                .collect()),
+            CommBackend::Loopback => {
+                if n != 1 {
+                    bail!("loopback backend is single-rank only (asked for {n} ranks)");
+                }
+                Ok(vec![Box::new(Loopback::new()) as Box<dyn Communicator>])
+            }
+            CommBackend::Traced(tc) => Ok(world(n)
+                .into_iter()
+                .map(|e| Box::new(Traced::new(e, tc.clone())) as Box<dyn Communicator>)
+                .collect()),
+        }
+    }
+
+    /// Human-readable backend name (CLI/report labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommBackend::Channel => "channel",
+            CommBackend::Loopback => "loopback",
+            CommBackend::Traced(_) => "traced",
+        }
+    }
+}
+
+/// The ring reduce-scatter schedule shared by [`Communicator::allreduce_sum`]
+/// and [`Communicator::reduce_scatter_sum`]: after g-1 steps, group index
+/// `me` owns the full sum of chunk `(me + 1) % g` within `bounds`; the rest
+/// of `buf` holds partial sums. Callers handle the g == 1 early return and
+/// the [`Communicator::on_collective`] accounting.
+fn ring_reduce_scatter<C: Communicator + ?Sized>(
+    ep: &C,
+    buf: &mut [f32],
+    group: &[usize],
+    bounds: &[(usize, usize)],
+) -> Result<()> {
+    let g = group.len();
+    let me = index_in(group, ep.rank());
+    let next = group[(me + 1) % g];
+    let prev = group[(me + g - 1) % g];
+    for s in 0..g - 1 {
+        let send_c = (me + g - s) % g;
+        let recv_c = (me + g - s - 1) % g;
+        let (lo, hi) = bounds[send_c];
+        ep.send(next, buf[lo..hi].to_vec());
+        let incoming = ep.recv(prev)?;
+        let (lo, hi) = bounds[recv_c];
+        // A length mismatch means the ranks' collective schedules diverged
+        // (e.g. buckets launched in different orders); the zip below would
+        // silently truncate, so fail loudly instead — a hard assert, since
+        // release builds are exactly where silent corruption would hide.
+        assert_eq!(incoming.len(), hi - lo, "ring schedule out of sync");
+        for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
+            *dst += src;
+        }
+    }
+    Ok(())
 }
 
 /// Even-ish chunking of `len` into `parts` (first `len % parts` chunks get
@@ -315,6 +444,29 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_owns_full_sum() {
+        let n = 4;
+        let len = 13;
+        let outs = run_world(n, move |ep| {
+            let group: Vec<usize> = (0..n).collect();
+            let mut buf: Vec<f32> = (0..len).map(|i| (ep.rank * len + i) as f32).collect();
+            let (lo, hi) = ep.reduce_scatter_sum(&mut buf, &group).unwrap();
+            let mut out = vec![lo as f32, hi as f32];
+            out.extend_from_slice(&buf[lo..hi]);
+            out
+        });
+        let expect: Vec<f32> = (0..len)
+            .map(|i| (0..n).map(|r| (r * len + i) as f32).sum())
+            .collect();
+        for (me, o) in outs.iter().enumerate() {
+            let (lo, hi) = (o[0] as usize, o[1] as usize);
+            let owned_chunk = (me + 1) % n;
+            assert_eq!((lo, hi), chunk_bounds(len, n, owned_chunk), "rank {me}");
+            assert_eq!(&o[2..], &expect[lo..hi], "rank {me}");
+        }
+    }
+
+    #[test]
     fn rd_allreduce_matches_ring() {
         let out = run_world(4, |ep| {
             let group: Vec<usize> = (0..4).collect();
@@ -375,7 +527,7 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let mut eps = world(2);
-        let c = eps[0].counters.clone();
+        let c = eps[0].counters().clone();
         let e1 = eps.pop().unwrap();
         let e0 = eps.pop().unwrap();
         thread::scope(|s| {
@@ -386,6 +538,52 @@ mod tests {
         });
         assert_eq!(c.bytes(), 400);
         assert_eq!(c.messages(), 1);
+    }
+
+    #[test]
+    fn loopback_backend_is_single_rank_world() {
+        let comms = CommBackend::Loopback.build_world(1).unwrap();
+        let ep = &comms[0];
+        assert_eq!((ep.rank(), ep.world_size()), (0, 1));
+        // group-of-one collectives are no-ops with correct results
+        let mut buf = vec![3.0, -1.0];
+        ep.allreduce_sum(&mut buf, &[0]).unwrap();
+        assert_eq!(buf, vec![3.0, -1.0]);
+        assert_eq!(ep.allgather(&[2.0], &[0]).unwrap(), vec![vec![2.0]]);
+        ep.barrier(&[0]).unwrap();
+        // self-messaging is FIFO
+        ep.send(0, vec![1.0]);
+        ep.send(0, vec![2.0]);
+        assert_eq!(ep.recv(0).unwrap(), vec![1.0]);
+        assert_eq!(ep.recv(0).unwrap(), vec![2.0]);
+        assert!(CommBackend::Loopback.build_world(2).is_err());
+    }
+
+    #[test]
+    fn traced_backend_matches_channel_numerics() {
+        let tc = Arc::new(TraceCollector::new());
+        let comms = CommBackend::Traced(tc.clone()).build_world(3).unwrap();
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|ep| {
+                    s.spawn(move || {
+                        let group: Vec<usize> = (0..3).collect();
+                        let mut buf = vec![ep.rank() as f32; 5];
+                        ep.allreduce_sum(&mut buf, &group).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in &outs {
+            assert_eq!(o, &vec![3.0; 5]);
+        }
+        // ring over g ranks moves exactly 2(g-1) * len elements in total
+        assert_eq!(tc.message_count(), 2 * 2 * 3);
+        assert_eq!(tc.total_bytes(), (2 * 2 * 5 * 4) as u64);
+        assert_eq!(tc.collectives().len(), 1, "one logical collective");
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! The traced backend: records message sizes/orders and logical
+//! collectives for the §III-C performance model.
+//!
+//! [`Traced`] wraps any [`Communicator`] and appends one [`MessageEvent`]
+//! per point-to-point send and one [`CollectiveEvent`] per *logical*
+//! collective (recorded by the group root `group[0]`, so a g-rank
+//! allreduce yields one event, not g) to a shared [`TraceCollector`].
+//! Because the trait's collectives decompose into `send`/`recv`, the
+//! message stream captures the actual wire structure of ring allreduce,
+//! recursive doubling, halo exchange and the flatten gather — exactly what
+//! `perfmodel::trace` replays against the fitted link model.
+//!
+//! The collector keeps every event in memory (~40 bytes per message), so
+//! it is sized for diagnostic runs of bounded step count; for long traced
+//! runs, drain with [`TraceCollector::clear`] between steps or phases.
+
+use super::{Collective, Communicator, Counters};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One recorded point-to-point message.
+#[derive(Clone, Copy, Debug)]
+pub struct MessageEvent {
+    /// Global submission order across all ranks.
+    pub seq: u64,
+    pub from: usize,
+    pub to: usize,
+    pub bytes: u64,
+}
+
+/// One recorded logical collective (one event per group-wide call).
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveEvent {
+    pub seq: u64,
+    /// Group root (`group[0]`, the recording rank).
+    pub root: usize,
+    pub op: Collective,
+    /// Per-rank buffer length in f32 elements.
+    pub elems: usize,
+    pub group_len: usize,
+}
+
+/// Shared trace sink for a (pair of) traced world(s).
+#[derive(Default)]
+pub struct TraceCollector {
+    seq: AtomicU64,
+    messages: Mutex<Vec<MessageEvent>>,
+    collectives: Mutex<Vec<CollectiveEvent>>,
+}
+
+impl TraceCollector {
+    pub fn new() -> TraceCollector {
+        TraceCollector::default()
+    }
+
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn record_message(&self, from: usize, to: usize, bytes: u64) {
+        let ev = MessageEvent { seq: self.next_seq(), from, to, bytes };
+        self.messages.lock().expect("trace poisoned").push(ev);
+    }
+
+    fn record_collective(&self, root: usize, op: Collective, elems: usize, group_len: usize) {
+        let ev = CollectiveEvent { seq: self.next_seq(), root, op, elems, group_len };
+        self.collectives.lock().expect("trace poisoned").push(ev);
+    }
+
+    /// Snapshot of all recorded messages (submission order).
+    pub fn messages(&self) -> Vec<MessageEvent> {
+        let mut v = self.messages.lock().expect("trace poisoned").clone();
+        v.sort_by_key(|e| e.seq);
+        v
+    }
+
+    /// Snapshot of all recorded logical collectives (submission order).
+    pub fn collectives(&self) -> Vec<CollectiveEvent> {
+        let mut v = self.collectives.lock().expect("trace poisoned").clone();
+        v.sort_by_key(|e| e.seq);
+        v
+    }
+
+    pub fn message_count(&self) -> usize {
+        self.messages.lock().expect("trace poisoned").len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.messages.lock().expect("trace poisoned").iter().map(|e| e.bytes).sum()
+    }
+
+    /// Bytes sent per rank, for worlds of size `world`.
+    pub fn per_rank_bytes(&self, world: usize) -> Vec<u64> {
+        let mut out = vec![0u64; world];
+        for e in self.messages.lock().expect("trace poisoned").iter() {
+            if e.from < world {
+                out[e.from] += e.bytes;
+            }
+        }
+        out
+    }
+
+    /// Forget everything recorded so far (between steps/phases).
+    pub fn clear(&self) {
+        self.messages.lock().expect("trace poisoned").clear();
+        self.collectives.lock().expect("trace poisoned").clear();
+    }
+}
+
+/// A [`Communicator`] wrapper that traces all traffic of `inner`.
+pub struct Traced<C: Communicator> {
+    inner: C,
+    trace: Arc<TraceCollector>,
+}
+
+impl<C: Communicator> Traced<C> {
+    pub fn new(inner: C, trace: Arc<TraceCollector>) -> Traced<C> {
+        Traced { inner, trace }
+    }
+
+    pub fn trace(&self) -> &Arc<TraceCollector> {
+        &self.trace
+    }
+}
+
+impl<C: Communicator> Communicator for Traced<C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world_size(&self) -> usize {
+        self.inner.world_size()
+    }
+
+    fn send(&self, to: usize, data: Vec<f32>) {
+        self.trace
+            .record_message(self.inner.rank(), to, (data.len() * 4) as u64);
+        self.inner.send(to, data);
+    }
+
+    fn recv(&self, from: usize) -> Result<Vec<f32>> {
+        self.inner.recv(from)
+    }
+
+    fn counters(&self) -> &Arc<Counters> {
+        self.inner.counters()
+    }
+
+    fn on_collective(&self, op: Collective, elems: usize, group: &[usize]) {
+        // Record on the group root (`group[0]`): unique per call, and for
+        // rooted collectives (gather/broadcast) the only rank whose buffer
+        // length is meaningful. The minimum rank would record elems=0 for
+        // a broadcast from a permuted group's root.
+        if group.first() == Some(&self.inner.rank()) {
+            self.trace
+                .record_collective(self.inner.rank(), op, elems, group.len());
+        }
+        self.inner.on_collective(op, elems, group);
+    }
+}

@@ -11,7 +11,7 @@ use super::{
     dropout_mask, init_params, sample_schedule, LrSchedule, PhaseTimes, StepRecord,
     TrainReport, BN_MOMENTUM,
 };
-use crate::comm::world;
+use crate::comm::{CommBackend, Communicator, GradReduce, OverlapAllreduce};
 use crate::runtime::{ModelInfo, RuntimeHandle};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
@@ -37,11 +37,24 @@ pub struct FullSource {
     pub targets: Vec<Tensor>,
 }
 
-/// Train with `groups` fused data-parallel ranks.
+/// Train with `groups` fused data-parallel ranks on the default channel
+/// backend with bucketed gradient allreduce.
 pub fn train_fused(
     rt: &RuntimeHandle,
     opts: &FusedOpts,
     source: Arc<FullSource>,
+) -> Result<TrainReport> {
+    train_fused_with(rt, opts, source, &CommBackend::Channel, GradReduce::default())
+}
+
+/// [`train_fused`] with an explicit communicator backend and gradient
+/// aggregation strategy.
+pub fn train_fused_with(
+    rt: &RuntimeHandle,
+    opts: &FusedOpts,
+    source: Arc<FullSource>,
+    backend: &CommBackend,
+    reduce: GradReduce,
 ) -> Result<TrainReport> {
     let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
     if opts.batch_global % opts.groups != 0 {
@@ -54,20 +67,22 @@ pub fn train_fused(
     }
     let sched = Arc::new(sample_schedule(opts.seed, source.inputs.len(),
                                          opts.batch_global, opts.steps));
-    let endpoints = world(opts.groups);
+    let endpoints = backend.build_world(opts.groups)?;
+    let grad_eps = reduce.build_grad_world(backend, opts.groups)?;
 
     let reports: Vec<Result<TrainReport>> = std::thread::scope(|s| {
         endpoints
             .into_iter()
+            .zip(grad_eps)
             .enumerate()
-            .map(|(g, ep)| {
+            .map(|(g, (ep, grad_ep))| {
                 let rt = rt.clone();
                 let info = info.clone();
                 let source = source.clone();
                 let sched = sched.clone();
                 let opts = opts.clone();
                 s.spawn(move || -> Result<TrainReport> {
-                    run_group(g, ep, rt, info, source, sched, opts)
+                    run_group(g, ep, grad_ep, reduce, rt, info, source, sched, opts)
                 })
             })
             .collect::<Vec<_>>()
@@ -85,9 +100,12 @@ pub fn train_fused(
     Ok(out.unwrap())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_group(
     group: usize,
-    ep: crate::comm::Endpoint,
+    ep: Box<dyn Communicator>,
+    grad_ep: Option<Box<dyn Communicator>>,
+    reduce: GradReduce,
     rt: RuntimeHandle,
     info: Arc<ModelInfo>,
     source: Arc<FullSource>,
@@ -108,6 +126,14 @@ fn run_group(
         bn_chans.iter().map(|&c| Tensor::from_vec(&[c], vec![1.0; c])).collect();
     let mut records = Vec::new();
     let mut phases = PhaseTimes::default();
+
+    // Bucketed gradient allreduce on a worker thread: in the fused engine
+    // the whole backward runs inside one opaque executable, so gradients
+    // become final per-parameter only as they are extracted from the last
+    // micro-batch's outputs — buckets launch during that extraction and
+    // pipeline with the remaining unpacking/EMA work.
+    let sizes: Vec<usize> = info.params.iter().map(|(_, s)| s.iter().product()).collect();
+    let mut overlap = OverlapAllreduce::for_rank(reduce, grad_ep, world_group.clone(), &sizes);
 
     for step in 0..opts.steps {
         let lr = opts.schedule.at(step);
@@ -150,10 +176,16 @@ fn run_group(
             // outputs: loss, grads..., bn means..., bn vars...
             let loss = out.remove(0).item();
             loss_acc += loss / (bpg / fb) as f32;
+            let last_mb = mb + 1 == bpg / fb;
             for (gi, g) in out.drain(..n_params).enumerate() {
                 let mut g = g;
                 g.scale(1.0 / (bpg / fb) as f32); // average micro-batches
                 grads[gi].add_assign(&g);
+                if last_mb {
+                    if let Some(ov) = overlap.as_mut() {
+                        ov.param_ready(gi, grads[gi].data());
+                    }
+                }
             }
             for k in 0..n_bn {
                 ema(&mut run_mean[k], &out[k], BN_MOMENTUM);
@@ -161,25 +193,19 @@ fn run_group(
             }
         }
 
-        // average over groups: allreduce then scale
-        let flat_len: usize = grads.iter().map(|g| g.numel()).sum();
-        let mut flat = Vec::with_capacity(flat_len + 1);
-        for g in &grads {
-            flat.extend_from_slice(g.data());
-        }
-        flat.push(loss_acc);
-        let t = Instant::now();
-        ep.allreduce_sum(&mut flat, &world_group)?;
-        phases.allreduce += t.elapsed().as_secs_f64();
+        // average over groups: allreduce (shared epilogue) then scale; the
+        // scalar loss rides its own tiny allreduce in both strategies.
         let inv_g = 1.0 / opts.groups as f32;
-        let mut off = 0;
+        super::reduce_grads(ep.as_ref(), overlap.as_mut(), &mut grads,
+                            &world_group, &mut phases)?;
         for g in grads.iter_mut() {
-            let n = g.numel();
-            g.data_mut().copy_from_slice(&flat[off..off + n]);
             g.scale(inv_g);
-            off += n;
         }
-        let loss_global = flat[flat_len] * inv_g;
+        let t = Instant::now();
+        let mut lbuf = vec![loss_acc];
+        ep.allreduce_sum(&mut lbuf, &world_group)?;
+        phases.allreduce += t.elapsed().as_secs_f64();
+        let loss_global = lbuf[0] * inv_g;
 
         let t = Instant::now();
         adam.step(&mut params, &grads, lr);
@@ -194,12 +220,17 @@ fn run_group(
         records.push(StepRecord { step, loss: loss_global, lr });
     }
 
+    let mut comm_bytes = ep.counters().bytes();
+    if let Some(ov) = overlap.take() {
+        comm_bytes += ov.counters().bytes();
+        ov.shutdown()?;
+    }
     Ok(TrainReport {
         records,
         params,
         running: (run_mean, run_var),
         phases,
-        comm_bytes: ep.counters.bytes(),
+        comm_bytes,
     })
 }
 

@@ -1,7 +1,8 @@
 //! The hybrid-parallel training engine (the paper's §III-A, functional).
 //!
-//! Every rank is a thread owning one comm [`Endpoint`] and a clone of the
-//! PJRT [`RuntimeHandle`]. Ranks form `groups x ways` (data x depth): each
+//! Every rank is a thread owning one [`Communicator`] endpoint and a clone
+//! of the PJRT [`RuntimeHandle`]. Ranks form `groups x ways` (data x
+//! depth): each
 //! sample group walks the per-layer shard executables of the AOT manifest
 //! in lockstep, with
 //!
@@ -13,8 +14,13 @@
 //!   loss) runs on the group root, exactly like the paper's treatment of
 //!   CosmoFlow's fully-connected head ("we ignore the cost of the non-3D
 //!   part", §III-C — here it is merely centralized, not ignored),
-//! * **gradient allreduce** over the whole world after each step (standard
-//!   data-parallel aggregation of the small parameter gradients, §III-A).
+//! * **gradient allreduce** over the whole world (standard data-parallel
+//!   aggregation of the parameter gradients, §III-A) — by default
+//!   *bucketed and overlapped with backward*: each bucket's ring allreduce
+//!   launches on a per-rank worker thread as soon as its layers' backward
+//!   passes complete (the paper's Fig. 6 "Allreduce" stream), leaving only
+//!   the tail exposed. `GradReduce::Monolithic` restores the blocking
+//!   end-of-step allreduce for comparison.
 //!
 //! All ranks hold replicated parameters and run the optimizer on the
 //! (bit-identical) allreduced gradients, so parameters never diverge.
@@ -24,7 +30,7 @@ use super::{
     dropout_mask, init_params, sample_schedule, LrSchedule, PhaseTimes, StepRecord,
     TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
 };
-use crate::comm::{halo, world, Endpoint};
+use crate::comm::{halo, CommBackend, Communicator, GradReduce, OverlapAllreduce};
 use crate::partition::{DepthPartition, Topology};
 use crate::runtime::{LayerDesc, ModelInfo, RuntimeHandle};
 use crate::tensor::Tensor;
@@ -84,12 +90,27 @@ pub struct HybridOpts {
     pub log_every: usize,
 }
 
-/// Train `opts.model` with `groups x ways` hybrid parallelism.
-/// Returns rank 0's view (parameters are replicated and identical).
+/// Train `opts.model` with `groups x ways` hybrid parallelism on the
+/// default channel backend with bucketed, backprop-overlapped gradient
+/// allreduce. Returns rank 0's view (parameters are replicated and
+/// identical).
 pub fn train_hybrid(
     rt: &RuntimeHandle,
     opts: &HybridOpts,
     source: Arc<dyn SampleSource>,
+) -> Result<TrainReport> {
+    train_hybrid_with(rt, opts, source, &CommBackend::Channel, GradReduce::default())
+}
+
+/// [`train_hybrid`] with an explicit communicator backend and gradient
+/// aggregation strategy. All backends and both strategies produce the same
+/// training trajectory (up to float reduction-order noise).
+pub fn train_hybrid_with(
+    rt: &RuntimeHandle,
+    opts: &HybridOpts,
+    source: Arc<dyn SampleSource>,
+    backend: &CommBackend,
+    reduce: GradReduce,
 ) -> Result<TrainReport> {
     let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
     let plan = Arc::new(
@@ -107,12 +128,14 @@ pub fn train_hybrid(
     let topo = Topology::new(opts.groups, opts.ways);
     let sched = Arc::new(sample_schedule(opts.seed, source.len(), opts.batch_global,
                                          opts.steps));
-    let endpoints = world(topo.world_size());
+    let endpoints = backend.build_world(topo.world_size())?;
+    let grad_eps = reduce.build_grad_world(backend, topo.world_size())?;
 
     let reports: Vec<Result<TrainReport>> = std::thread::scope(|s| {
         let handles: Vec<_> = endpoints
             .into_iter()
-            .map(|ep| {
+            .zip(grad_eps)
+            .map(|(ep, grad_ep)| {
                 let rt = rt.clone();
                 let info = info.clone();
                 let plan = plan.clone();
@@ -122,6 +145,8 @@ pub fn train_hybrid(
                 s.spawn(move || {
                     run_rank(RankCtx {
                         ep,
+                        grad_ep,
+                        reduce,
                         topo,
                         rt,
                         info,
@@ -146,7 +171,9 @@ pub fn train_hybrid(
 }
 
 struct RankCtx {
-    ep: Endpoint,
+    ep: Box<dyn Communicator>,
+    grad_ep: Option<Box<dyn Communicator>>,
+    reduce: GradReduce,
     topo: Topology,
     rt: RuntimeHandle,
     info: Arc<ModelInfo>,
@@ -154,6 +181,23 @@ struct RankCtx {
     source: Arc<dyn SampleSource>,
     sched: Arc<Vec<Vec<usize>>>,
     opts: HybridOpts,
+}
+
+/// Parameter indices owned by one plan layer (gradients become final on a
+/// rank as soon as this layer's backward pass for the last local sample
+/// completes — the bucket-overlap readiness signal).
+fn layer_param_indices(info: &ModelInfo, layer: &LayerDesc) -> Vec<usize> {
+    let names: Vec<String> = match layer {
+        LayerDesc::Conv { tag, .. } | LayerDesc::Deconv { tag, .. } => {
+            vec![format!("{tag}.w")]
+        }
+        LayerDesc::Bn { tag, .. } => {
+            vec![format!("{tag}.gamma"), format!("{tag}.beta")]
+        }
+        LayerDesc::Fc { tag, .. } => vec![format!("{tag}.w"), format!("{tag}.b")],
+        _ => Vec::new(),
+    };
+    names.iter().filter_map(|n| info.param_index(n)).collect()
 }
 
 /// Per-layer saved forward state for the backward pass.
@@ -170,13 +214,22 @@ enum Saved {
     Loss,
 }
 
-fn run_rank(cx: RankCtx) -> Result<TrainReport> {
-    let (group, pos) = cx.topo.coords_of(cx.ep.rank);
+fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
+    let rank = cx.ep.rank();
+    let (group, pos) = cx.topo.coords_of(rank);
     let world_group: Vec<usize> = (0..cx.topo.world_size()).collect();
     let group_ranks = cx.topo.group_ranks(group);
-    let (up, down) = (cx.topo.up(cx.ep.rank), cx.topo.down(cx.ep.rank));
+    let (up, down) = (cx.topo.up(rank), cx.topo.down(rank));
     let is_root = pos == 0;
     let bpg = cx.opts.batch_global / cx.opts.groups;
+
+    // Bucketed overlap: partition the parameter gradients into fixed-size
+    // buckets (reverse parameter order == backward completion order) and
+    // hand this rank's gradient-world endpoint to a worker thread.
+    let sizes: Vec<usize> =
+        cx.info.params.iter().map(|(_, s)| s.iter().product()).collect();
+    let mut overlap =
+        OverlapAllreduce::for_rank(cx.reduce, cx.grad_ep.take(), world_group.clone(), &sizes);
 
     let mut params = init_params(&cx.info, cx.opts.seed);
     let mut adam = Adam::for_params(&params);
@@ -487,7 +540,7 @@ fn run_rank(cx: RankCtx) -> Result<TrainReport> {
                         // dgamma/dbeta are already global sums: accumulate
                         // them on world rank 0 only so the final gradient
                         // allreduce does not multiply them by the world size.
-                        if cx.ep.rank == 0 {
+                        if rank == 0 {
                             grads[gi].add_assign(&g1);
                             grads[bi].add_assign(&g2);
                         }
@@ -548,25 +601,23 @@ fn run_rank(cx: RankCtx) -> Result<TrainReport> {
                     }
                     _ => bail!("plan/saved mismatch in backward"),
                 }
+                // bucket-overlap readiness: after the last local sample's
+                // backward pass of a layer, its parameter gradients are
+                // final — stage them and launch full buckets.
+                if j + 1 == bpg {
+                    if let Some(ov) = overlap.as_mut() {
+                        for pi in layer_param_indices(&cx.info, layer) {
+                            ov.param_ready(pi, grads[pi].data());
+                        }
+                    }
+                }
             }
             let _ = (dy, loss_scale);
         }
 
         // ---- gradient allreduce over the whole world (ring) --------------
-        let flat_len: usize = grads.iter().map(|g| g.numel()).sum();
-        let mut flat = Vec::with_capacity(flat_len);
-        for g in &grads {
-            flat.extend_from_slice(g.data());
-        }
-        let t = Instant::now();
-        cx.ep.allreduce_sum(&mut flat, &world_group)?;
-        phases.allreduce += t.elapsed().as_secs_f64();
-        let mut off = 0;
-        for g in grads.iter_mut() {
-            let n = g.numel();
-            g.data_mut().copy_from_slice(&flat[off..off + n]);
-            off += n;
-        }
+        super::reduce_grads(cx.ep.as_ref(), overlap.as_mut(), &mut grads,
+                            &world_group, &mut phases)?;
 
         // ---- optimizer (replicated, identical on every rank) -------------
         let t = Instant::now();
@@ -576,7 +627,7 @@ fn run_rank(cx: RankCtx) -> Result<TrainReport> {
         // ---- loss for reporting ------------------------------------------
         let mut lbuf = vec![loss_local];
         cx.ep.allreduce_sum(&mut lbuf, &world_group)?;
-        if cx.ep.rank == 0 && cx.opts.log_every > 0
+        if rank == 0 && cx.opts.log_every > 0
             && (step % cx.opts.log_every == 0 || step + 1 == cx.opts.steps)
         {
             eprintln!("[hybrid {}x{} {}] step {:>4} loss {:.6} lr {:.2e}",
@@ -585,12 +636,17 @@ fn run_rank(cx: RankCtx) -> Result<TrainReport> {
         records.push(StepRecord { step, loss: lbuf[0], lr });
     }
 
+    let mut comm_bytes = cx.ep.counters().bytes();
+    if let Some(ov) = overlap.take() {
+        comm_bytes += ov.counters().bytes();
+        ov.shutdown()?;
+    }
     Ok(TrainReport {
         records,
         params,
         running: (run_mean, run_var),
         phases,
-        comm_bytes: cx.ep.counters.bytes(),
+        comm_bytes,
     })
 }
 

@@ -21,9 +21,12 @@ pub mod dataparallel;
 pub mod hybrid;
 pub mod optim;
 
+use crate::comm::{Communicator, OverlapAllreduce};
 use crate::runtime::ModelInfo;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg;
+use anyhow::Result;
+use std::time::Instant;
 
 /// Leaky-ReLU slope used across both engines (must match kernels/ref.py).
 pub const LEAKY_SLOPE: f32 = 0.01;
@@ -31,6 +34,44 @@ pub const LEAKY_SLOPE: f32 = 0.01;
 pub const BN_MOMENTUM: f32 = 0.9;
 /// Batch-norm epsilon (must match kernels/ref.py BN_EPS).
 pub const BN_EPS: f32 = 1e-5;
+
+/// Aggregate parameter gradients over `group` (shared by both engines):
+/// drain the bucketed-overlap worker when present — only the tail not
+/// hidden behind backward is exposed — otherwise run one blocking ring
+/// allreduce over the flattened gradients. Either way `grads` ends holding
+/// the group-wide sums and `phases` gets the allreduce attribution.
+pub(crate) fn reduce_grads(
+    ep: &dyn Communicator,
+    overlap: Option<&mut OverlapAllreduce>,
+    grads: &mut [Tensor],
+    group: &[usize],
+    phases: &mut PhaseTimes,
+) -> Result<()> {
+    match overlap {
+        Some(ov) => {
+            let rep = ov.finish(grads)?;
+            phases.allreduce += rep.exposed_secs;
+            phases.allreduce_overlapped += rep.worker_secs;
+        }
+        None => {
+            let flat_len: usize = grads.iter().map(|g| g.numel()).sum();
+            let mut flat = Vec::with_capacity(flat_len);
+            for g in grads.iter() {
+                flat.extend_from_slice(g.data());
+            }
+            let t = Instant::now();
+            ep.allreduce_sum(&mut flat, group)?;
+            phases.allreduce += t.elapsed().as_secs_f64();
+            let mut off = 0;
+            for g in grads.iter_mut() {
+                let n = g.numel();
+                g.data_mut().copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+    }
+    Ok(())
+}
 
 /// Deterministic parameter initialization from the manifest param table:
 /// He-style normals for weights (stream per parameter index), ones for BN
@@ -125,7 +166,13 @@ pub struct PhaseTimes {
     pub fwd_compute: f64,
     pub bwd_compute: f64,
     pub halo: f64,
+    /// Wall-clock allreduce time on the compute thread: BN statistics plus
+    /// the *exposed* (non-overlapped) part of the gradient allreduce.
     pub allreduce: f64,
+    /// Worker-side gradient allreduce seconds hidden behind backward
+    /// compute by the bucketed-overlap path (not wall-clock additive, so
+    /// excluded from [`PhaseTimes::total`]).
+    pub allreduce_overlapped: f64,
     pub io: f64,
     pub optimizer: f64,
 }
@@ -141,6 +188,7 @@ impl PhaseTimes {
         self.bwd_compute = self.bwd_compute.max(o.bwd_compute);
         self.halo = self.halo.max(o.halo);
         self.allreduce = self.allreduce.max(o.allreduce);
+        self.allreduce_overlapped = self.allreduce_overlapped.max(o.allreduce_overlapped);
         self.io = self.io.max(o.io);
         self.optimizer = self.optimizer.max(o.optimizer);
     }

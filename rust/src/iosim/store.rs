@@ -16,7 +16,7 @@
 //! the "aligns the spatially parallel I/O, training, and data caching"
 //! property of §III-B.
 
-use crate::comm::Endpoint;
+use crate::comm::Communicator;
 use crate::data::container::Container;
 use crate::engine::hybrid::SampleSource;
 use crate::partition::{DepthPartition, Topology};
@@ -112,7 +112,7 @@ impl DataStore {
     /// at the *same shard position* in the owning/consuming group, so every
     /// transfer stays within one depth range. Collective: every rank calls
     /// this with identical `assignments`.
-    pub fn redistribute(&mut self, ep: &Endpoint, assignments: &[Vec<usize>])
+    pub fn redistribute(&mut self, ep: &dyn Communicator, assignments: &[Vec<usize>])
                         -> Result<()> {
         let (my_group, pos) = self.topo.coords_of(self.rank);
         self.staged.clear();

@@ -12,12 +12,15 @@
 //!   hydra3d train --model unet16 --ways 2 --task ct
 
 use anyhow::{bail, Result};
+use hydra3d::comm::{CommBackend, GradReduce, TraceCollector, DEFAULT_BUCKET_ELEMS};
 use hydra3d::config::ClusterConfig;
 use hydra3d::coordinator;
 use hydra3d::data::ct::ct_dataset;
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
-use hydra3d::engine::hybrid::{train_hybrid, HybridOpts, InMemorySource};
+use hydra3d::engine::hybrid::{train_hybrid_with, HybridOpts, InMemorySource};
 use hydra3d::engine::LrSchedule;
+use hydra3d::perfmodel::trace::replay;
+use hydra3d::perfmodel::{Link, SrModel};
 use hydra3d::runtime::RuntimeHandle;
 use hydra3d::util::cli::Command;
 use std::path::PathBuf;
@@ -98,9 +101,28 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         .opt("lr", "initial learning rate", Some("1e-3"))
         .opt("seed", "experiment seed", Some("7"))
         .opt("samples", "dataset size", Some("16"))
-        .opt("task", "grf | ct", Some("grf"));
+        .opt("task", "grf | ct", Some("grf"))
+        .opt("comm",
+             "communicator backend: channel | loopback | traced (traced is \
+              diagnostic: it records every message in memory)",
+             Some("channel"))
+        .opt("bucket",
+             "allreduce bucket size in f32 elems (0 = monolithic; default \
+              comm::DEFAULT_BUCKET_ELEMS)",
+             None);
     let a = c.parse(rest)?;
     let model = a.req("model")?.to_string();
+    let trace = Arc::new(TraceCollector::new());
+    let backend = match a.req("comm")? {
+        "channel" => CommBackend::Channel,
+        "loopback" => CommBackend::Loopback,
+        "traced" => CommBackend::Traced(trace.clone()),
+        other => bail!("unknown --comm backend {other:?}"),
+    };
+    let reduce = match a.get_usize("bucket")?.unwrap_or(DEFAULT_BUCKET_ELEMS) {
+        0 => GradReduce::Monolithic,
+        elems => GradReduce::Bucketed { bucket_elems: elems },
+    };
     let rt = RuntimeHandle::start(&artifacts_dir())?;
     let info = rt.manifest().model(&model)?.clone();
     let size = info.input_size;
@@ -131,11 +153,12 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         log_every: (steps / 10).max(1),
     };
     let t0 = std::time::Instant::now();
-    let rep = train_hybrid(&rt, &opts, source)?;
+    let rep = train_hybrid_with(&rt, &opts, source, &backend, reduce)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "trained {} for {} steps: loss {:.6} -> {:.6} in {:.1}s \
-         ({:.0} KiB comm, phases: fwd {:.1}s bwd {:.1}s halo {:.2}s ar {:.2}s)",
+         ({:.0} KiB comm, phases: fwd {:.1}s bwd {:.1}s halo {:.2}s \
+         ar {:.2}s exposed / {:.2}s overlapped)",
         opts.model,
         steps,
         rep.records.first().map(|r| r.loss).unwrap_or(f32::NAN),
@@ -146,7 +169,24 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         rep.phases.bwd_compute,
         rep.phases.halo,
         rep.phases.allreduce,
+        rep.phases.allreduce_overlapped,
     );
+    if let CommBackend::Traced(tc) = &backend {
+        let world = opts.groups * opts.ways;
+        let cluster = ClusterConfig::default();
+        let link = SrModel::from_cluster(&cluster, Link::NvLink);
+        let r = replay(tc, world, &link);
+        println!(
+            "comm trace: {} messages, {} bytes, {} logical collectives; \
+             §III-C replay: p2p critical {:.2} ms, allreduce model {:.2} ms \
+             (NVLink link)",
+            r.messages,
+            r.bytes,
+            r.collectives,
+            r.p2p_critical_secs * 1e3,
+            r.allreduce_model_secs * 1e3,
+        );
+    }
     Ok(())
 }
 

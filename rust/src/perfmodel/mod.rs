@@ -18,6 +18,7 @@
 //! bottleneck link.
 
 pub mod scaling;
+pub mod trace;
 
 use crate::config::ClusterConfig;
 use crate::models::{AnalyticLayer, AnalyticModel, LayerKind};

@@ -1,0 +1,139 @@
+//! Trace ingestion: replay a [`TraceCollector`] recording against the
+//! §III-C link model.
+//!
+//! The traced communicator backend records every point-to-point message a
+//! run actually sent (the collectives decompose into sends, so the ring /
+//! recursive-doubling / halo structure is all there) plus one event per
+//! logical collective. This module prices that recording with the fitted
+//! [`SrModel`] link:
+//!
+//! * **p2p replay** — every recorded message costs `alpha + bytes/bw`;
+//!   messages sent by one rank serialize (a rank has one injection port),
+//!   so the critical path is the busiest rank's total. This is the
+//!   measured-structure prediction.
+//! * **collective closed forms** — the same logical collectives priced
+//!   with the §III-C formulas ([`allreduce_time`] for allreduces). Tests
+//!   assert the two views agree, which is exactly the validation the paper
+//!   performs between measured Aluminum traces and its model.
+
+use super::{allreduce_time, SrModel};
+use crate::comm::traced::TraceCollector;
+use crate::comm::Collective;
+
+/// Priced replay of one trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReplay {
+    /// Point-to-point messages recorded.
+    pub messages: usize,
+    /// Total payload bytes recorded.
+    pub bytes: u64,
+    /// Per-rank serialized send time (seconds) under the link model.
+    pub per_rank_secs: Vec<f64>,
+    /// Busiest-rank send time — the p2p critical-path estimate.
+    pub p2p_critical_secs: f64,
+    /// The same run's logical allreduces priced with the closed-form
+    /// §III-C model (latency tree + ring bandwidth term).
+    pub allreduce_model_secs: f64,
+    /// Logical collectives recorded (allreduces, gathers, barriers, ...).
+    pub collectives: usize,
+}
+
+/// Replay `trace` (from a world of `world` ranks) against `link`.
+pub fn replay(trace: &TraceCollector, world: usize, link: &SrModel) -> TraceReplay {
+    let msgs = trace.messages();
+    let mut per_rank_secs = vec![0.0f64; world];
+    let mut bytes = 0u64;
+    for m in &msgs {
+        bytes += m.bytes;
+        if m.from < world {
+            per_rank_secs[m.from] += link.time(m.bytes as f64);
+        }
+    }
+    let p2p_critical_secs = per_rank_secs.iter().copied().fold(0.0, f64::max);
+    let colls = trace.collectives();
+    let allreduce_model_secs = colls
+        .iter()
+        .filter(|c| matches!(c.op, Collective::AllreduceRing | Collective::AllreduceRd))
+        .map(|c| allreduce_time(4.0 * c.elems as f64, c.group_len, link))
+        .sum();
+    TraceReplay {
+        messages: msgs.len(),
+        bytes,
+        per_rank_secs,
+        p2p_critical_secs,
+        allreduce_model_secs,
+        collectives: colls.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{world, Communicator, Traced};
+    use std::sync::Arc;
+    use std::thread;
+
+    fn run_traced_allreduce(n: usize, len: usize) -> Arc<TraceCollector> {
+        let tc = Arc::new(TraceCollector::new());
+        let eps: Vec<_> = world(n)
+            .into_iter()
+            .map(|e| Traced::new(e, tc.clone()))
+            .collect();
+        thread::scope(|s| {
+            for ep in eps {
+                s.spawn(move || {
+                    let group: Vec<usize> = (0..n).collect();
+                    let mut buf = vec![1.0f32; len];
+                    ep.allreduce_sum(&mut buf, &group).unwrap();
+                });
+            }
+        });
+        tc
+    }
+
+    /// Ring allreduce over g ranks moves exactly 2(g-1) chunks per rank and
+    /// 2(g-1) * len elements in total — the structure §III-C assumes.
+    #[test]
+    fn ring_trace_matches_theory() {
+        let (n, len) = (4usize, 1000usize);
+        let tc = run_traced_allreduce(n, len);
+        assert_eq!(tc.message_count(), 2 * (n - 1) * n);
+        assert_eq!(tc.total_bytes(), (2 * (n - 1) * len * 4) as u64);
+        let per_rank = tc.per_rank_bytes(n);
+        for (r, &b) in per_rank.iter().enumerate() {
+            assert_eq!(b, (2 * (n - 1) * len * 4) as u64 / n as u64, "rank {r}");
+        }
+        assert_eq!(tc.collectives().len(), 1, "one logical allreduce");
+    }
+
+    /// The p2p replay of a ring allreduce agrees with the closed-form
+    /// allreduce model: identical bandwidth term, latency within the
+    /// per-message vs log-tree modeling difference.
+    #[test]
+    fn replay_agrees_with_closed_form() {
+        let (n, len) = (4usize, 1 << 16);
+        let tc = run_traced_allreduce(n, len);
+        let link = SrModel { alpha_s: 2e-6, bytes_per_s: 50e9 };
+        let rep = replay(&tc, n, &link);
+        assert_eq!(rep.messages, 2 * (n - 1) * n);
+        assert_eq!(rep.collectives, 1);
+        assert!(rep.p2p_critical_secs > 0.0);
+        let ratio = rep.p2p_critical_secs / rep.allreduce_model_secs;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "p2p replay {:.2e}s vs model {:.2e}s (ratio {ratio:.2})",
+            rep.p2p_critical_secs,
+            rep.allreduce_model_secs,
+        );
+    }
+
+    /// Per-rank send loads in a ring are balanced.
+    #[test]
+    fn ring_loads_are_balanced() {
+        let tc = run_traced_allreduce(5, 500);
+        let link = SrModel { alpha_s: 1e-6, bytes_per_s: 10e9 };
+        let rep = replay(&tc, 5, &link);
+        let min = rep.per_rank_secs.iter().copied().fold(f64::MAX, f64::min);
+        assert!(rep.p2p_critical_secs <= min * 1.25, "{:?}", rep.per_rank_secs);
+    }
+}

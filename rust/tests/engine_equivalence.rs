@@ -8,8 +8,9 @@
 //! on losses and on every parameter after training (small fp tolerance for
 //! reduction-order differences).
 
+use hydra3d::comm::{CommBackend, GradReduce, TraceCollector};
 use hydra3d::engine::dataparallel::{train_fused, FullSource, FusedOpts};
-use hydra3d::engine::hybrid::{train_hybrid, HybridOpts, InMemorySource};
+use hydra3d::engine::hybrid::{train_hybrid, train_hybrid_with, HybridOpts, InMemorySource};
 use hydra3d::engine::{LrSchedule, TrainReport};
 use hydra3d::runtime::RuntimeHandle;
 use hydra3d::tensor::Tensor;
@@ -184,6 +185,79 @@ fn hybrid_unet_ways_equivalence() {
     let b = train_hybrid(&rt, &hybrid_opts("unet16", 2, 1, 1, 3), src).unwrap();
     assert_reports_match(&a, &b, 1e-3, "unet 1 vs 2 ways");
     assert!(a.final_loss().is_finite());
+}
+
+/// All three communicator backends produce the same trajectory: channel
+/// (default), loopback (single rank) and traced (channel + recording) must
+/// match each other through the same equivalence harness the ways tests
+/// use — the backends only move bytes, never change reduction orders.
+#[test]
+fn comm_backends_equivalent() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let (inputs, targets) = make_cf_data(6, 8, 7);
+    let src = Arc::new(InMemorySource { inputs, targets });
+    let channel = train_hybrid_with(
+        &rt,
+        &hybrid_opts("cf-nano", 1, 1, 2, 5),
+        src.clone(),
+        &CommBackend::Channel,
+        GradReduce::default(),
+    )
+    .unwrap();
+    let loopback = train_hybrid_with(
+        &rt,
+        &hybrid_opts("cf-nano", 1, 1, 2, 5),
+        src.clone(),
+        &CommBackend::Loopback,
+        GradReduce::default(),
+    )
+    .unwrap();
+    assert_reports_match(&channel, &loopback, 1e-6, "channel vs loopback");
+
+    let tc = Arc::new(TraceCollector::new());
+    let traced = train_hybrid_with(
+        &rt,
+        &hybrid_opts("cf-nano", 2, 1, 2, 5),
+        src,
+        &CommBackend::Traced(tc.clone()),
+        GradReduce::default(),
+    )
+    .unwrap();
+    assert_reports_match(&channel, &traced, 5e-4, "channel 1x1 vs traced 2-way");
+    assert!(tc.message_count() > 0, "traced backend recorded nothing");
+    assert!(!tc.collectives().is_empty());
+}
+
+/// Bucketed-overlap gradient allreduce computes the same training
+/// trajectory as the monolithic end-of-step allreduce (different bucket
+/// boundaries change float reduction order, nothing else).
+#[test]
+fn bucketed_overlap_matches_monolithic() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let (inputs, targets) = make_cf_data(6, 8, 8);
+    let src = Arc::new(InMemorySource { inputs, targets });
+    let mono = train_hybrid_with(
+        &rt,
+        &hybrid_opts("cf-nano", 2, 1, 2, 6),
+        src.clone(),
+        &CommBackend::Channel,
+        GradReduce::Monolithic,
+    )
+    .unwrap();
+    // tiny buckets force many launches; results must still agree
+    let bucketed = train_hybrid_with(
+        &rt,
+        &hybrid_opts("cf-nano", 2, 1, 2, 6),
+        src,
+        &CommBackend::Channel,
+        GradReduce::Bucketed { bucket_elems: 64 },
+    )
+    .unwrap();
+    assert_reports_match(&mono, &bucketed, 5e-4, "monolithic vs bucketed");
+    assert!(bucketed.phases.allreduce_overlapped > 0.0,
+            "bucketed path did no worker-side allreduce");
 }
 
 /// Hybrid training actually learns (loss decreases on a learnable task).

@@ -2,7 +2,7 @@
 //! hyperslab ingestion → owner-mapped data store → per-step redistribution
 //! (the functional realization of the paper's Fig. 3).
 
-use hydra3d::comm::world;
+use hydra3d::comm::{world, Communicator};
 use hydra3d::data::container::{write_dataset, Container};
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
 use hydra3d::iosim::store::DataStore;

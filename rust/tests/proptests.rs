@@ -1,12 +1,14 @@
 //! Cross-module property tests on coordinator invariants (in-repo property
 //! harness; see util::prop for the seeded-reproduction story).
 
+use hydra3d::comm::{world, BucketPlan, Communicator, OverlapAllreduce};
 use hydra3d::data::grf::{synthesize, GrfConfig, Universe};
 use hydra3d::engine::sample_schedule;
 use hydra3d::iosim::store::OwnerMap;
 use hydra3d::partition::{DepthPartition, Grid4, Topology};
 use hydra3d::tensor::Tensor;
 use hydra3d::util::prop;
+use std::thread;
 
 /// Halo-padded shards tile the padded global tensor: the algebraic core of
 /// the forward halo exchange, for arbitrary shapes and ways.
@@ -40,6 +42,153 @@ fn prop_shard_pad_tiles_global() {
             }
         }
         Ok(())
+    });
+}
+
+/// Ring allreduce, recursive doubling and the bucketed-overlap path all
+/// produce results that are (a) bit-identical across every rank and
+/// (b) equal to the element-wise sum within float reduction-order noise,
+/// for arbitrary group sizes, buffer lengths and bucket boundaries.
+#[test]
+fn prop_collectives_bitwise_identical_across_ranks() {
+    prop::check("collectives-identical", 10, |g| {
+        let n = g.pow2_in(2, 8); // recursive doubling needs 2^k ranks
+        let len = g.usize_in(1, 80);
+        let vals: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, 1.0)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| vals.iter().map(|v| v[i]).sum())
+            .collect();
+        let eps = world(n);
+        let outs: Vec<(Vec<f32>, Vec<f32>)> = thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .zip(&vals)
+                .map(|(ep, v)| {
+                    let group: Vec<usize> = (0..n).collect();
+                    let mut ring = v.clone();
+                    let mut rd = v.clone();
+                    s.spawn(move || {
+                        ep.allreduce_sum(&mut ring, &group).unwrap();
+                        ep.allreduce_sum_rd(&mut rd, &group).unwrap();
+                        (ring, rd)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in 1..n {
+            if outs[r].0 != outs[0].0 {
+                return Err(format!("ring rank {r} not bit-identical"));
+            }
+            if outs[r].1 != outs[0].1 {
+                return Err(format!("rd rank {r} not bit-identical"));
+            }
+        }
+        for (alg, got) in [("ring", &outs[0].0), ("rd", &outs[0].1)] {
+            for i in 0..len {
+                let tol = 1e-4 * expect[i].abs().max(1.0);
+                if (got[i] - expect[i]).abs() > tol {
+                    return Err(format!("{alg} elt {i}: {} != {}", got[i], expect[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The bucketed-overlap gradient path is a sum-allreduce: bit-identical
+/// across ranks and equal to the direct sum, for arbitrary group sizes,
+/// parameter shapes and bucket capacities.
+#[test]
+fn prop_bucketed_allreduce_identical_across_ranks() {
+    prop::check("bucketed-identical", 8, |g| {
+        let n = g.usize_in(2, 5);
+        let n_params = g.usize_in(1, 6);
+        let sizes: Vec<usize> = (0..n_params).map(|_| g.usize_in(1, 40)).collect();
+        let cap = g.usize_in(1, 64);
+        let plan = BucketPlan::new(&sizes, cap);
+        let vals: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| sizes.iter().map(|&sz| g.vec_f32(sz, 1.0)).collect())
+            .collect();
+        let eps = world(n);
+        let outs: Vec<Vec<Vec<f32>>> = thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .zip(&vals)
+                .map(|(ep, mine)| {
+                    let plan = plan.clone();
+                    let group: Vec<usize> = (0..n).collect();
+                    s.spawn(move || {
+                        let mut ov = OverlapAllreduce::start(Box::new(ep), group, plan);
+                        let mut grads: Vec<Tensor> = mine
+                            .iter()
+                            .map(|v| Tensor::from_vec(&[v.len()], v.clone()))
+                            .collect();
+                        // mark in reverse order, like a backward walk
+                        for pi in (0..grads.len()).rev() {
+                            let data = grads[pi].data().to_vec();
+                            ov.param_ready(pi, &data);
+                        }
+                        ov.finish(&mut grads).unwrap();
+                        ov.shutdown().unwrap();
+                        grads.into_iter().map(Tensor::into_vec).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in 1..n {
+            if outs[r] != outs[0] {
+                return Err(format!("bucketed rank {r} not bit-identical"));
+            }
+        }
+        for (pi, &sz) in sizes.iter().enumerate() {
+            for i in 0..sz {
+                let want: f32 = (0..n).map(|r| vals[r][pi][i]).sum();
+                let got = outs[0][pi][i];
+                if (got - want).abs() > 1e-4 * want.abs().max(1.0) {
+                    return Err(format!("param {pi} elt {i}: {got} != {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bucket plans partition the parameter list exactly, whatever the sizes
+/// and capacity.
+#[test]
+fn prop_bucket_plan_partitions_params() {
+    prop::check("bucket-partition", 100, |g| {
+        let n_params = g.usize_in(1, 20);
+        let sizes: Vec<usize> = (0..n_params).map(|_| g.usize_in(1, 300)).collect();
+        let cap = g.usize_in(1, 256);
+        let plan = BucketPlan::new(&sizes, cap);
+        let mut seen = vec![0usize; n_params];
+        for (bi, b) in plan.buckets.iter().enumerate() {
+            if b.params.is_empty() {
+                return Err(format!("bucket {bi} empty"));
+            }
+            let total: usize = b.params.iter().map(|&pi| sizes[pi]).sum();
+            if total != b.elems {
+                return Err(format!("bucket {bi}: elems {} != sum {total}", b.elems));
+            }
+            if b.params.len() > 1 && b.elems > cap {
+                return Err(format!("bucket {bi} over capacity with {} params",
+                                   b.params.len()));
+            }
+            for (k, &pi) in b.params.iter().enumerate() {
+                seen[pi] += 1;
+                if plan.locate(pi) != (bi, b.offsets[k]) {
+                    return Err(format!("param {pi} location mismatch"));
+                }
+            }
+        }
+        if seen.iter().all(|&c| c == 1) {
+            Ok(())
+        } else {
+            Err("params not partitioned exactly once".into())
+        }
     });
 }
 

@@ -1,0 +1,201 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline with a fixed vendored crate set
+//! (DESIGN.md §8), so this workspace vendors the tiny subset of `anyhow`'s
+//! API that HYDRA-3D actually uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait.
+//! The implementation is message-based: an error is a chain of strings
+//! (outermost context first), built from any `std::error::Error` source
+//! chain or from formatted messages. Nothing in this repository downcasts
+//! errors, so no type information is retained.
+//!
+//! Swapping in the real `anyhow` later is a one-line `Cargo.toml` change;
+//! the API surface used here is source-compatible.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A message-chain error. `chain[0]` is the outermost context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes this blanket conversion coherent (same as anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+/// Attach context to errors (and to `None`), mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let f = || -> Result<()> { bail!("nope") };
+        assert_eq!(f().unwrap_err().to_string(), "nope");
+        let g = |x: usize| -> Result<usize> {
+            ensure!(x > 2, "too small: {x}");
+            Ok(x)
+        };
+        assert!(g(1).is_err());
+        assert_eq!(g(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let f = || -> Result<String> { Ok(std::fs::read_to_string("/no/such/file")?) };
+        assert!(f().is_err());
+        let g = || -> Result<usize> { Ok("12x".parse::<usize>()?) };
+        assert!(g().is_err());
+        let _: Error = io_err().into();
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("opening dataset").unwrap_err();
+        assert_eq!(e.to_string(), "opening dataset");
+        assert_eq!(format!("{e:#}"), "opening dataset: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["opening dataset", "missing file"]);
+    }
+
+    #[test]
+    fn with_context_and_option() {
+        let r: Result<(), Error> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("rank {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "rank 3: inner");
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
