@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Merge bench JSON dumps into BENCH_PR.json and gate against a baseline.
+
+Usage:
+    bench_gate.py --out BENCH_PR.json --baseline BENCH_baseline.json \
+        [--tolerance 0.15] input1.json [input2.json ...]
+
+Every input is `{"schema": 1, "kind": ..., "metrics": {name: number}}`
+(written by `cargo bench --bench micro -- --json` and
+`examples/strong_scaling_sim --json`; metric names are already namespaced
+`micro.*` / `sim.*`). The merged metrics are written to --out, which CI
+uploads as a workflow artifact on every PR.
+
+Gate rules, per metric present in BOTH the PR run and the baseline:
+
+* `*_bytes` metrics are deterministic (model-derived halo volumes): any
+  difference fails — a structural change must update the baseline
+  intentionally.
+* other numeric metrics are timings: fail when PR > baseline * (1 + tol).
+  Improvements and metrics missing from the baseline are reported only, so
+  freshly added benches don't gate until the baseline is refreshed (copy a
+  BENCH_PR.json from a quiet machine over BENCH_baseline.json).
+
+Exit status 1 on any gate failure. Stdlib only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_metrics(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        raise SystemExit(f"{path}: unsupported schema {doc.get('schema')!r}")
+    metrics = doc.get("metrics", {})
+    bad = [k for k, v in metrics.items() if not isinstance(v, (int, float))]
+    if bad:
+        raise SystemExit(f"{path}: non-numeric metrics {bad}")
+    return metrics
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="merged BENCH_PR.json path")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative timing regression (default 0.15)")
+    ap.add_argument("inputs", nargs="+", help="bench JSON dumps to merge")
+    args = ap.parse_args()
+
+    merged: dict = {}
+    for path in args.inputs:
+        for key, val in load_metrics(path).items():
+            if key in merged:
+                raise SystemExit(f"duplicate metric {key!r} (from {path})")
+            merged[key] = val
+    with open(args.out, "w") as f:
+        json.dump({"schema": 1, "kind": "pr", "metrics": merged}, f,
+                  indent=1, sort_keys=True)
+    print(f"wrote {args.out} ({len(merged)} metrics)")
+
+    try:
+        with open(args.baseline) as f:
+            base_doc = json.load(f)
+    except FileNotFoundError:
+        print(f"NOTE: no baseline at {args.baseline}; gate is record-only")
+        return 0
+    base = base_doc.get("metrics", {})
+
+    failures = []
+    gated = 0
+    for key in sorted(merged):
+        if key not in base:
+            print(f"  (new)    {key} = {merged[key]:g}")
+            continue
+        pr, bl = merged[key], base[key]
+        gated += 1
+        if key.endswith("_bytes"):
+            status = "ok" if pr == bl else "FAIL"
+            if pr != bl:
+                failures.append(
+                    f"{key}: {pr:g} != baseline {bl:g} (deterministic metric "
+                    f"changed — update BENCH_baseline.json if intentional)")
+        else:
+            limit = bl * (1.0 + args.tolerance)
+            status = "ok" if pr <= limit else "FAIL"
+            if pr > limit:
+                failures.append(
+                    f"{key}: {pr:g} > baseline {bl:g} "
+                    f"(+{(pr / bl - 1.0) * 100.0:.1f}% > "
+                    f"{args.tolerance * 100.0:.0f}% budget)")
+        print(f"  [{status:>4}] {key}: pr {pr:g} vs baseline {bl:g}")
+    for key in sorted(set(base) - set(merged)):
+        print(f"  (gone)   {key} only in baseline")
+
+    print(f"gated {gated} metrics against {args.baseline}")
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

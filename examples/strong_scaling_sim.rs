@@ -1,25 +1,86 @@
 //! Paper-scale scaling study on the simulated Lassen cluster: regenerates
-//! the Fig. 4/5/6/7/8 series in one run and writes Chrome traces.
+//! the Fig. 4/5/6/7/8 series, then sweeps full 3D (D, H, W) spatial grids
+//! — the §III-A multi-axis decomposition — and optionally writes the CI
+//! bench artifact.
 //!
 //!     cargo run --release --example strong_scaling_sim
+//!     cargo run --release --example strong_scaling_sim -- --quick --json bench_sim.json
+//!
+//! `--quick` skips the figure series and runs only the grid sweep (the CI
+//! bench-artifact job's configuration). `--json PATH` writes the sweep as
+//! `{"schema": 1, "kind": "sim", "metrics": {...}}` for `ci/bench_gate.py`:
+//! per grid, the modeled step time, the exposed allreduce tail, and the
+//! per-sample halo volume (deterministic — the regression gate's anchor).
 
 use hydra3d::config::ClusterConfig;
 use hydra3d::coordinator;
+use hydra3d::iosim::pipeline::IoStrategy;
+use hydra3d::models::cosmoflow_paper;
+use hydra3d::perfmodel::scaling::strong_scaling_grids;
+use hydra3d::util::json::write_bench_json;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     let cl = ClusterConfig::default();
-    std::fs::create_dir_all("runs").ok();
-    print!("{}", coordinator::table1());
-    println!();
-    print!("{}", coordinator::table2(&cl));
-    println!();
-    print!("{}", coordinator::fig4(&cl));
-    println!();
-    print!("{}", coordinator::fig5(&cl));
-    println!();
-    print!("{}", coordinator::fig6(&cl, Some(std::path::Path::new("runs"))));
-    println!();
-    print!("{}", coordinator::fig7(&cl));
-    println!();
-    print!("{}", coordinator::fig8(&cl));
+    if !quick {
+        std::fs::create_dir_all("runs").ok();
+        print!("{}", coordinator::table1());
+        println!();
+        print!("{}", coordinator::table2(&cl));
+        println!();
+        print!("{}", coordinator::fig4(&cl));
+        println!();
+        print!("{}", coordinator::fig5(&cl));
+        println!();
+        print!("{}", coordinator::fig6(&cl, Some(std::path::Path::new("runs"))));
+        println!();
+        print!("{}", coordinator::fig7(&cl));
+        println!();
+        print!("{}", coordinator::fig8(&cl));
+        println!();
+    }
+
+    // ---- 3D grid sweep: same GPU budget, different partition axes ------
+    let n = 4;
+    let grids: [(usize, usize, usize); 6] =
+        [(8, 1, 1), (4, 2, 1), (2, 2, 2), (16, 1, 1), (4, 2, 2), (4, 4, 2)];
+    let m = cosmoflow_paper(512, false);
+    let pts = strong_scaling_grids(&m, &cl, n, &grids, IoStrategy::SpatialParallel);
+    println!("3D spatial grid sweep: CosmoFlow 512^3, N = {n}");
+    println!("  grid      GPUs   step[ms]  exposed AR[ms]  halo[MiB/sample]");
+    for p in &pts {
+        println!(
+            "  {:<9} {:>4}   {:>8.1}        {:>8.2}          {:>8.2}{}",
+            format!("{}x{}x{}", p.grid.0, p.grid.1, p.grid.2),
+            p.gpus,
+            p.model_iter_s * 1e3,
+            p.exposed_ar_s * 1e3,
+            p.halo_bytes / (1u64 << 20) as f64,
+            if p.feasible { "" } else { "  (OOM)" },
+        );
+    }
+    println!(
+        "  (note the 8-rank grids: 2x2x2 and 4x2x1 move less halo than \
+         8x1x1 — the multi-axis claim)"
+    );
+
+    if let Some(path) = json_path {
+        let mut metrics: Vec<(String, f64)> = Vec::new();
+        for p in &pts {
+            let key = format!("sim.cf512_n{}_g{}x{}x{}", p.n, p.grid.0, p.grid.1,
+                              p.grid.2);
+            metrics.push((format!("{key}_step_ms"), p.model_iter_s * 1e3));
+            metrics.push((format!("{key}_exposed_ar_ms"), p.exposed_ar_s * 1e3));
+            metrics.push((format!("{key}_halo_bytes"), p.halo_bytes));
+        }
+        write_bench_json(&path, "sim", &metrics).expect("write bench json");
+        println!("wrote {path}");
+    }
 }

@@ -42,6 +42,11 @@ fn main() -> Result<()> {
         .map(|s| s.parse().unwrap())
         .unwrap_or(300usize);
 
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("train_cosmoflow: artifacts/ not built (run `make \
+                  artifacts`); skipping the runtime demo");
+        return Ok(());
+    }
     let rt = RuntimeHandle::start(std::path::Path::new("artifacts"))?;
     let size = if full { 64 } else { 32 };
     let n_train = 24;

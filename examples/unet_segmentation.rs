@@ -9,11 +9,17 @@ use hydra3d::data::ct::ct_dataset;
 use hydra3d::engine::dataparallel::predict_batch;
 use hydra3d::engine::hybrid::{train_hybrid, HybridOpts, InMemorySource};
 use hydra3d::engine::LrSchedule;
+use hydra3d::partition::SpatialGrid;
 use hydra3d::runtime::RuntimeHandle;
 use hydra3d::tensor::Tensor;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("unet_segmentation: artifacts/ not built (run `make \
+                  artifacts`); skipping the runtime demo");
+        return Ok(());
+    }
     let rt = RuntimeHandle::start(std::path::Path::new("artifacts"))?;
     let info = rt.manifest().model("unet16")?.clone();
     let size = info.input_size;
@@ -27,13 +33,15 @@ fn main() -> Result<()> {
         targets: labels.clone(),
     });
 
-    // hybrid-parallel: 2-way depth split; the one-hot ground truth is
-    // spatially partitioned exactly like the input (paper §III-B: "we also
-    // spatially distribute the ground-truth segmentation").
+    // hybrid-parallel: 2-way depth split (pass a 3D grid, e.g.
+    // SpatialGrid::new(2, 2, 2), once the grid shard set is built); the
+    // one-hot ground truth is spatially partitioned exactly like the input
+    // (paper §III-B: "we also spatially distribute the ground-truth
+    // segmentation").
     let steps = 40;
     let opts = HybridOpts {
         model: "unet16".into(),
-        ways: 2,
+        grid: SpatialGrid::depth(2),
         groups: 1,
         batch_global: 2,
         steps,

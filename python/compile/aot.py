@@ -58,6 +58,14 @@ HYBRID_SETS = {
     "cf32": [1, 4],
     "unet16": [1, 2],
 }
+# Full 3D spatial grids ("dxhxw" keys): shard executables halo-padded and
+# VALID along *all three* axes (the depth sets pad D only). The Rust
+# engine looks these up via ModelInfo::hybrid_plan for `--grid dxhxw`.
+GRID_SETS = {
+    "cf-nano": ["2x2x2"],
+    "cf16": ["2x2x2"],
+    "unet16": ["2x2x2"],
+}
 
 
 def to_hlo_text(lowered) -> str:
@@ -312,16 +320,201 @@ def emit_shard_set(b: Builder, spec, ways: int) -> list:
     return out_plan
 
 
+def _conv3d_valid(x, w, stride):
+    """Fully-VALID NCDHW conv — consumes input halo-padded on all axes."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride,) * 3, "VALID",
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )
+
+
+def _grid_shard(layer, gd, gh, gw, min_extent=1):
+    """Per-axis shard extents of one layer under a (gd, gh, gw) grid.
+
+    Fails at build time (instead of emitting zero/truncated-shape
+    executables that only blow up mid-training) when a layer extent does
+    not divide evenly or a shard would fall below ``min_extent`` (the
+    conv halo width needs at least one interior face).
+    """
+    out = []
+    for axis, (ext, g) in enumerate(
+        zip((layer["d"], layer["h"], layer["w"]), (gd, gh, gw))
+    ):
+        if ext % g != 0 or ext // g < min_extent:
+            raise ValueError(
+                f"grid {gd}x{gh}x{gw}: layer {layer.get('tag', layer['kind'])} "
+                f"extent {ext} on axis {axis} does not shard evenly into "
+                f">= {min_extent}-wide pieces"
+            )
+        out.append(ext // g)
+    return out
+
+
+def emit_grid_shard_set(b: Builder, spec, grid_key: str) -> list:
+    """Shard executables for a full ``dxhxw`` 3D spatial grid.
+
+    Differs from :func:`emit_shard_set` in that every spatial dim is
+    sharded and every conv is VALID along all three axes (the engine's
+    sequential per-axis halo exchange supplies the padded input, with
+    zero faces at the global boundary = the fused graphs' "same"
+    padding).  Backward ops come from ``jax.vjp`` of the same forward, so
+    they are the exact transposes by construction.
+    """
+    gd, gh, gw = (int(p) for p in grid_key.split("x"))
+    plan = M.layer_plan(spec)
+    pre = f"{spec.name}.g{grid_key}"
+    out_plan = []
+    for li, layer in enumerate(plan):
+        layer = dict(layer)
+        kind = layer["kind"]
+        tag = layer.get("tag", f"l{li}")
+        name = f"{pre}.{li}.{tag}"
+        if kind == "conv":
+            halo = (layer["k"] - 1) // 2
+            cin, cout, k, st = layer["cin"], layer["cout"], layer["k"], layer["stride"]
+            dsh, hsh, wsh_ = _grid_shard(layer, gd, gh, gw, max(halo, 1))
+            xp = [1, cin, dsh + 2 * halo, hsh + 2 * halo, wsh_ + 2 * halo]
+            dy = [1, cout, dsh // st, hsh // st, wsh_ // st]
+            ws = [cout, cin, k, k, k]
+            layer["halo"] = halo
+            layer["fwd"] = b.emit(
+                f"{name}.fwd",
+                lambda x_, w_, st=st: (_conv3d_valid(x_, w_, st),),
+                [xp, ws],
+            )
+            layer["bwd_data"] = b.emit(
+                f"{name}.bwd_data",
+                lambda dy_, w_, xp=tuple(xp), st=st: (
+                    jax.vjp(lambda x: _conv3d_valid(x, w_, st),
+                            jnp.zeros(xp, F32))[1](dy_)[0],
+                ),
+                [dy, ws],
+            )
+            layer["bwd_filter"] = b.emit(
+                f"{name}.bwd_filter",
+                lambda x_, dy_, ws=tuple(ws), st=st: (
+                    jax.vjp(lambda w: _conv3d_valid(x_, w, st),
+                            jnp.zeros(ws, F32))[1](dy_)[0],
+                ),
+                [xp, dy],
+            )
+        elif kind == "deconv":
+            cin, cout = layer["cin"], layer["cout"]
+            dsh, hsh, wsh_ = _grid_shard(layer, gd, gh, gw)
+            x = [1, cin, dsh, hsh, wsh_]
+            dy = [1, cout, dsh * 2, hsh * 2, wsh_ * 2]
+            ws = [cin, cout, 2, 2, 2]
+            layer["fwd"] = b.emit(
+                f"{name}.fwd", lambda x_, w_: (ref.deconv3d(x_, w_),), [x, ws]
+            )
+            layer["bwd_data"] = b.emit(
+                f"{name}.bwd_data",
+                lambda dy_, w_, xs=tuple(x): (ref.deconv3d_bwd_data(dy_, w_, xs),),
+                [dy, ws],
+            )
+            layer["bwd_filter"] = b.emit(
+                f"{name}.bwd_filter",
+                lambda x_, dy_, ws=tuple(ws): (ref.deconv3d_bwd_filter(x_, dy_, ws),),
+                [x, dy],
+            )
+        elif kind == "pool":
+            c = layer["c"]
+            dsh, hsh, wsh_ = _grid_shard(layer, gd, gh, gw, 2)
+            x = [1, c, dsh, hsh, wsh_]
+            y = [1, c, dsh // 2, hsh // 2, wsh_ // 2]
+            op = layer["op"]
+            layer["fwd"] = b.emit(
+                f"{name}.fwd", lambda x_, op=op: (kpool.pool3d_pallas(x_, op),), [x]
+            )
+            if op == "max":
+                layer["bwd"] = b.emit(
+                    f"{name}.bwd",
+                    lambda x_, y_, dy_: (ref.maxpool3d_bwd(x_, y_, dy_),),
+                    [x, y, y],
+                )
+            else:
+                layer["bwd"] = b.emit(
+                    f"{name}.bwd", lambda dy_: (ref.avgpool3d_bwd(dy_),), [y]
+                )
+        elif kind == "bn":
+            c = layer["c"]
+            dsh, hsh, wsh_ = _grid_shard(layer, gd, gh, gw)
+            x = [1, c, dsh, hsh, wsh_]
+            cv = [c]
+            layer["apply"] = b.emit(
+                f"{name}.apply",
+                lambda x_, m_, v_, g_, b_: (kbn.bn_leaky_pallas(x_, m_, v_, g_, b_),),
+                [x, cv, cv, cv, cv],
+            )
+
+            def bwd_partials(x_, dy_, m_, v_, g_, b_):
+                y_bn = ref.bn_apply(x_, m_, v_, g_, b_)
+                dyb = ref.leaky_relu_bwd(y_bn, dy_)
+                g1, g2 = ref.bn_bwd_partials(x_, dyb, m_, v_)
+                return g1, g2
+
+            def bwd_apply(x_, dy_, m_, v_, g_, b_, g1_, g2_, cnt_):
+                y_bn = ref.bn_apply(x_, m_, v_, g_, b_)
+                dyb = ref.leaky_relu_bwd(y_bn, dy_)
+                return (ref.bn_bwd_apply(x_, dyb, m_, v_, g_, g1_, g2_, cnt_),)
+
+            layer["bwd_partials"] = b.emit(
+                f"{name}.bwd_partials", bwd_partials, [x, x, cv, cv, cv, cv]
+            )
+            layer["bwd_apply"] = b.emit(
+                f"{name}.bwd_apply", bwd_apply, [x, x, cv, cv, cv, cv, cv, cv, []]
+            )
+        elif kind == "fc":
+            fin, fout = layer["fin"], layer["fout"]
+            layer["fwd"] = b.emit(
+                f"{name}.fwd",
+                lambda x_, w_, b_: (ref.dense(x_, w_, b_),),
+                [[1, fin], [fout, fin], [fout]],
+            )
+            layer["bwd"] = b.emit(
+                f"{name}.bwd",
+                lambda x_, w_, dy_: ref.dense_bwd(x_, w_, dy_),
+                [[1, fin], [fout, fin], [1, fout]],
+            )
+        elif kind == "mse":
+            n = layer["n"]
+
+            def mse_sum(p_, t_):
+                d = p_ - t_
+                return jnp.sum(d * d), 2.0 * d
+
+            layer["fwd_bwd"] = b.emit(f"{name}.fwd_bwd", mse_sum, [[1, n], [1, n]])
+        elif kind == "xent":
+            k = layer["n_classes"]
+            dsh, hsh, wsh_ = _grid_shard(layer, gd, gh, gw)
+            sh = [1, k, dsh, hsh, wsh_]
+
+            def xent_sum(logits, onehot):
+                lse = jax.nn.logsumexp(logits, axis=1, keepdims=True)
+                logp = logits - lse
+                return (
+                    -jnp.sum(onehot * logp),
+                    jnp.exp(logp) * jnp.sum(onehot, axis=1, keepdims=True) - onehot,
+                )
+
+            layer["fwd_bwd"] = b.emit(f"{name}.fwd_bwd", xent_sum, [sh, sh])
+        # flatten / act / save_skip / concat_skip are Rust-side-only layers.
+        out_plan.append(layer)
+    return out_plan
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
 
-def build(out_dir: str, fused_models=None, hybrid_sets=None, pallas_fused=False):
+def build(out_dir: str, fused_models=None, hybrid_sets=None, pallas_fused=False,
+          grid_sets=None):
     os.makedirs(out_dir, exist_ok=True)
     b = Builder(out_dir)
     fused_models = FUSED_MODELS if fused_models is None else fused_models
     hybrid_sets = HYBRID_SETS if hybrid_sets is None else hybrid_sets
+    grid_sets = GRID_SETS if grid_sets is None else grid_sets
 
     models = {}
     for name in fused_models:
@@ -350,6 +543,9 @@ def build(out_dir: str, fused_models=None, hybrid_sets=None, pallas_fused=False)
         for ways in hybrid_sets.get(name, []):
             print(f"  shard set {name} x{ways}", file=sys.stderr)
             stanza["hybrid"][str(ways)] = emit_shard_set(b, spec, ways)
+        for gk in grid_sets.get(name, []):
+            print(f"  grid shard set {name} {gk}", file=sys.stderr)
+            stanza["hybrid"][gk] = emit_grid_shard_set(b, spec, gk)
         models[name] = stanza
         print(f"emitted {name}", file=sys.stderr)
 
@@ -375,7 +571,10 @@ def main():
     hybrid = None if args.models is None else {
         m: HYBRID_SETS.get(m, []) for m in args.models
     }
-    build(args.out, fused, hybrid, args.pallas_fused)
+    grids = None if args.models is None else {
+        m: GRID_SETS.get(m, []) for m in args.models
+    }
+    build(args.out, fused, hybrid, args.pallas_fused, grids)
 
 
 if __name__ == "__main__":

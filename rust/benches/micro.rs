@@ -1,34 +1,78 @@
 //! `cargo bench --bench micro` — hot-path micro-benchmarks for the L3
-//! performance pass (DESIGN.md §7): halo pack/unpack bandwidth, ring
-//! allreduce throughput, bucketed-overlap exposed time, container
-//! hyperslab reads, and PJRT call overhead. Before/after numbers are
-//! recorded in EXPERIMENTS.md §Perf.
+//! performance pass (DESIGN.md §7): halo pack/unpack bandwidth, 3D grid
+//! halo exchange, ring allreduce throughput, bucketed-overlap exposed
+//! time, container hyperslab reads, and PJRT call overhead. Before/after
+//! numbers are recorded in EXPERIMENTS.md §Perf.
 //!
 //! Pass `--quick` (or set `HYDRA3D_BENCH_QUICK=1`) for the CI smoke mode:
-//! same code paths, much shorter measurement windows.
+//! same code paths, much shorter measurement windows. Pass `--json PATH`
+//! to dump every measurement (plus the exposed-allreduce numbers) as
+//! `{"schema": 1, "kind": "micro", "metrics": {...}}` for the CI
+//! bench-artifact gate (`ci/bench_gate.py`).
 
-use hydra3d::comm::{world, BucketPlan, Communicator, OverlapAllreduce};
+use hydra3d::comm::{halo, world, BucketPlan, Communicator, OverlapAllreduce};
 use hydra3d::data::container::{write_dataset, Container};
+use hydra3d::partition::{GridTopology, SpatialGrid};
 use hydra3d::runtime::RuntimeHandle;
 use hydra3d::tensor::Tensor;
 use hydra3d::util::bench::{banner, Bench};
+use hydra3d::util::json::write_bench_json;
 use hydra3d::util::rng::Pcg;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick")
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick")
         || std::env::var("HYDRA3D_BENCH_QUICK")
             .is_ok_and(|v| !v.is_empty() && v != "0");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut b = if quick { Bench::quick() } else { Bench::default() };
     if quick {
         println!("(quick mode: short measurement windows)");
     }
     halo_pack(&mut b);
+    let grid_halo_bytes = halo_grid(&mut b, quick);
     allreduce(&mut b, quick);
-    overlap(&mut b, quick);
+    let (mono_us, buck_us) = overlap(&mut b, quick);
     container_reads(&mut b);
     pjrt_overhead(&mut b);
+
+    if let Some(path) = json_path {
+        let mut metrics: Vec<(String, f64)> = b
+            .results()
+            .iter()
+            .map(|m| (format!("micro.{}_s", slug(&m.name)), m.median))
+            .collect();
+        metrics.push(("micro.exposed_allreduce_mono_us".into(), mono_us));
+        metrics.push(("micro.exposed_allreduce_bucketed_us".into(), buck_us));
+        // `_bytes` suffix: ci/bench_gate.py gates deterministic byte
+        // metrics with exact equality, not the 15% timing budget.
+        metrics.push(("micro.grid_halo_round_bytes".into(),
+                      grid_halo_bytes as f64));
+        write_bench_json(&path, "micro", &metrics).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}
+
+/// Lowercase, alphanumeric + underscores — stable JSON metric keys.
+fn slug(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let mut last_us = false;
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+            last_us = false;
+        } else if !last_us && !out.is_empty() {
+            out.push('_');
+            last_us = true;
+        }
+    }
+    out.trim_end_matches('_').to_string()
 }
 
 /// Halo pack/unpack = depth-slab copies (the paper's optimized CUDA packing
@@ -56,6 +100,48 @@ fn halo_pack(b: &mut Bench) {
     b.run("add_slice_d (reverse-halo accumulate)", || {
         acc.add_slice_d(0, std::hint::black_box(&slab));
     });
+}
+
+/// Full 3D halo exchange (2x2x2 grid, 8 thread-ranks): one forward +
+/// backward round per iteration, sequential per-axis faces. Returns the
+/// world-wide halo bytes of one forward+backward round (deterministic).
+fn halo_grid(b: &mut Bench, quick: bool) -> u64 {
+    banner("3D grid halo exchange (2x2x2, 8 thread-ranks)");
+    let grid = SpatialGrid::new(2, 2, 2);
+    let topo = GridTopology::new(1, grid);
+    let shard = Tensor::zeros(&[1, 8, 8, 8, 8]);
+    let iters = if quick { 3 } else { 10 };
+    let eps0 = world(grid.ways());
+    let counters = eps0[0].counters().clone();
+    let m = b.run_once("grid halo fwd+bwd (8ch 8^3 shards)", || {
+        std::thread::scope(|s| {
+            for (r, ep) in eps0.into_iter().enumerate() {
+                let nbrs = topo.neighbors(r);
+                let shard = shard.clone();
+                s.spawn(move || {
+                    for _ in 0..iters {
+                        let p = halo::exchange_forward_grid(&ep, &shard, 1, &nbrs,
+                                                            [true, true, true])
+                            .unwrap();
+                        halo::exchange_backward_grid(&ep, &p, 1, &nbrs,
+                                                     [true, true, true])
+                            .unwrap();
+                    }
+                });
+            }
+        });
+    });
+    let bytes = counters.halo_bytes_axes();
+    let per_round: u64 = bytes.iter().sum::<u64>() / iters as u64;
+    println!(
+        "   -> {:.1} us/round, {} halo B/round (D/H/W {}/{}/{})",
+        m.median / iters as f64 * 1e6,
+        per_round,
+        bytes[0] / iters as u64,
+        bytes[1] / iters as u64,
+        bytes[2] / iters as u64,
+    );
+    per_round
 }
 
 /// Ring allreduce over thread-ranks: should be within a small factor of the
@@ -93,8 +179,10 @@ fn allreduce(b: &mut Bench, quick: bool) {
 /// bucket's allreduce as its layer's backward completes. "Backward
 /// compute" is simulated with sleeps (accelerator compute does not occupy
 /// the host CPU), so the bucketed worker genuinely overlaps.
-fn overlap(b: &mut Bench, quick: bool) {
+fn overlap(b: &mut Bench, quick: bool) -> (f64, f64) {
     banner("gradient allreduce overlap (4 thread-ranks)");
+    let mut mono_us = 0.0f64;
+    let mut buck_us = 0.0f64;
     let ranks = 4usize;
     let layers = 12usize;
     let per_layer = if quick { 1 << 13 } else { 1 << 15 }; // f32 elems
@@ -123,6 +211,7 @@ fn overlap(b: &mut Bench, quick: bool) {
             hs.into_iter().map(|h| h.join().unwrap()).collect()
         });
         let worst = exposed.iter().copied().fold(0.0, f64::max);
+        mono_us = worst * 1e6;
         println!("   -> exposed allreduce: {:.1} us (worst rank)", worst * 1e6);
     });
 
@@ -157,6 +246,7 @@ fn overlap(b: &mut Bench, quick: bool) {
             hs.into_iter().map(|h| h.join().unwrap()).collect()
         });
         let worst = exposed.iter().copied().fold(0.0, f64::max);
+        buck_us = worst * 1e6;
         println!("   -> exposed allreduce: {:.1} us (worst rank)", worst * 1e6);
     });
     println!(
@@ -168,6 +258,7 @@ fn overlap(b: &mut Bench, quick: bool) {
         layers,
         per_layer,
     );
+    (mono_us, buck_us)
 }
 
 /// Container hyperslab read throughput (the PFS-facing path).

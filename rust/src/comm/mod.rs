@@ -65,6 +65,10 @@ pub struct Counters {
     pub bytes: AtomicU64,
     pub messages: AtomicU64,
     pub allreduces: AtomicU64,
+    /// Halo-face payload bytes per partitioned spatial axis (D, H, W),
+    /// recorded by `comm::halo` on the sending side — the §III-A
+    /// per-dimension halo-region volumes.
+    pub halo_axis_bytes: [AtomicU64; 3],
 }
 
 impl Counters {
@@ -77,6 +81,26 @@ impl Counters {
     pub fn allreduces(&self) -> u64 {
         self.allreduces.load(Ordering::Relaxed)
     }
+    /// (D, H, W) halo bytes sent so far.
+    pub fn halo_bytes_axes(&self) -> [u64; 3] {
+        [
+            self.halo_axis_bytes[0].load(Ordering::Relaxed),
+            self.halo_axis_bytes[1].load(Ordering::Relaxed),
+            self.halo_axis_bytes[2].load(Ordering::Relaxed),
+        ]
+    }
+    pub(crate) fn add_halo_bytes(&self, axis: usize, bytes: u64) {
+        self.halo_axis_bytes[axis].fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Traffic class of a point-to-point message, for per-class accounting
+/// ([`Communicator::send_tagged`]; the traced backend records the tag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MsgTag {
+    Generic,
+    /// Halo face along spatial axis 0=D, 1=H, 2=W.
+    Halo(u8),
 }
 
 /// Collective operations, for the [`Communicator::on_collective`] hook and
@@ -115,6 +139,13 @@ pub trait Communicator: Send {
 
     /// Asynchronous point-to-point send (must never block).
     fn send(&self, to: usize, data: Vec<f32>);
+
+    /// [`Communicator::send`] with a traffic-class tag. Backends that do
+    /// per-class accounting (the traced backend) override this; the default
+    /// drops the tag.
+    fn send_tagged(&self, to: usize, data: Vec<f32>, _tag: MsgTag) {
+        self.send(to, data);
+    }
 
     /// Blocking receive of the next message from `from` (program order).
     fn recv(&self, from: usize) -> Result<Vec<f32>>;

@@ -14,7 +14,7 @@
 //! it is sized for diagnostic runs of bounded step count; for long traced
 //! runs, drain with [`TraceCollector::clear`] between steps or phases.
 
-use super::{Collective, Communicator, Counters};
+use super::{Collective, Communicator, Counters, MsgTag};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -27,6 +27,9 @@ pub struct MessageEvent {
     pub from: usize,
     pub to: usize,
     pub bytes: u64,
+    /// Traffic class ([`MsgTag::Halo`] carries the spatial axis, so the
+    /// per-dimension halo volume of §III-A can be audited from a trace).
+    pub tag: MsgTag,
 }
 
 /// One recorded logical collective (one event per group-wide call).
@@ -58,8 +61,8 @@ impl TraceCollector {
         self.seq.fetch_add(1, Ordering::Relaxed)
     }
 
-    fn record_message(&self, from: usize, to: usize, bytes: u64) {
-        let ev = MessageEvent { seq: self.next_seq(), from, to, bytes };
+    fn record_message(&self, from: usize, to: usize, bytes: u64, tag: MsgTag) {
+        let ev = MessageEvent { seq: self.next_seq(), from, to, bytes, tag };
         self.messages.lock().expect("trace poisoned").push(ev);
     }
 
@@ -101,6 +104,18 @@ impl TraceCollector {
         out
     }
 
+    /// Total halo-face payload bytes per spatial axis (D, H, W), from the
+    /// axis tags of the recorded sends.
+    pub fn halo_bytes_per_axis(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for e in self.messages.lock().expect("trace poisoned").iter() {
+            if let MsgTag::Halo(a) = e.tag {
+                out[a as usize] += e.bytes;
+            }
+        }
+        out
+    }
+
     /// Forget everything recorded so far (between steps/phases).
     pub fn clear(&self) {
         self.messages.lock().expect("trace poisoned").clear();
@@ -135,7 +150,14 @@ impl<C: Communicator> Communicator for Traced<C> {
 
     fn send(&self, to: usize, data: Vec<f32>) {
         self.trace
-            .record_message(self.inner.rank(), to, (data.len() * 4) as u64);
+            .record_message(self.inner.rank(), to, (data.len() * 4) as u64,
+                            MsgTag::Generic);
+        self.inner.send(to, data);
+    }
+
+    fn send_tagged(&self, to: usize, data: Vec<f32>, tag: MsgTag) {
+        self.trace
+            .record_message(self.inner.rank(), to, (data.len() * 4) as u64, tag);
         self.inner.send(to, data);
     }
 

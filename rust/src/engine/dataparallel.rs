@@ -231,6 +231,7 @@ fn run_group(
         running: (run_mean, run_var),
         phases,
         comm_bytes,
+        halo_bytes: [0; 3],
     })
 }
 

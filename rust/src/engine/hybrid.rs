@@ -1,12 +1,15 @@
 //! The hybrid-parallel training engine (the paper's §III-A, functional).
 //!
 //! Every rank is a thread owning one [`Communicator`] endpoint and a clone
-//! of the PJRT [`RuntimeHandle`]. Ranks form `groups x ways` (data x
-//! depth): each
-//! sample group walks the per-layer shard executables of the AOT manifest
-//! in lockstep, with
+//! of the PJRT [`RuntimeHandle`]. Ranks form `groups x grid.ways()` (data
+//! x spatial): each sample group holds one sample partitioned over a full
+//! `D×H×W` process grid ([`SpatialGrid`]; `d×1×1` is the classic depth
+//! split) and walks the per-layer shard executables of the AOT manifest in
+//! lockstep, with
 //!
-//! * **halo exchanges** around every conv ([`crate::comm::halo`]),
+//! * **halo exchanges** around every conv — one face exchange per
+//!   partitioned axis, sequentially, which is exact for separable "same"
+//!   padding ([`crate::comm::halo`]),
 //! * **distributed batch-norm**: (sum, sumsq, count) partials allreduced
 //!   over all ranks of the instant batch before `bn_apply`, and the
 //!   matching (g1, g2) allreduce in backward,
@@ -31,7 +34,7 @@ use super::{
     TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
 };
 use crate::comm::{halo, CommBackend, Communicator, GradReduce, OverlapAllreduce};
-use crate::partition::{DepthPartition, Topology};
+use crate::partition::{GridNeighbors, GridTopology, SpatialGrid};
 use crate::runtime::{LayerDesc, ModelInfo, RuntimeHandle};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
@@ -42,6 +45,11 @@ use std::time::Instant;
 /// Where a rank's shards come from. The in-memory implementation slices
 /// full samples; the I/O pipeline provides a store-backed implementation
 /// that reads only the hyperslab (spatially-parallel I/O, §III-B).
+///
+/// The required methods are depth slabs (the container's contiguous access
+/// pattern); the provided `*_shard3` methods serve the 3D-grid engine by
+/// reading the depth slab and cropping H/W in memory — sources with
+/// finer-grained native access can override them.
 pub trait SampleSource: Send + Sync {
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
@@ -53,6 +61,30 @@ pub trait SampleSource: Send + Sync {
     fn target_full(&self, sample: usize) -> Result<Tensor>;
     /// Depth hyperslab of a spatial one-hot target (U-Net), (1,K,len,H,W).
     fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor>;
+
+    /// (D, H, W) hyperslab of the input volume at `off` with extents
+    /// `len`, as (1, C, len[0], len[1], len[2]).
+    fn input_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                    -> Result<Tensor> {
+        Ok(crop_hw(self.input_shard(sample, off[0], len[0])?, off, len))
+    }
+
+    /// (D, H, W) hyperslab of a spatial one-hot target (U-Net).
+    fn target_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                     -> Result<Tensor> {
+        Ok(crop_hw(self.target_shard(sample, off[0], len[0])?, off, len))
+    }
+}
+
+/// Crop a depth slab's H/W extents to the (D, H, W) hyperslab in one pass
+/// (no copy when the slab already matches — the depth-only fast path).
+fn crop_hw(slab: Tensor, off: [usize; 3], len: [usize; 3]) -> Tensor {
+    let s = slab.shape();
+    if off[1] == 0 && len[1] == s[3] && off[2] == 0 && len[2] == s[4] {
+        slab
+    } else {
+        slab.block3([0, off[1], off[2]], len)
+    }
 }
 
 /// Simple source over fully materialized samples.
@@ -81,7 +113,9 @@ impl SampleSource for InMemorySource {
 #[derive(Clone, Debug)]
 pub struct HybridOpts {
     pub model: String,
-    pub ways: usize,
+    /// Spatial process grid (ways along D, H, W); `SpatialGrid::depth(w)`
+    /// is the 1D depth partitioning.
+    pub grid: SpatialGrid,
     pub groups: usize,
     pub batch_global: usize,
     pub steps: usize,
@@ -90,8 +124,8 @@ pub struct HybridOpts {
     pub log_every: usize,
 }
 
-/// Train `opts.model` with `groups x ways` hybrid parallelism on the
-/// default channel backend with bucketed, backprop-overlapped gradient
+/// Train `opts.model` with `groups x grid.ways()` hybrid parallelism on
+/// the default channel backend with bucketed, backprop-overlapped gradient
 /// allreduce. Returns rank 0's view (parameters are replicated and
 /// identical).
 pub fn train_hybrid(
@@ -113,19 +147,14 @@ pub fn train_hybrid_with(
     reduce: GradReduce,
 ) -> Result<TrainReport> {
     let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
-    let plan = Arc::new(
-        info.hybrid
-            .get(&opts.ways)
-            .ok_or_else(|| {
-                anyhow!("model {} has no {}-way shard set (rebuild artifacts)",
-                        opts.model, opts.ways)
-            })?
-            .clone(),
-    );
+    let (plan, pad_axes) = {
+        let (p, axes) = info.hybrid_plan(&opts.grid)?;
+        (Arc::new(p.clone()), axes)
+    };
     if opts.batch_global % opts.groups != 0 {
         bail!("batch {} not divisible by {} groups", opts.batch_global, opts.groups);
     }
-    let topo = Topology::new(opts.groups, opts.ways);
+    let topo = GridTopology::new(opts.groups, opts.grid);
     let sched = Arc::new(sample_schedule(opts.seed, source.len(), opts.batch_global,
                                          opts.steps));
     let endpoints = backend.build_world(topo.world_size())?;
@@ -148,6 +177,7 @@ pub fn train_hybrid_with(
                         grad_ep,
                         reduce,
                         topo,
+                        pad_axes,
                         rt,
                         info,
                         plan,
@@ -174,7 +204,10 @@ struct RankCtx {
     ep: Box<dyn Communicator>,
     grad_ep: Option<Box<dyn Communicator>>,
     reduce: GradReduce,
-    topo: Topology,
+    topo: GridTopology,
+    /// Axes the plan's executables expect halo padding on (depth plans pad
+    /// D only; grid plans pad all three).
+    pad_axes: [bool; 3],
     rt: RuntimeHandle,
     info: Arc<ModelInfo>,
     plan: Arc<Vec<LayerDesc>>,
@@ -219,7 +252,9 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
     let (group, pos) = cx.topo.coords_of(rank);
     let world_group: Vec<usize> = (0..cx.topo.world_size()).collect();
     let group_ranks = cx.topo.group_ranks(group);
-    let (up, down) = (cx.topo.up(rank), cx.topo.down(rank));
+    let nbrs: GridNeighbors = cx.topo.neighbors(rank);
+    let grid = cx.opts.grid;
+    let ways = grid.ways();
     let is_root = pos == 0;
     let bpg = cx.opts.batch_global / cx.opts.groups;
 
@@ -241,7 +276,22 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
             Tensor::from_vec(&[c], vec![1.0; c])
         }).collect();
 
-    let part = DepthPartition::new_even(cx.info.input_size, cx.opts.ways)?;
+    // Even per-axis split of the (cubic) input volume: the AOT shard
+    // executables are lowered at a single shard shape, so every axis
+    // extent must divide (the simulator's last-shard-takes-remainder
+    // geometry does not apply here).
+    let size = cx.info.input_size;
+    let gdims = grid.dims();
+    for (a, &g) in gdims.iter().enumerate() {
+        if g == 0 || size % g != 0 {
+            bail!("input {size}^3 not divisible by grid {grid} along axis {a} \
+                   (the AOT shard executables need even shards)");
+        }
+    }
+    let shard_len = [size / gdims[0], size / gdims[1], size / gdims[2]];
+    let gc = grid.coords(pos);
+    let shard_off =
+        [gc[0] * shard_len[0], gc[1] * shard_len[1], gc[2] * shard_len[2]];
     let mut records = Vec::new();
     let mut phases = PhaseTimes::default();
 
@@ -258,8 +308,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
 
             // ---- I/O: fetch only this rank's hyperslab -------------------
             let t0 = Instant::now();
-            let (d0, dlen) = (part.shard_start(pos), part.shard_len());
-            let x_shard = cx.source.input_shard(sample, d0, dlen)?;
+            let x_shard = cx.source.input_shard3(sample, shard_off, shard_len)?;
             phases.io += t0.elapsed().as_secs_f64();
 
             // ---- forward -------------------------------------------------
@@ -272,7 +321,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                     LayerDesc::Conv { tag, halo: hl, fwd, .. } => {
                         let x = h.take().unwrap();
                         let t = Instant::now();
-                        let padded = halo::exchange_forward(&cx.ep, &x, *hl, up, down)?;
+                        let padded = halo::exchange_forward_grid(
+                            &cx.ep, &x, *hl, &nbrs, cx.pad_axes)?;
                         phases.halo += t.elapsed().as_secs_f64();
                         let wi = cx.info.param_index(&format!("{tag}.w"))
                             .ok_or_else(|| anyhow!("no param {tag}.w"))?;
@@ -366,13 +416,19 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let gathered =
                             cx.ep.gather_to_root(x.data(), &group_ranks)?;
                         phases.halo += t.elapsed().as_secs_f64();
+                        // reassemble the (D, H, W) block grid on the root
                         h = gathered.map(|parts| {
-                            let tensors: Vec<Tensor> = parts
-                                .into_iter()
-                                .map(|p| Tensor::from_vec(&shard_shape, p))
-                                .collect();
-                            let refs: Vec<&Tensor> = tensors.iter().collect();
-                            let full = Tensor::concat_d(&refs);
+                            let (c, sd, sh, sw) = (shard_shape[1], shard_shape[2],
+                                                   shard_shape[3], shard_shape[4]);
+                            let mut full = Tensor::zeros(&[
+                                1, c, sd * gdims[0], sh * gdims[1], sw * gdims[2],
+                            ]);
+                            for (p, part) in parts.into_iter().enumerate() {
+                                let pc = grid.coords(p);
+                                let block = Tensor::from_vec(&shard_shape, part);
+                                full.set_block3(
+                                    [pc[0] * sd, pc[1] * sh, pc[2] * sw], &block);
+                            }
                             let flat = full.numel();
                             full.reshape(&[1, flat])
                         });
@@ -429,7 +485,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                     LayerDesc::Xent { d, h: hh, w, fwd_bwd, .. } => {
                         let logits = h.take().unwrap();
                         let t0 = Instant::now();
-                        let tgt = cx.source.target_shard(sample, d0, dlen)?;
+                        let tgt =
+                            cx.source.target_shard3(sample, shard_off, shard_len)?;
                         phases.io += t0.elapsed().as_secs_f64();
                         let t = Instant::now();
                         let mut out = cx.rt.call(fwd_bwd.as_ref().unwrap(),
@@ -480,21 +537,23 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         }
                     }
                     (LayerDesc::Flatten { .. }, Saved::Flatten { shard_shape }) => {
-                        // scatter the flat gradient back to depth shards
+                        // scatter the flat gradient back to the grid shards
                         let t = Instant::now();
                         if is_root {
                             let g = dy.take().unwrap();
-                            let c = shard_shape[1];
-                            let hgt = shard_shape[3];
-                            let wid = shard_shape[4];
-                            let dfull = g.reshape(&[1, c, shard_shape[2] * cx.opts.ways,
-                                                    hgt, wid]);
-                            for p in (1..cx.opts.ways).rev() {
-                                let slab = dfull.slice_d(p * shard_shape[2],
-                                                         shard_shape[2]);
-                                cx.ep.send(group_ranks[p], slab.into_vec());
+                            let (c, sd, sh, sw) = (shard_shape[1], shard_shape[2],
+                                                   shard_shape[3], shard_shape[4]);
+                            let dfull = g.reshape(&[
+                                1, c, sd * gdims[0], sh * gdims[1], sw * gdims[2],
+                            ]);
+                            for p in (1..ways).rev() {
+                                let pc = grid.coords(p);
+                                let block = dfull.block3(
+                                    [pc[0] * sd, pc[1] * sh, pc[2] * sw],
+                                    [sd, sh, sw]);
+                                cx.ep.send(group_ranks[p], block.into_vec());
                             }
-                            dy = Some(dfull.slice_d(0, shard_shape[2]));
+                            dy = Some(dfull.block3([0, 0, 0], [sd, sh, sw]));
                         } else {
                             let buf = cx.ep.recv(group_ranks[0])?;
                             dy = Some(Tensor::from_vec(shard_shape, buf));
@@ -595,7 +654,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         ])?.remove(0);
                         phases.bwd_compute += t.elapsed().as_secs_f64();
                         let t = Instant::now();
-                        let dx = halo::exchange_backward(&cx.ep, &dxp, *hl, up, down)?;
+                        let dx = halo::exchange_backward_grid(
+                            &cx.ep, &dxp, *hl, &nbrs, cx.pad_axes)?;
                         phases.halo += t.elapsed().as_secs_f64();
                         dy = Some(dx);
                     }
@@ -631,12 +691,13 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
             && (step % cx.opts.log_every == 0 || step + 1 == cx.opts.steps)
         {
             eprintln!("[hybrid {}x{} {}] step {:>4} loss {:.6} lr {:.2e}",
-                      cx.opts.groups, cx.opts.ways, cx.opts.model, step, lbuf[0], lr);
+                      cx.opts.groups, grid, cx.opts.model, step, lbuf[0], lr);
         }
         records.push(StepRecord { step, loss: lbuf[0], lr });
     }
 
     let mut comm_bytes = cx.ep.counters().bytes();
+    let halo_bytes = cx.ep.counters().halo_bytes_axes();
     if let Some(ov) = overlap.take() {
         comm_bytes += ov.counters().bytes();
         ov.shutdown()?;
@@ -647,6 +708,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
         running: (run_mean, run_var),
         phases,
         comm_bytes,
+        halo_bytes,
     })
 }
 

@@ -6,13 +6,14 @@
 //! * [`dataparallel`] — the fused path: each rank executes the whole-model
 //!   `train_step` AOT executable on its local batch and allreduces
 //!   gradients. This is the classic regime the paper scales *beyond*.
-//! * [`hybrid`] — the paper's contribution: every sample is depth-
-//!   partitioned over a *sample group* of `ways` ranks; convolutions run on
-//!   halo-exchanged shards through per-layer AOT executables, batch-norm
-//!   statistics are allreduced across the whole instant batch, the
-//!   non-spatial tail (fc layers) runs on the group root, and weight
-//!   gradients are allreduced across all ranks (the green arrows of the
-//!   paper's Fig. 2).
+//! * [`hybrid`] — the paper's contribution: every sample is spatially
+//!   partitioned over a *sample group* on a D×H×W process grid (depth-only
+//!   is the `d×1×1` case); convolutions run on halo-exchanged shards (one
+//!   face exchange per partitioned axis) through per-layer AOT
+//!   executables, batch-norm statistics are allreduced across the whole
+//!   instant batch, the non-spatial tail (fc layers) runs on the group
+//!   root, and weight gradients are allreduced across all ranks (the green
+//!   arrows of the paper's Fig. 2).
 //!
 //! The core correctness invariant — hybrid(W ways) ≡ hybrid(1 way) ≡ fused
 //! for identical seeds — is enforced in `rust/tests/engine_equivalence.rs`.
@@ -203,6 +204,9 @@ pub struct TrainReport {
     pub running: (Vec<Tensor>, Vec<Tensor>),
     pub phases: PhaseTimes,
     pub comm_bytes: u64,
+    /// Halo-face bytes sent per spatial axis (D, H, W) — zero for the
+    /// fused engine, the §III-A per-dimension halo volume for hybrid runs.
+    pub halo_bytes: [u64; 3],
 }
 
 impl TrainReport {

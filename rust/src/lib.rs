@@ -8,9 +8,9 @@
 //!
 //! * the process topology and the simulated multi-rank communicator
 //!   ([`comm`], [`partition`]),
-//! * the hybrid-parallel training engine — spatial (depth) partitioning with
-//!   halo exchange, distributed batch-norm, data-parallel gradient
-//!   allreduce ([`engine`]),
+//! * the hybrid-parallel training engine — full D×H×W spatial partitioning
+//!   with per-axis face halo exchange, distributed batch-norm,
+//!   data-parallel gradient allreduce ([`engine`]),
 //! * the spatially-parallel I/O pipeline: hyperslab readers and the
 //!   distributed in-memory data store ([`data`], [`iosim`]),
 //! * the paper's §III-C performance model and a discrete-event cluster

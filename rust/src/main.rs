@@ -9,6 +9,7 @@
 //!   hydra3d table1
 //!   hydra3d fig --id 4
 //!   hydra3d train --model cf16 --ways 2 --groups 2 --batch 4 --steps 20
+//!   hydra3d train --model cf16 --grid 2x2x2 --batch 2 --steps 10
 //!   hydra3d train --model unet16 --ways 2 --task ct
 
 use anyhow::{bail, Result};
@@ -19,6 +20,7 @@ use hydra3d::data::ct::ct_dataset;
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
 use hydra3d::engine::hybrid::{train_hybrid_with, HybridOpts, InMemorySource};
 use hydra3d::engine::LrSchedule;
+use hydra3d::partition::SpatialGrid;
 use hydra3d::perfmodel::trace::replay;
 use hydra3d::perfmodel::{Link, SrModel};
 use hydra3d::runtime::RuntimeHandle;
@@ -94,7 +96,11 @@ fn usage() -> String {
 fn train_cmd(rest: &[String]) -> Result<()> {
     let c = Command::new("train", "functional training on synthetic data")
         .opt("model", "manifest model name", Some("cf16"))
-        .opt("ways", "spatial (depth) partitioning", Some("1"))
+        .opt("ways", "depth-only spatial partitioning (= --grid Wx1x1)", Some("1"))
+        .opt("grid",
+             "full 3D spatial process grid `dxhxw` (e.g. 2x2x2); overrides \
+              --ways",
+             None)
         .opt("groups", "data-parallel groups", Some("1"))
         .opt("batch", "global mini-batch", Some("2"))
         .opt("steps", "training steps", Some("20"))
@@ -137,10 +143,14 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         Arc::new(InMemorySource { inputs: ds.inputs, targets: ds.targets })
     };
 
+    let grid = match a.get("grid") {
+        Some(g) => SpatialGrid::parse(g)?,
+        None => SpatialGrid::depth(a.get_usize("ways")?.unwrap()),
+    };
     let steps = a.get_usize("steps")?.unwrap();
     let opts = HybridOpts {
         model,
-        ways: a.get_usize("ways")?.unwrap(),
+        grid,
         groups: a.get_usize("groups")?.unwrap(),
         batch_global: a.get_usize("batch")?.unwrap(),
         steps,
@@ -156,15 +166,19 @@ fn train_cmd(rest: &[String]) -> Result<()> {
     let rep = train_hybrid_with(&rt, &opts, source, &backend, reduce)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "trained {} for {} steps: loss {:.6} -> {:.6} in {:.1}s \
-         ({:.0} KiB comm, phases: fwd {:.1}s bwd {:.1}s halo {:.2}s \
-         ar {:.2}s exposed / {:.2}s overlapped)",
+        "trained {} (grid {}) for {} steps: loss {:.6} -> {:.6} in {:.1}s \
+         ({:.0} KiB comm, halo KiB D/H/W {:.0}/{:.0}/{:.0}, phases: fwd \
+         {:.1}s bwd {:.1}s halo {:.2}s ar {:.2}s exposed / {:.2}s overlapped)",
         opts.model,
+        opts.grid,
         steps,
         rep.records.first().map(|r| r.loss).unwrap_or(f32::NAN),
         rep.final_loss(),
         dt,
         rep.comm_bytes as f64 / 1024.0,
+        rep.halo_bytes[0] as f64 / 1024.0,
+        rep.halo_bytes[1] as f64 / 1024.0,
+        rep.halo_bytes[2] as f64 / 1024.0,
         rep.phases.fwd_compute,
         rep.phases.bwd_compute,
         rep.phases.halo,
@@ -172,17 +186,20 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         rep.phases.allreduce_overlapped,
     );
     if let CommBackend::Traced(tc) = &backend {
-        let world = opts.groups * opts.ways;
+        let world = opts.groups * opts.grid.ways();
         let cluster = ClusterConfig::default();
         let link = SrModel::from_cluster(&cluster, Link::NvLink);
         let r = replay(tc, world, &link);
         println!(
-            "comm trace: {} messages, {} bytes, {} logical collectives; \
-             §III-C replay: p2p critical {:.2} ms, allreduce model {:.2} ms \
-             (NVLink link)",
+            "comm trace: {} messages, {} bytes, {} logical collectives \
+             (halo bytes D/H/W {}/{}/{}); §III-C replay: p2p critical \
+             {:.2} ms, allreduce model {:.2} ms (NVLink link)",
             r.messages,
             r.bytes,
             r.collectives,
+            r.halo_bytes_axis[0],
+            r.halo_bytes_axis[1],
+            r.halo_bytes_axis[2],
             r.p2p_critical_secs * 1e3,
             r.allreduce_model_secs * 1e3,
         );
@@ -200,14 +217,18 @@ fn info_cmd() -> Result<()> {
         let m = &man.models[name];
         let mut ways: Vec<&usize> = m.hybrid.keys().collect();
         ways.sort();
+        let mut grids: Vec<&String> = m.hybrid_grid.keys().collect();
+        grids.sort();
         println!(
-            "  {:<12} {:<10} input {:>3}^3  params {:>9}  bn {}  hybrid ways {:?}",
+            "  {:<12} {:<10} input {:>3}^3  params {:>9}  bn {}  hybrid ways \
+             {:?}  grids {:?}",
             name,
             m.kind,
             m.input_size,
             m.param_count(),
             if m.use_bn { "yes" } else { "no " },
             ways,
+            grids,
         );
     }
     Ok(())

@@ -88,11 +88,27 @@ impl AnalyticLayer {
     /// Bytes of one depth-halo face under `ways`-way depth partitioning
     /// (f32; zero if the layer exchanges no halo).
     pub fn halo_face_bytes(&self, ways: usize) -> f64 {
-        if ways <= 1 || self.kind != LayerKind::Conv || self.k <= 1 {
+        self.halo_face_bytes_axis(
+            crate::partition::Grid4 { n: 1, d: ways, h: 1, w: 1 }, 0)
+    }
+
+    /// Bytes of one halo face along spatial `axis` (0=D, 1=H, 2=W) under a
+    /// `grid` spatial split: `cin * halo * (face area)` f32, where the face
+    /// area is the product of the *other* two axes' shard extents (layers
+    /// are cubic). Zero for unpartitioned axes and non-conv layers — the
+    /// per-dimension halo regions the §III-C model sums over.
+    pub fn halo_face_bytes_axis(&self, grid: crate::partition::Grid4, axis: usize)
+                                -> f64 {
+        let dims = [grid.d, grid.h, grid.w];
+        if dims[axis] <= 1 || self.kind != LayerKind::Conv || self.k <= 1 {
             return 0.0;
         }
         let halo = (self.k - 1) / 2;
-        4.0 * self.cin as f64 * halo as f64 * (self.d_in as f64).powi(2)
+        let area: f64 = (0..3)
+            .filter(|&a| a != axis)
+            .map(|a| (self.d_in as f64 / dims[a] as f64).max(1.0))
+            .product();
+        4.0 * self.cin as f64 * halo as f64 * area
     }
 }
 
@@ -403,5 +419,34 @@ mod tests {
         // conv1 halo face: 4 ch * 1 plane * 512^2 * 4 B = 4 MiB
         assert_eq!(c1.halo_face_bytes(8), 4.0 * 512.0 * 512.0 * 4.0);
         assert_eq!(c1.halo_face_bytes(1), 0.0);
+    }
+
+    #[test]
+    fn halo_bytes_per_axis_sublinear_in_3d() {
+        use crate::partition::Grid4;
+        let m = cosmoflow_paper(512, false);
+        let c1 = &m.layers[0];
+        let g222 = Grid4 { n: 1, d: 2, h: 2, w: 2 };
+        // D face under 2x2x2: 4 ch * (512/2)^2 * 4 B, same on every axis
+        let want = 4.0 * 256.0 * 256.0 * 4.0;
+        for axis in 0..3 {
+            assert_eq!(c1.halo_face_bytes_axis(g222, axis), want, "axis {axis}");
+        }
+        // unpartitioned axes exchange nothing
+        let g811 = Grid4 { n: 1, d: 8, h: 1, w: 1 };
+        assert_eq!(c1.halo_face_bytes_axis(g811, 1), 0.0);
+        assert_eq!(c1.halo_face_bytes_axis(g811, 0), c1.halo_face_bytes(8));
+        // the paper's multi-axis claim: total halo volume of an 8-rank 3D
+        // grid is below the 8-way depth split's
+        let total_3d: f64 = m.layers.iter()
+            .map(|l| (0..3).map(|a| l.halo_face_bytes_axis(g222, a)).sum::<f64>())
+            .sum();
+        let total_1d: f64 = m.layers.iter()
+            .map(|l| l.halo_face_bytes(8))
+            .sum();
+        assert!(total_3d < total_1d, "3D {total_3d} vs 1D {total_1d}");
+        // exact values (also the committed BENCH_baseline.json gate)
+        assert_eq!(total_1d, 11_747_328.0);
+        assert_eq!(total_3d, 8_810_496.0);
     }
 }

@@ -5,10 +5,12 @@
 //! holds one sample, partitioned in the spatial dims, and groups advance
 //! the mini-batch in data-parallel fashion ("hybrid parallelism").
 //!
-//! The functional engine uses depth-only splits ([`Topology`]); the
-//! performance model and simulator use the general grid ([`Grid4`]).
+//! The functional engine partitions samples over a full 3D process grid
+//! ([`SpatialGrid`] + [`GridTopology`]; depth-only splits are the `d×1×1`
+//! special case, with [`Topology`] kept as the 1D view). The performance
+//! model and simulator use the general grid ([`Grid4`]).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Hybrid topology: `groups x d_ways` ranks; group = data-parallel index,
 /// position = depth-shard index within the sample.
@@ -62,6 +64,148 @@ impl Topology {
     /// gradient allreduce never needs this split, but the data store does).
     pub fn position_ranks(&self, pos: usize) -> Vec<usize> {
         (0..self.groups).map(|g| self.rank_of(g, pos)).collect()
+    }
+}
+
+/// Spatial process grid: partition ways along each of (D, H, W). The
+/// paper's §III-A decomposition; `d×1×1` is the classic depth-only split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpatialGrid {
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl SpatialGrid {
+    pub fn new(d: usize, h: usize, w: usize) -> SpatialGrid {
+        assert!(d > 0 && h > 0 && w > 0, "grid ways must be positive");
+        SpatialGrid { d, h, w }
+    }
+
+    /// Depth-only split (the 1D special case the depth engine used).
+    pub fn depth(ways: usize) -> SpatialGrid {
+        SpatialGrid::new(ways, 1, 1)
+    }
+
+    pub fn ways(&self) -> usize {
+        self.d * self.h * self.w
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        [self.d, self.h, self.w]
+    }
+
+    pub fn is_depth_only(&self) -> bool {
+        self.h == 1 && self.w == 1
+    }
+
+    /// Canonical `dxhxw` key (CLI `--grid` syntax, manifest grid plans).
+    pub fn key(&self) -> String {
+        format!("{}x{}x{}", self.d, self.h, self.w)
+    }
+
+    /// Parse `"8"` (depth-only) or `"dxhxw"` (e.g. `"2x2x2"`).
+    pub fn parse(s: &str) -> Result<SpatialGrid> {
+        let parts: Vec<usize> = s
+            .split('x')
+            .map(|p| p.trim().parse::<usize>().map_err(|e| anyhow!("grid {s:?}: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+        let grid = match parts[..] {
+            [d] => SpatialGrid { d, h: 1, w: 1 },
+            [d, h, w] => SpatialGrid { d, h, w },
+            _ => bail!("grid {s:?}: expected `d` or `dxhxw`"),
+        };
+        if grid.d == 0 || grid.h == 0 || grid.w == 0 {
+            bail!("grid {s:?}: ways must be positive");
+        }
+        Ok(grid)
+    }
+
+    /// Linear position of grid coordinates (row-major D, H, W: adjacent W
+    /// neighbours sit on adjacent ranks, so the most frequent faces prefer
+    /// the fastest links under the paper's Fig. 2 node packing).
+    pub fn pos_of(&self, c: [usize; 3]) -> usize {
+        debug_assert!(c[0] < self.d && c[1] < self.h && c[2] < self.w);
+        (c[0] * self.h + c[1]) * self.w + c[2]
+    }
+
+    /// Grid coordinates of a linear position (inverse of [`pos_of`]).
+    pub fn coords(&self, pos: usize) -> [usize; 3] {
+        debug_assert!(pos < self.ways());
+        [pos / (self.h * self.w), (pos / self.w) % self.h, pos % self.w]
+    }
+}
+
+impl std::fmt::Display for SpatialGrid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.d, self.h, self.w)
+    }
+}
+
+/// Per-axis face neighbours of one rank: `lo[a]` / `hi[a]` hold the rank
+/// owning the previous / next shard along spatial axis `a` (0=D, 1=H, 2=W),
+/// `None` at the global boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GridNeighbors {
+    pub lo: [Option<usize>; 3],
+    pub hi: [Option<usize>; 3],
+}
+
+/// Hybrid topology over a 3D spatial grid: `groups x grid.ways()` ranks,
+/// group-major (`rank = group * ways + pos`), positions row-major in
+/// (D, H, W). The generalization of [`Topology`] the engine runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridTopology {
+    pub groups: usize,
+    pub grid: SpatialGrid,
+}
+
+impl GridTopology {
+    pub fn new(groups: usize, grid: SpatialGrid) -> GridTopology {
+        assert!(groups > 0);
+        GridTopology { groups, grid }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.groups * self.grid.ways()
+    }
+
+    pub fn rank_of(&self, group: usize, pos: usize) -> usize {
+        debug_assert!(group < self.groups && pos < self.grid.ways());
+        group * self.grid.ways() + pos
+    }
+
+    /// (group, linear position within the sample grid).
+    pub fn coords_of(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.world_size());
+        (rank / self.grid.ways(), rank % self.grid.ways())
+    }
+
+    /// Face neighbours of `rank` along every partitioned axis.
+    pub fn neighbors(&self, rank: usize) -> GridNeighbors {
+        let (group, pos) = self.coords_of(rank);
+        let c = self.grid.coords(pos);
+        let dims = self.grid.dims();
+        let mut n = GridNeighbors::default();
+        for a in 0..3 {
+            if c[a] > 0 {
+                let mut lo = c;
+                lo[a] -= 1;
+                n.lo[a] = Some(self.rank_of(group, self.grid.pos_of(lo)));
+            }
+            if c[a] + 1 < dims[a] {
+                let mut hi = c;
+                hi[a] += 1;
+                n.hi[a] = Some(self.rank_of(group, self.grid.pos_of(hi)));
+            }
+        }
+        n
+    }
+
+    /// Ranks of one sample group, in position order (the gather order at
+    /// the flatten boundary).
+    pub fn group_ranks(&self, group: usize) -> Vec<usize> {
+        (0..self.grid.ways()).map(|p| self.rank_of(group, p)).collect()
     }
 }
 
@@ -126,6 +270,21 @@ impl Grid4 {
         (div_ceil(vol.0, self.d), div_ceil(vol.1, self.h), div_ceil(vol.2, self.w))
     }
 
+    /// Per-axis shard `(start, len)` of grid coordinate `coord` over a
+    /// (D, H, W) volume: floor-even split, last shard takes the remainder,
+    /// so non-power-of-two grids cover 512^3 volumes exactly (unlike
+    /// [`DepthPartition::new_even`], which rejects non-divisible extents —
+    /// the AOT functional engine needs even shards, the simulator and the
+    /// data store do not).
+    pub fn shard_range(&self, vol: (usize, usize, usize),
+                       coord: (usize, usize, usize)) -> [(usize, usize); 3] {
+        [
+            axis_range(vol.0, self.d, coord.0),
+            axis_range(vol.1, self.h, coord.1),
+            axis_range(vol.2, self.w, coord.2),
+        ]
+    }
+
     /// Per-spatial-dim halo *face* areas (elements) for a k^3 stride-1 conv
     /// on a (D, H, W) shard of `c` channels: one face per partitioned dim
     /// side. Dims that are not partitioned contribute no halo.
@@ -143,6 +302,18 @@ impl Grid4 {
 
 pub fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
+}
+
+/// `(start, len)` of shard `pos` when `extent` is split `ways`-ways:
+/// floor-even with the last shard taking the remainder. Every shard is
+/// non-empty as long as `ways <= extent`.
+pub fn axis_range(extent: usize, ways: usize, pos: usize) -> (usize, usize) {
+    assert!(ways >= 1 && pos < ways, "shard {pos} of {ways} ways");
+    assert!(ways <= extent, "extent {extent} over-decomposed into {ways} shards");
+    let base = extent / ways;
+    let start = pos * base;
+    let len = if pos + 1 == ways { extent - start } else { base };
+    (start, len)
 }
 
 #[cfg(test)]
@@ -205,6 +376,84 @@ mod tests {
         assert_eq!(g.shard_extent((512, 512, 512)), (128, 256, 512));
         let faces = g.halo_faces(16, (512, 512, 512), 3);
         assert_eq!(faces, [16 * 1 * 256 * 512, 16 * 1 * 128 * 512, 0]);
+    }
+
+    #[test]
+    fn spatial_grid_parse_and_coords() {
+        assert_eq!(SpatialGrid::parse("8").unwrap(), SpatialGrid::depth(8));
+        assert_eq!(SpatialGrid::parse("2x2x2").unwrap(), SpatialGrid::new(2, 2, 2));
+        assert_eq!(SpatialGrid::parse("4x2x1").unwrap().ways(), 8);
+        assert!(SpatialGrid::parse("2x2").is_err());
+        assert!(SpatialGrid::parse("0x2x2").is_err());
+        assert!(SpatialGrid::parse("ax2x2").is_err());
+        let g = SpatialGrid::new(3, 2, 4);
+        for pos in 0..g.ways() {
+            assert_eq!(g.pos_of(g.coords(pos)), pos);
+        }
+        assert_eq!(g.key(), "3x2x4");
+        assert!(SpatialGrid::depth(4).is_depth_only());
+        assert!(!g.is_depth_only());
+    }
+
+    #[test]
+    fn grid_topology_neighbors_match_1d() {
+        // a dx1x1 grid must reproduce the 1D Topology's neighbour structure
+        let t1 = Topology::new(2, 4);
+        let tg = GridTopology::new(2, SpatialGrid::depth(4));
+        assert_eq!(t1.world_size(), tg.world_size());
+        for r in 0..tg.world_size() {
+            let n = tg.neighbors(r);
+            assert_eq!(n.lo[0], t1.up(r), "rank {r}");
+            assert_eq!(n.hi[0], t1.down(r), "rank {r}");
+            assert_eq!(n.lo[1], None);
+            assert_eq!(n.hi[2], None);
+        }
+        assert_eq!(tg.group_ranks(1), t1.group_ranks(1));
+    }
+
+    #[test]
+    fn grid_topology_neighbors_symmetric_3d() {
+        let tg = GridTopology::new(2, SpatialGrid::new(2, 3, 2));
+        for r in 0..tg.world_size() {
+            let n = tg.neighbors(r);
+            for a in 0..3 {
+                if let Some(lo) = n.lo[a] {
+                    assert_eq!(tg.neighbors(lo).hi[a], Some(r), "rank {r} axis {a}");
+                }
+                if let Some(hi) = n.hi[a] {
+                    assert_eq!(tg.neighbors(hi).lo[a], Some(r), "rank {r} axis {a}");
+                }
+            }
+            // neighbours stay within the same sample group
+            let (g, _) = tg.coords_of(r);
+            for x in n.lo.iter().chain(n.hi.iter()).flatten() {
+                assert_eq!(tg.coords_of(*x).0, g);
+            }
+        }
+    }
+
+    #[test]
+    fn axis_range_last_shard_takes_remainder() {
+        // 512 planes on a non-power-of-two split: exact cover, last shard
+        // absorbs the remainder
+        assert_eq!(axis_range(512, 3, 0), (0, 170));
+        assert_eq!(axis_range(512, 3, 1), (170, 170));
+        assert_eq!(axis_range(512, 3, 2), (340, 172));
+        assert_eq!(axis_range(512, 5, 4), (408, 104));
+        let g = Grid4 { n: 1, d: 3, h: 2, w: 1 };
+        let ranges = g.shard_range((512, 512, 512), (2, 1, 0));
+        assert_eq!(ranges, [(340, 172), (256, 256), (0, 512)]);
+        // exact cover on every axis
+        for (extent, ways) in [(512usize, 3usize), (512, 5), (7, 7), (10, 4)] {
+            let mut end = 0;
+            for pos in 0..ways {
+                let (s, len) = axis_range(extent, ways, pos);
+                assert_eq!(s, end, "{extent}/{ways} shard {pos}");
+                assert!(len > 0);
+                end = s + len;
+            }
+            assert_eq!(end, extent, "{extent}/{ways}");
+        }
     }
 
     #[test]

@@ -114,15 +114,18 @@ impl KernelModel {
         self.conv_eff * f_cin * f_thin * f_small
     }
 
-    /// Forward-pass compute time of layer `l` on one GPU holding `1/ways`
-    /// of the depth (no communication).
-    pub fn comp_fwd(&self, l: &AnalyticLayer, ways: usize) -> f64 {
-        let frac = 1.0 / ways as f64;
+    /// Forward-pass compute time of layer `l` on one GPU holding a
+    /// `1/grid.spatial_ways()` shard (no communication). The thin-shard
+    /// penalties apply per axis: depth splits shrink the local depth
+    /// extent, H/W splits shrink the in-plane extent cuDNN tiles over.
+    pub fn comp_fwd(&self, l: &AnalyticLayer, grid: Grid4) -> f64 {
+        let frac = 1.0 / grid.spatial_ways() as f64;
         match l.kind {
             LayerKind::Conv | LayerKind::Deconv => {
-                let dsh = (l.d_out / ways).max(1);
+                let dsh = (l.d_out / grid.d).max(1);
+                let ext = (l.d_out / grid.h.max(grid.w)).max(1);
                 l.fwd_flops() * frac
-                    / (self.peak_flops * self.conv_shard_eff(l.cin, dsh, l.d_out))
+                    / (self.peak_flops * self.conv_shard_eff(l.cin, dsh, ext))
             }
             LayerKind::Pool | LayerKind::BatchNorm => {
                 // bandwidth-bound: read + write the shard
@@ -206,12 +209,25 @@ impl PerfModel {
         let (mut fwd, mut bwd, mut kernel_only) = (0.0f64, 0.0f64, 0.0f64);
         let mut ar_total = 0.0f64;
         for l in &model.layers {
-            let comp = self.kernel.comp_fwd(l, ways);
-            // halo: one face each side, overlapped with main compute
-            let face = l.halo_face_bytes(ways);
-            let sr = self.halo_link(ways).time(face);
-            let halo_frac = if l.kind == LayerKind::Conv && ways > 1 && l.k > 1 {
-                (l.k - 1) as f64 / (l.d_in as f64 / ways as f64 + (l.k - 1) as f64)
+            let comp = self.kernel.comp_fwd(l, grid);
+            // halo: one face each side per partitioned axis, exchanged
+            // sequentially (§III-A), overlapped with main compute — so the
+            // exposed term is Σ_axis 2 SR(face_axis)
+            let link = self.halo_link(ways);
+            let sr: f64 = (0..3)
+                .map(|a| link.time(l.halo_face_bytes_axis(grid, a)))
+                .sum();
+            // extra boundary output recomputed from the halo region,
+            // accumulated over the partitioned axes
+            let halo_frac = if l.kind == LayerKind::Conv && l.k > 1 {
+                [grid.d, grid.h, grid.w]
+                    .iter()
+                    .filter(|&&wy| wy > 1)
+                    .map(|&wy| {
+                        (l.k - 1) as f64
+                            / (l.d_in as f64 / wy as f64 + (l.k - 1) as f64)
+                    })
+                    .sum()
             } else {
                 0.0
             };
@@ -343,6 +359,24 @@ mod tests {
         assert!(all32 < all8, "rel must drop with ways: {all8} -> {all32}");
         assert!((0.55..0.95).contains(&all32), "32-way rel {all32} (paper 82.4%)");
         assert!(c1_32 < c1_8, "conv1 rel: {c1_8} -> {c1_32} (paper 93.8 -> 64.7)");
+    }
+
+    /// A 2x2x2 spatial grid exchanges less halo volume than the 8-way
+    /// depth split of the same 8 GPUs (the multi-axis decomposition claim;
+    /// Dryden et al.), and the model prices it accordingly.
+    #[test]
+    fn grid_3d_halo_below_depth_only() {
+        let m = cosmoflow_paper(512, false);
+        let p = pm();
+        let depth = p.iteration(&m, Grid4::depth_only(8, 8), 8, 16.0);
+        let grid = p.iteration(&m, Grid4 { n: 8, d: 2, h: 2, w: 2 }, 8, 16.0);
+        let halo_depth: f64 = depth.layers.iter().map(|l| l.halo).sum();
+        let halo_grid: f64 = grid.layers.iter().map(|l| l.halo).sum();
+        assert!(halo_grid < halo_depth,
+                "3D halo {halo_grid} must be below depth-only {halo_depth}");
+        // both are feasible, finite predictions
+        assert!(grid.total > 0.0 && grid.total.is_finite());
+        assert!(grid.feasible && depth.feasible);
     }
 
     /// Memory feasibility drives the minimum ways (Fig. 4 has no 4-way

@@ -12,12 +12,20 @@ use crate::partition::Grid4;
 pub struct ScalePoint {
     pub gpus: usize,
     pub ways: usize,
+    /// Spatial split (D, H, W) behind `ways` (`(ways, 1, 1)` for the
+    /// depth-only sweeps).
+    pub grid: (usize, usize, usize),
     pub n: usize,
     pub iter_s: f64,
     pub model_iter_s: f64, // the §III-C prediction (shaded bars in Fig. 4)
     pub samples_per_s: f64,
     pub fwd_s: f64,
     pub bwd_s: f64,
+    /// Exposed (non-overlapped) gradient-allreduce tail, seconds.
+    pub exposed_ar_s: f64,
+    /// Per-sample halo volume (one face per partitioned axis per conv
+    /// layer), bytes — the BENCH artifact's deterministic metric.
+    pub halo_bytes: f64,
     pub io_s: f64,
     pub feasible: bool,
 }
@@ -32,26 +40,45 @@ pub fn strong_scaling(
     ways_list: &[usize],
     io: IoStrategy,
 ) -> Vec<ScalePoint> {
+    let grids: Vec<(usize, usize, usize)> =
+        ways_list.iter().map(|&w| (w, 1, 1)).collect();
+    strong_scaling_grids(model, cluster, n, &grids, io)
+}
+
+/// Strong scaling over explicit (D, H, W) spatial splits — the §III-A
+/// multi-axis sweep `examples/strong_scaling_sim` and the bench artifact
+/// run. Depth-only entries reproduce [`strong_scaling`] exactly.
+pub fn strong_scaling_grids(
+    model: &AnalyticModel,
+    cluster: &ClusterConfig,
+    n: usize,
+    grids: &[(usize, usize, usize)],
+    io: IoStrategy,
+) -> Vec<ScalePoint> {
     let pm = PerfModel::new(cluster);
     let pfs = Pfs::default();
     let sample_bytes = 4.0 * model.in_channels as f64
         * (model.input_size as f64).powi(3);
-    ways_list
+    grids
         .iter()
-        .map(|&ways| {
-            let grid = Grid4::depth_only(n, ways);
+        .map(|&(d, h, w)| {
+            let grid = Grid4 { n, d, h, w };
+            let ways = grid.spatial_ways();
             let it = pm.iteration(model, grid, n, cluster.gpu_mem_gib);
             let io_s = io_time_per_iter(io, &pfs, cluster, sample_bytes, n, ways);
             let iter_s = iteration_time(it.total, io_s, overlaps(io));
             ScalePoint {
                 gpus: grid.world_size(),
                 ways,
+                grid: (d, h, w),
                 n,
                 iter_s,
                 model_iter_s: it.total,
                 samples_per_s: n as f64 / iter_s,
                 fwd_s: it.fwd,
                 bwd_s: it.bwd.max(it.allreduce),
+                exposed_ar_s: (it.allreduce - it.bwd).max(0.0),
+                halo_bytes: grid_halo_bytes(model, grid),
                 io_s,
                 feasible: it.feasible,
             }
@@ -78,12 +105,15 @@ pub fn weak_scaling(
             ScalePoint {
                 gpus: grid.world_size(),
                 ways,
+                grid: (ways, 1, 1),
                 n,
                 iter_s: it.total,
                 model_iter_s: it.total,
                 samples_per_s: it.samples_per_s,
                 fwd_s: it.fwd,
                 bwd_s: it.bwd.max(it.allreduce),
+                exposed_ar_s: (it.allreduce - it.bwd).max(0.0),
+                halo_bytes: grid_halo_bytes(model, grid),
                 io_s: 0.0,
                 feasible: it.feasible,
             }
@@ -94,6 +124,17 @@ pub fn weak_scaling(
 /// Throughput speedup of the last point relative to the first.
 pub fn speedup(points: &[ScalePoint]) -> f64 {
     points.last().unwrap().samples_per_s / points[0].samples_per_s
+}
+
+/// Per-sample halo volume of `model` under `grid`: one face per
+/// partitioned axis per conv layer, f32 bytes — independent of the rank
+/// count along an axis (faces shrink as the *other* axes split).
+pub fn grid_halo_bytes(model: &AnalyticModel, grid: Grid4) -> f64 {
+    model
+        .layers
+        .iter()
+        .map(|l| (0..3).map(|a| l.halo_face_bytes_axis(grid, a)).sum::<f64>())
+        .sum()
 }
 
 #[cfg(test)]
@@ -154,6 +195,26 @@ mod tests {
                 "{ways}-way: {s:.1}x vs paper {paper}"
             );
         }
+    }
+
+    /// 3D grid sweeps: depth-only entries reproduce `strong_scaling`, and
+    /// 3D splits of the same GPU count carry less halo volume.
+    #[test]
+    fn grid_sweep_consistent_with_depth_only() {
+        let m = cosmoflow_paper(512, false);
+        let cl = ClusterConfig::default();
+        let a = strong_scaling(&m, &cl, 4, &[8], IoStrategy::SpatialParallel);
+        let b = strong_scaling_grids(&m, &cl, 4, &[(8, 1, 1), (2, 2, 2)],
+                                     IoStrategy::SpatialParallel);
+        assert_eq!(a[0].iter_s, b[0].iter_s);
+        assert_eq!(a[0].grid, (8, 1, 1));
+        assert_eq!(b[0].gpus, b[1].gpus);
+        assert!(b[1].halo_bytes < b[0].halo_bytes,
+                "2x2x2 halo {} must be below 8x1x1 {}", b[1].halo_bytes,
+                b[0].halo_bytes);
+        // the committed BENCH_baseline.json values
+        assert_eq!(b[0].halo_bytes, 11_747_328.0);
+        assert_eq!(b[1].halo_bytes, 8_810_496.0);
     }
 
     #[test]

@@ -36,6 +36,10 @@ pub struct TraceReplay {
     pub allreduce_model_secs: f64,
     /// Logical collectives recorded (allreduces, gathers, barriers, ...).
     pub collectives: usize,
+    /// Halo-face payload bytes per spatial axis (D, H, W), from the axis
+    /// tags the halo exchange attaches to its sends — the per-dimension
+    /// halo volumes the §III-A cost model sums over.
+    pub halo_bytes_axis: [u64; 3],
 }
 
 /// Replay `trace` (from a world of `world` ranks) against `link`.
@@ -63,6 +67,7 @@ pub fn replay(trace: &TraceCollector, world: usize, link: &SrModel) -> TraceRepl
         p2p_critical_secs,
         allreduce_model_secs,
         collectives: colls.len(),
+        halo_bytes_axis: trace.halo_bytes_per_axis(),
     }
 }
 
@@ -125,6 +130,39 @@ mod tests {
             rep.p2p_critical_secs,
             rep.allreduce_model_secs,
         );
+    }
+
+    /// Halo sends carry their axis tag through to the replay report.
+    #[test]
+    fn replay_accounts_halo_axes() {
+        use crate::comm::halo;
+        use crate::partition::{GridTopology, SpatialGrid};
+        use crate::tensor::Tensor;
+        let grid = SpatialGrid::new(2, 1, 2);
+        let topo = GridTopology::new(1, grid);
+        let tc = Arc::new(TraceCollector::new());
+        let eps: Vec<_> = world(grid.ways())
+            .into_iter()
+            .map(|e| Traced::new(e, tc.clone()))
+            .collect();
+        thread::scope(|s| {
+            for (r, ep) in eps.into_iter().enumerate() {
+                let nbrs = topo.neighbors(r);
+                s.spawn(move || {
+                    let shard = Tensor::zeros(&[1, 1, 2, 2, 2]);
+                    halo::exchange_forward_grid(&ep, &shard, 1, &nbrs,
+                                                [true, true, true])
+                        .unwrap();
+                });
+            }
+        });
+        let link = SrModel { alpha_s: 1e-6, bytes_per_s: 10e9 };
+        let rep = replay(&tc, 4, &link);
+        // D faces: 4 sends of a (1,1,1,2,2) face = 16 B; H is unsplit
+        // (zero-pad only); W faces go out after the D+H pads: 4 sends of
+        // (1,1,4,4,1) = 64 B.
+        assert_eq!(rep.halo_bytes_axis, [4 * 4 * 4, 0, 4 * 16 * 4]);
+        assert_eq!(rep.bytes, (4 * 4 * 4 + 4 * 16 * 4) as u64);
     }
 
     /// Per-rank send loads in a ring are balanced.

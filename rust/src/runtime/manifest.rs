@@ -1,6 +1,7 @@
 //! Typed view of `artifacts/manifest.json` — the single source of truth
 //! shared between the Python AOT compiler and the Rust engine.
 
+use crate::partition::SpatialGrid;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -104,8 +105,11 @@ pub struct ModelInfo {
     pub bn_layers: Vec<String>,
     pub plan: Vec<LayerDesc>,
     pub fused: FusedInfo,
-    /// ways -> plan with executable entry names
+    /// ways -> depth-partitioned plan with executable entry names
     pub hybrid: HashMap<usize, Vec<LayerDesc>>,
+    /// "dxhxw" -> 3D-grid plan (executables halo-padded on all three
+    /// axes); keys with an `x` in the manifest's `hybrid` table land here
+    pub hybrid_grid: HashMap<String, Vec<LayerDesc>>,
     pub n_targets: usize,
     pub n_classes: usize,
     pub dropout_keep: f64,
@@ -118,6 +122,32 @@ impl ModelInfo {
 
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|(n, _)| n == name)
+    }
+
+    /// Execution plan + halo-padded axes for a spatial `grid`: depth-only
+    /// grids use the per-ways depth plans (executables pad D only, H/W
+    /// "same"-padded inside the kernels); true 3D grids use the
+    /// `dxhxw`-keyed grid plans (valid convs, halo-padded on all axes).
+    pub fn hybrid_plan(&self, grid: &SpatialGrid)
+                       -> Result<(&Vec<LayerDesc>, [bool; 3])> {
+        if grid.is_depth_only() {
+            self.hybrid
+                .get(&grid.d)
+                .map(|p| (p, [true, false, false]))
+                .ok_or_else(|| {
+                    anyhow!("model {} has no {}-way depth shard set (rebuild \
+                             artifacts)", self.name, grid.d)
+                })
+        } else {
+            self.hybrid_grid
+                .get(&grid.key())
+                .map(|p| (p, [true, true, true]))
+                .ok_or_else(|| {
+                    anyhow!("model {} has no {} grid shard set (rebuild \
+                             artifacts with this grid in aot.py GRID_SETS)",
+                            self.name, grid.key())
+                })
+        }
     }
 
     /// BN channel widths in forward order.
@@ -200,12 +230,21 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
         .map(parse_layer)
         .collect::<Result<Vec<_>>>()?;
     let mut hybrid = HashMap::new();
-    for (ways, p) in m.req("hybrid")?.as_obj()? {
-        let w: usize = ways.parse()?;
-        hybrid.insert(
-            w,
-            p.as_arr()?.iter().map(parse_layer).collect::<Result<Vec<_>>>()?,
-        );
+    let mut hybrid_grid = HashMap::new();
+    for (key, p) in m.req("hybrid")?.as_obj()? {
+        let plan = p.as_arr()?.iter().map(parse_layer).collect::<Result<Vec<_>>>()?;
+        match key.parse::<usize>() {
+            Ok(w) => {
+                hybrid.insert(w, plan);
+            }
+            Err(_) => {
+                // validate the dxhxw key eagerly so a malformed manifest
+                // fails at load, not at plan lookup
+                let grid = SpatialGrid::parse(key)
+                    .map_err(|e| anyhow!("model {name}: hybrid key {key:?}: {e}"))?;
+                hybrid_grid.insert(grid.key(), plan);
+            }
+        }
     }
     Ok(ModelInfo {
         name: name.to_string(),
@@ -218,6 +257,7 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
         plan,
         fused,
         hybrid,
+        hybrid_grid,
         n_targets: m.get("n_targets").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
         n_classes: m.get("n_classes").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
         dropout_keep: m.get("dropout_keep").map(|v| v.as_f64()).transpose()?

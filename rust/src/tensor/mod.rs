@@ -76,76 +76,160 @@ impl Tensor {
         (self.shape[0], self.shape[1], self.shape[2], self.shape[3], self.shape[4])
     }
 
-    /// Copy out a depth slab `[d0, d0+len)` (axis 2) of an NCDHW tensor.
-    pub fn slice_d(&self, d0: usize, len: usize) -> Tensor {
-        let (n, c, d, h, w) = self.dims5();
-        assert!(d0 + len <= d, "slab [{d0}, {}) out of depth {d}", d0 + len);
-        let plane = h * w;
-        let mut out = Tensor::zeros(&[n, c, len, h, w]);
-        for nc in 0..n * c {
-            let src = (nc * d + d0) * plane;
-            let dst = nc * len * plane;
-            out.data[dst..dst + len * plane]
-                .copy_from_slice(&self.data[src..src + len * plane]);
+    // ---- axis-parameterized spatial slabs (axis 2=D, 3=H, 4=W) ------------
+
+    /// (outer, axis_len, inner) strides of spatial `axis` of an NCDHW
+    /// tensor: a slab `[i0, i0+len)` along the axis is `outer` contiguous
+    /// runs of `len * inner` elements, so every slab op below is a strided
+    /// sequence of `copy_from_slice` memcpys regardless of the axis.
+    fn axis_geom(&self, axis: usize) -> (usize, usize, usize) {
+        assert_eq!(self.shape.len(), 5, "expected 5-d NCDHW, got {:?}", self.shape);
+        assert!((2..=4).contains(&axis), "spatial axis {axis} not in 2..=4");
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        (outer, self.shape[axis], inner)
+    }
+
+    /// Copy out the slab `[i0, i0+len)` along spatial `axis`.
+    pub fn slice_ax(&self, axis: usize, i0: usize, len: usize) -> Tensor {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        assert!(i0 + len <= alen,
+                "slab [{i0}, {}) out of axis {axis} extent {alen}", i0 + len);
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        let mut out = Tensor::zeros(&shape);
+        let run = len * inner;
+        for o in 0..outer {
+            let src = (o * alen + i0) * inner;
+            let dst = o * run;
+            out.data[dst..dst + run].copy_from_slice(&self.data[src..src + run]);
         }
         out
     }
 
-    /// Write `slab` into depth offset `d0` of self.
-    pub fn set_slice_d(&mut self, d0: usize, slab: &Tensor) {
-        let (n, c, d, h, w) = self.dims5();
-        let (sn, sc, sd, sh, sw) = slab.dims5();
-        assert!((sn, sc, sh, sw) == (n, c, h, w) && d0 + sd <= d,
-                "slab {:?} @d{} into {:?}", slab.shape, d0, self.shape);
-        let plane = h * w;
-        for nc in 0..n * c {
-            let dst = (nc * d + d0) * plane;
-            let src = nc * sd * plane;
-            self.data[dst..dst + sd * plane]
-                .copy_from_slice(&slab.data[src..src + sd * plane]);
+    /// Write `slab` into offset `i0` along spatial `axis` of self.
+    pub fn set_slice_ax(&mut self, axis: usize, i0: usize, slab: &Tensor) {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        let (souter, slen, sinner) = slab.axis_geom(axis);
+        assert!((souter, sinner) == (outer, inner) && i0 + slen <= alen,
+                "slab {:?} @{i0} (axis {axis}) into {:?}", slab.shape, self.shape);
+        let run = slen * inner;
+        for o in 0..outer {
+            let dst = (o * alen + i0) * inner;
+            let src = o * run;
+            self.data[dst..dst + run].copy_from_slice(&slab.data[src..src + run]);
         }
     }
 
-    /// Accumulate (`+=`) `slab` into depth offset `d0` — the reverse halo
-    /// exchange (gradients of shared planes are summed into the owner).
-    pub fn add_slice_d(&mut self, d0: usize, slab: &Tensor) {
-        let (n, c, d, h, w) = self.dims5();
-        let (_, _, sd, _, _) = slab.dims5();
-        assert!(d0 + sd <= d);
-        let plane = h * w;
-        for nc in 0..n * c {
-            let dst = (nc * d + d0) * plane;
-            let src = nc * sd * plane;
-            for i in 0..sd * plane {
+    /// Accumulate (`+=`) `slab` into offset `i0` along spatial `axis` — the
+    /// reverse halo exchange (gradients of shared faces are summed into the
+    /// owner).
+    pub fn add_slice_ax(&mut self, axis: usize, i0: usize, slab: &Tensor) {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        let (souter, slen, sinner) = slab.axis_geom(axis);
+        assert!((souter, sinner) == (outer, inner) && i0 + slen <= alen,
+                "slab {:?} @{i0} (axis {axis}) into {:?}", slab.shape, self.shape);
+        let run = slen * inner;
+        for o in 0..outer {
+            let dst = (o * alen + i0) * inner;
+            let src = o * run;
+            for i in 0..run {
                 self.data[dst + i] += slab.data[src + i];
             }
         }
     }
 
-    /// New tensor with `lo` zero planes before and `hi` after in depth.
+    /// New tensor with `lo` zero faces before and `hi` after along `axis`.
     ///
-    /// Single-pass construction (zero-fill and copy interleaved per
-    /// (n, c) block) — this runs once per conv layer per sample in the
-    /// halo exchange, and the two-pass zeros+copy version cost ~1.7x as
-    /// much memory traffic (EXPERIMENTS.md §Perf).
-    pub fn pad_d(&self, lo: usize, hi: usize) -> Tensor {
-        let (n, c, d, h, w) = self.dims5();
-        let plane = h * w;
-        let dp = d + lo + hi;
-        let mut data = Vec::with_capacity(n * c * dp * plane);
-        for nc in 0..n * c {
-            data.resize(data.len() + lo * plane, 0.0);
-            let src = nc * d * plane;
-            data.extend_from_slice(&self.data[src..src + d * plane]);
-            data.resize(data.len() + hi * plane, 0.0);
+    /// Single-pass construction (zero-fill and copy interleaved per outer
+    /// block) — this runs once per conv layer per sample per partitioned
+    /// axis in the halo exchange, and the two-pass zeros+copy version cost
+    /// ~1.7x as much memory traffic (EXPERIMENTS.md §Perf).
+    pub fn pad_ax(&self, axis: usize, lo: usize, hi: usize) -> Tensor {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        let mut shape = self.shape.clone();
+        shape[axis] = alen + lo + hi;
+        let mut data = Vec::with_capacity(outer * (alen + lo + hi) * inner);
+        for o in 0..outer {
+            data.resize(data.len() + lo * inner, 0.0);
+            let src = o * alen * inner;
+            data.extend_from_slice(&self.data[src..src + alen * inner]);
+            data.resize(data.len() + hi * inner, 0.0);
         }
-        Tensor { shape: vec![n, c, dp, h, w], data }
+        Tensor { shape, data }
+    }
+
+    /// Drop `lo` faces from the front and `hi` from the back along `axis`.
+    pub fn crop_ax(&self, axis: usize, lo: usize, hi: usize) -> Tensor {
+        let (_, alen, _) = self.axis_geom(axis);
+        self.slice_ax(axis, lo, alen - lo - hi)
+    }
+
+    /// Copy out the (D, H, W) sub-cuboid at `off` of extents `len` — the
+    /// general hyperslab read behind the 3D-grid flatten scatter.
+    pub fn block3(&self, off: [usize; 3], len: [usize; 3]) -> Tensor {
+        let (n, c, d, h, w) = self.dims5();
+        assert!(off[0] + len[0] <= d && off[1] + len[1] <= h && off[2] + len[2] <= w,
+                "block @{off:?}+{len:?} out of {:?}", self.shape);
+        let mut out = Tensor::zeros(&[n, c, len[0], len[1], len[2]]);
+        for nc in 0..n * c {
+            for dd in 0..len[0] {
+                for hh in 0..len[1] {
+                    let src = ((nc * d + off[0] + dd) * h + off[1] + hh) * w + off[2];
+                    let dst = ((nc * len[0] + dd) * len[1] + hh) * len[2];
+                    out.data[dst..dst + len[2]]
+                        .copy_from_slice(&self.data[src..src + len[2]]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Write `block` into the sub-cuboid at `off` (inverse of [`block3`]) —
+    /// the 3D-grid flatten gather's reassembly step.
+    pub fn set_block3(&mut self, off: [usize; 3], block: &Tensor) {
+        let (n, c, d, h, w) = self.dims5();
+        let (bn, bc, bd, bh, bw) = block.dims5();
+        assert!((bn, bc) == (n, c)
+                    && off[0] + bd <= d && off[1] + bh <= h && off[2] + bw <= w,
+                "block {:?} @{off:?} into {:?}", block.shape, self.shape);
+        for nc in 0..n * c {
+            for dd in 0..bd {
+                for hh in 0..bh {
+                    let dst = ((nc * d + off[0] + dd) * h + off[1] + hh) * w + off[2];
+                    let src = ((nc * bd + dd) * bh + hh) * bw;
+                    self.data[dst..dst + bw]
+                        .copy_from_slice(&block.data[src..src + bw]);
+                }
+            }
+        }
+    }
+
+    // ---- depth-slab views (axis 2), the 1D special case -------------------
+
+    /// Copy out a depth slab `[d0, d0+len)` (axis 2) of an NCDHW tensor.
+    pub fn slice_d(&self, d0: usize, len: usize) -> Tensor {
+        self.slice_ax(2, d0, len)
+    }
+
+    /// Write `slab` into depth offset `d0` of self.
+    pub fn set_slice_d(&mut self, d0: usize, slab: &Tensor) {
+        self.set_slice_ax(2, d0, slab)
+    }
+
+    /// Accumulate (`+=`) `slab` into depth offset `d0`.
+    pub fn add_slice_d(&mut self, d0: usize, slab: &Tensor) {
+        self.add_slice_ax(2, d0, slab)
+    }
+
+    /// New tensor with `lo` zero planes before and `hi` after in depth.
+    pub fn pad_d(&self, lo: usize, hi: usize) -> Tensor {
+        self.pad_ax(2, lo, hi)
     }
 
     /// Drop `lo` planes from the front and `hi` from the back in depth.
     pub fn crop_d(&self, lo: usize, hi: usize) -> Tensor {
-        let (_, _, d, _, _) = self.dims5();
-        self.slice_d(lo, d - lo - hi)
+        self.crop_ax(2, lo, hi)
     }
 
     /// Concatenate along depth (axis 2).
@@ -346,6 +430,78 @@ mod tests {
         for d in 0..4 {
             assert!(t.slice_d(d, 1).data().iter().all(|&x| x == expect[d]));
         }
+    }
+
+    #[test]
+    fn axis_slabs_match_manual_index() {
+        // slice along H and W must agree with direct index arithmetic
+        let t = seq(&[2, 2, 3, 4, 5]);
+        let sh = t.slice_ax(3, 1, 2);
+        assert_eq!(sh.shape(), &[2, 2, 3, 2, 5]);
+        // element (n=1, c=0, d=2, h=1(global 2), w=3)
+        let manual = t.data()[(((1 * 2) * 3 + 2) * 4 + 2) * 5 + 3];
+        assert_eq!(sh.data()[(((1 * 2) * 3 + 2) * 2 + 1) * 5 + 3], manual);
+        let sw = t.slice_ax(4, 2, 2);
+        assert_eq!(sw.shape(), &[2, 2, 3, 4, 2]);
+        let manual = t.data()[(((1 * 2 + 1) * 3 + 1) * 4 + 3) * 5 + 2];
+        assert_eq!(sw.data()[(((1 * 2 + 1) * 3 + 1) * 4 + 3) * 2], manual);
+    }
+
+    #[test]
+    fn axis_ops_roundtrip_all_axes() {
+        let t = seq(&[2, 3, 4, 5, 6]);
+        for axis in 2..=4 {
+            let ext = t.shape()[axis];
+            let slab = t.slice_ax(axis, 1, ext - 2);
+            let mut back = Tensor::zeros(t.shape());
+            back.set_slice_ax(axis, 1, &slab);
+            assert_eq!(back.slice_ax(axis, 1, ext - 2), slab, "axis {axis}");
+            // pad/crop inverse with zero faces
+            let p = t.pad_ax(axis, 1, 2);
+            assert_eq!(p.shape()[axis], ext + 3);
+            assert_eq!(p.crop_ax(axis, 1, 2), t, "axis {axis}");
+            assert!(p.slice_ax(axis, 0, 1).data().iter().all(|&x| x == 0.0));
+            assert!(p.slice_ax(axis, ext + 1, 2).data().iter().all(|&x| x == 0.0));
+            // accumulate adds
+            let mut acc = t.clone();
+            acc.add_slice_ax(axis, 1, &slab);
+            let twice = acc.slice_ax(axis, 1, ext - 2);
+            for (a, b) in twice.data().iter().zip(slab.data()) {
+                assert_eq!(*a, 2.0 * b);
+            }
+        }
+    }
+
+    #[test]
+    fn depth_wrappers_equal_axis2() {
+        let t = seq(&[1, 2, 6, 3, 3]);
+        assert_eq!(t.slice_d(2, 3), t.slice_ax(2, 2, 3));
+        assert_eq!(t.pad_d(1, 1), t.pad_ax(2, 1, 1));
+        assert_eq!(t.crop_d(1, 2), t.crop_ax(2, 1, 2));
+    }
+
+    #[test]
+    fn block3_roundtrip_and_values() {
+        let t = seq(&[1, 2, 4, 4, 4]);
+        let b = t.block3([1, 2, 0], [2, 2, 3]);
+        assert_eq!(b.shape(), &[1, 2, 2, 2, 3]);
+        // element (c=1, d=0(global 1), h=1(global 3), w=2)
+        let manual = t.data()[((1 * 4 + 1) * 4 + 3) * 4 + 2];
+        assert_eq!(b.data()[((1 * 2) * 2 + 1) * 3 + 2], manual);
+        let mut back = Tensor::zeros(t.shape());
+        back.set_block3([1, 2, 0], &b);
+        assert_eq!(back.block3([1, 2, 0], [2, 2, 3]), b);
+        // reassembling all 8 octants reproduces the original
+        let mut whole = Tensor::zeros(t.shape());
+        for d0 in [0, 2] {
+            for h0 in [0, 2] {
+                for w0 in [0, 2] {
+                    whole.set_block3([d0, h0, w0],
+                                     &t.block3([d0, h0, w0], [2, 2, 2]));
+                }
+            }
+        }
+        assert_eq!(whole, t);
     }
 
     #[test]

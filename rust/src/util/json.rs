@@ -176,6 +176,21 @@ pub fn obj(kv: Vec<(&str, Json)>) -> Json {
     Json::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Write a CI bench-artifact document — `{"schema": 1, "kind": ...,
+/// "metrics": {...}}`, the one format `ci/bench_gate.py` merges and gates —
+/// so every emitter (benches, examples) shares one schema definition.
+pub fn write_bench_json(path: &str, kind: &str, metrics: &[(String, f64)])
+                        -> std::io::Result<()> {
+    let refs: Vec<(&str, Json)> =
+        metrics.iter().map(|(k, v)| (k.as_str(), Json::Num(*v))).collect();
+    let doc = obj(vec![
+        ("schema", 1usize.into()),
+        ("kind", kind.into()),
+        ("metrics", obj(refs)),
+    ]);
+    std::fs::write(path, doc.to_string())
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {

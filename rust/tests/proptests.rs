@@ -5,7 +5,7 @@ use hydra3d::comm::{world, BucketPlan, Communicator, OverlapAllreduce};
 use hydra3d::data::grf::{synthesize, GrfConfig, Universe};
 use hydra3d::engine::sample_schedule;
 use hydra3d::iosim::store::OwnerMap;
-use hydra3d::partition::{DepthPartition, Grid4, Topology};
+use hydra3d::partition::{axis_range, DepthPartition, Grid4, SpatialGrid, Topology};
 use hydra3d::tensor::Tensor;
 use hydra3d::util::prop;
 use std::thread;
@@ -264,6 +264,70 @@ fn prop_grid4_covers_volume() {
         } else {
             Err(format!("{grid:?} does not cover {vol:?}"))
         }
+    });
+}
+
+/// Remainder-split geometry (Grid4::shard_range / axis_range): shards
+/// tile the volume exactly for arbitrary, non-power-of-two grids.
+#[test]
+fn prop_axis_range_exact_cover() {
+    prop::check("axis-range-cover", 80, |g| {
+        let ways = g.usize_in(1, 9);
+        let extent = ways * g.usize_in(1, 40) + g.usize_in(0, ways - 1);
+        let mut covered = vec![0u8; extent];
+        for pos in 0..ways {
+            let (s, len) = axis_range(extent, ways, pos);
+            if len == 0 {
+                return Err(format!("{extent}/{ways}: empty shard {pos}"));
+            }
+            for c in covered.iter_mut().skip(s).take(len) {
+                *c += 1;
+            }
+        }
+        if covered.iter().all(|&c| c == 1) {
+            Ok(())
+        } else {
+            Err(format!("{extent}/{ways}: not an exact cover"))
+        }
+    });
+}
+
+/// 3D-grid hyperslabs (even splits) tile the halo-padded global volume —
+/// the per-rank view the grid engine feeds its valid convolutions, for
+/// arbitrary grids, channels and halo widths. This is the local algebra
+/// behind `comm::halo::exchange_forward_grid` (the distributed version is
+/// asserted bit-exact in `comm::halo`'s tests).
+#[test]
+fn prop_grid_shard_pad_tiles_global() {
+    prop::check("grid-shard-pad-tiles", 30, |g| {
+        let grid = SpatialGrid::new(g.usize_in(1, 3), g.usize_in(1, 3),
+                                    g.usize_in(1, 3));
+        let halo = g.usize_in(0, 1);
+        let sh = [
+            g.usize_in(1, 3).max(halo),
+            g.usize_in(1, 3).max(halo),
+            g.usize_in(1, 3).max(halo),
+        ];
+        let dims = [grid.d * sh[0], grid.h * sh[1], grid.w * sh[2]];
+        let c = g.usize_in(1, 2);
+        let mut x = Tensor::zeros(&[1, c, dims[0], dims[1], dims[2]]);
+        let data = g.vec_f32(x.numel(), 1.0);
+        x.data_mut().copy_from_slice(&data);
+        let padded = x.pad_ax(2, halo, halo).pad_ax(3, halo, halo)
+            .pad_ax(4, halo, halo);
+        for pos in 0..grid.ways() {
+            let cc = grid.coords(pos);
+            let off = [cc[0] * sh[0], cc[1] * sh[1], cc[2] * sh[2]];
+            // in padded coordinates the same offset points at the shard's
+            // halo-extended block
+            let want = padded.block3(off, [sh[0] + 2 * halo, sh[1] + 2 * halo,
+                                           sh[2] + 2 * halo]);
+            let shard = x.block3(off, sh);
+            if want.block3([halo, halo, halo], sh) != shard {
+                return Err(format!("grid {grid} pos {pos}: interior mismatch"));
+            }
+        }
+        Ok(())
     });
 }
 
