@@ -13,13 +13,20 @@ uploads as a workflow artifact on every PR.
 
 Gate rules, per metric present in BOTH the PR run and the baseline:
 
-* `*_bytes` metrics are deterministic (model-derived halo volumes): any
+* `*_bytes` / `*_count` metrics are deterministic (model-derived halo
+  volumes, store ingest/redistribution volumes, message counts): any
   difference fails — a structural change must update the baseline
   intentionally.
 * other numeric metrics are timings: fail when PR > baseline * (1 + tol).
   Improvements and metrics missing from the baseline are reported only, so
   freshly added benches don't gate until the baseline is refreshed (copy a
   BENCH_PR.json from a quiet machine over BENCH_baseline.json).
+
+With `--strict-bytes`, a deterministic (`*_bytes` / `*_count`) metric
+present on only ONE side also fails — a new counter must land together
+with its baseline value, and a counter a bench stops emitting must be
+removed from the baseline — so byte counters can never silently skip the
+exact-match gate in either direction.
 
 Exit status 1 on any gate failure. Stdlib only.
 """
@@ -49,6 +56,9 @@ def main() -> int:
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="allowed relative timing regression (default 0.15)")
+    ap.add_argument("--strict-bytes", action="store_true",
+                    help="fail on deterministic (*_bytes/*_count) PR metrics "
+                         "that have no baseline entry")
     ap.add_argument("inputs", nargs="+", help="bench JSON dumps to merge")
     args = ap.parse_args()
 
@@ -74,12 +84,19 @@ def main() -> int:
     failures = []
     gated = 0
     for key in sorted(merged):
+        exact = key.endswith("_bytes") or key.endswith("_count")
         if key not in base:
-            print(f"  (new)    {key} = {merged[key]:g}")
+            if exact and args.strict_bytes:
+                failures.append(
+                    f"{key}: deterministic metric has no baseline entry "
+                    f"(add its exact value to {args.baseline})")
+                print(f"  [FAIL] {key} = {merged[key]:g} (no baseline entry)")
+            else:
+                print(f"  (new)    {key} = {merged[key]:g}")
             continue
         pr, bl = merged[key], base[key]
         gated += 1
-        if key.endswith("_bytes"):
+        if exact:
             status = "ok" if pr == bl else "FAIL"
             if pr != bl:
                 failures.append(
@@ -95,7 +112,14 @@ def main() -> int:
                     f"{args.tolerance * 100.0:.0f}% budget)")
         print(f"  [{status:>4}] {key}: pr {pr:g} vs baseline {bl:g}")
     for key in sorted(set(base) - set(merged)):
-        print(f"  (gone)   {key} only in baseline")
+        if (key.endswith("_bytes") or key.endswith("_count")) and args.strict_bytes:
+            failures.append(
+                f"{key}: deterministic baseline metric missing from the PR run "
+                f"(bench stopped emitting it — remove it from {args.baseline} "
+                f"if intentional)")
+            print(f"  [FAIL] {key} only in baseline")
+        else:
+            print(f"  (gone)   {key} only in baseline")
 
     print(f"gated {gated} metrics against {args.baseline}")
     if failures:

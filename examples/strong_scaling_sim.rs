@@ -9,12 +9,19 @@
 //! `--quick` skips the figure series and runs only the grid sweep (the CI
 //! bench-artifact job's configuration). `--json PATH` writes the sweep as
 //! `{"schema": 1, "kind": "sim", "metrics": {...}}` for `ci/bench_gate.py`:
-//! per grid, the modeled step time, the exposed allreduce tail, and the
-//! per-sample halo volume (deterministic — the regression gate's anchor).
+//! per grid, the modeled step time, the exposed allreduce tail, the
+//! per-sample halo volume and the per-rank redistribution volume
+//! (deterministic — the regression gate's anchors).
+//!
+//! `--io {inmem,store,store-async}` selects the modeled ingestion pipeline
+//! (the same matrix the functional `hydra3d train --io` runs): `inmem`
+//! prices the conventional sample-parallel cached reader, `store` the
+//! spatially-parallel store with blocking staging, `store-async` (default)
+//! the paper's overlapped pipeline.
 
 use hydra3d::config::ClusterConfig;
 use hydra3d::coordinator;
-use hydra3d::iosim::pipeline::IoStrategy;
+use hydra3d::iosim::pipeline::{spatial_redist_bytes, IoStrategy};
 use hydra3d::models::cosmoflow_paper;
 use hydra3d::perfmodel::scaling::strong_scaling_grids;
 use hydra3d::util::json::write_bench_json;
@@ -27,6 +34,22 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    // --io maps the functional pipeline modes onto the analytic strategies
+    let io_name = args
+        .iter()
+        .position(|a| a == "--io")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("store-async");
+    let io = match io_name {
+        "inmem" => IoStrategy::SampleParallelCached,
+        "store" => IoStrategy::SpatialParallelBlocking,
+        "store-async" => IoStrategy::SpatialParallel,
+        other => {
+            eprintln!("unknown --io {other:?} (inmem|store|store-async)");
+            std::process::exit(2);
+        }
+    };
 
     let cl = ClusterConfig::default();
     if !quick {
@@ -52,17 +75,31 @@ fn main() {
     let grids: [(usize, usize, usize); 6] =
         [(8, 1, 1), (4, 2, 1), (2, 2, 2), (16, 1, 1), (4, 2, 2), (4, 4, 2)];
     let m = cosmoflow_paper(512, false);
-    let pts = strong_scaling_grids(&m, &cl, n, &grids, IoStrategy::SpatialParallel);
-    println!("3D spatial grid sweep: CosmoFlow 512^3, N = {n}");
-    println!("  grid      GPUs   step[ms]  exposed AR[ms]  halo[MiB/sample]");
+    let sample_bytes = 4.0 * 4.0 * 512f64.powi(3); // f32 x 4ch x 512^3
+    // redistribution only exists for the store-backed (spatial) pipelines
+    let spatial = matches!(io, IoStrategy::SpatialParallel
+                               | IoStrategy::SpatialParallelBlocking);
+    let pts = strong_scaling_grids(&m, &cl, n, &grids, io);
+    println!("3D spatial grid sweep: CosmoFlow 512^3, N = {n}, io = {io_name}");
+    println!("  grid      GPUs   step[ms]  exposed AR[ms]  halo[MiB/sample]  \
+              redist[MiB/rank]");
     for p in &pts {
+        let redist = if spatial {
+            format!("{:>8.2}",
+                    spatial_redist_bytes(sample_bytes, p.ways)
+                        / (1u64 << 20) as f64)
+        } else {
+            format!("{:>8}", "-")
+        };
         println!(
-            "  {:<9} {:>4}   {:>8.1}        {:>8.2}          {:>8.2}{}",
+            "  {:<9} {:>4}   {:>8.1}        {:>8.2}          {:>8.2}      \
+             {}{}",
             format!("{}x{}x{}", p.grid.0, p.grid.1, p.grid.2),
             p.gpus,
             p.model_iter_s * 1e3,
             p.exposed_ar_s * 1e3,
             p.halo_bytes / (1u64 << 20) as f64,
+            redist,
             if p.feasible { "" } else { "  (OOM)" },
         );
     }
@@ -79,6 +116,12 @@ fn main() {
             metrics.push((format!("{key}_step_ms"), p.model_iter_s * 1e3));
             metrics.push((format!("{key}_exposed_ar_ms"), p.exposed_ar_s * 1e3));
             metrics.push((format!("{key}_halo_bytes"), p.halo_bytes));
+            if spatial {
+                // per-rank, per-iteration store staging volume —
+                // deterministic, exact-match-gated like the halo metrics
+                metrics.push((format!("{key}_redist_bytes"),
+                              spatial_redist_bytes(sample_bytes, p.ways)));
+            }
         }
         write_bench_json(&path, "sim", &metrics).expect("write bench json");
         println!("wrote {path}");

@@ -2,12 +2,22 @@
 //! workload (paper §II-C / Fig. 7's network), trained hybrid-parallel with
 //! spatially partitioned labels, evaluated with per-voxel accuracy + Dice.
 //!
-//!     cargo run --release --example unet_segmentation
+//!     cargo run --release --example unet_segmentation [-- --io store-async]
+//!
+//! `--io {inmem,store,store-async}` selects the sample source: the store
+//! modes write the scans to a scratch container (the "PFS") and train
+//! through the §III-B pipeline — per-rank hyperslab ingestion at epoch 0
+//! (the one-hot ground truth spatially distributed exactly like the input),
+//! then per-step shard redistribution, optionally double-buffered behind
+//! compute. The trajectory is bit-identical to the in-memory source.
 
 use anyhow::Result;
+use hydra3d::comm::{CommBackend, GradReduce};
+use hydra3d::data::container::{write_label_dataset, Container};
 use hydra3d::data::ct::ct_dataset;
 use hydra3d::engine::dataparallel::predict_batch;
-use hydra3d::engine::hybrid::{train_hybrid, HybridOpts, InMemorySource};
+use hydra3d::engine::hybrid::{train_hybrid, train_hybrid_store, HybridOpts,
+                              InMemorySource, IoMode};
 use hydra3d::engine::LrSchedule;
 use hydra3d::partition::SpatialGrid;
 use hydra3d::runtime::RuntimeHandle;
@@ -15,6 +25,14 @@ use hydra3d::tensor::Tensor;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let io = args
+        .iter()
+        .position(|a| a == "--io")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| IoMode::parse(s))
+        .transpose()?
+        .unwrap_or(IoMode::InMem);
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("unet_segmentation: artifacts/ not built (run `make \
                   artifacts`); skipping the runtime demo");
@@ -49,7 +67,30 @@ fn main() -> Result<()> {
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 10,
     };
-    let rep = train_hybrid(&rt, &opts, source)?;
+    let rep = match io {
+        IoMode::InMem => train_hybrid(&rt, &opts, source)?,
+        IoMode::Store | IoMode::StoreAsync => {
+            let mut path = std::env::temp_dir();
+            path.push(format!("hydra3d-unet-io-{}", std::process::id()));
+            write_label_dataset(&path, &inputs, &labels)?;
+            let container = Arc::new(Container::open(&path)?);
+            let rep = train_hybrid_store(&rt, &opts, container, io,
+                                         &CommBackend::Channel,
+                                         GradReduce::default());
+            std::fs::remove_file(&path).ok();
+            let rep = rep?;
+            println!(
+                "io [{}]: ingest {:.0} KiB, redist {:.0} KiB, exposed {:.3}s \
+                 / overlapped {:.3}s",
+                io.name(),
+                rep.ingest_bytes as f64 / 1024.0,
+                rep.redist_bytes as f64 / 1024.0,
+                rep.io_exposed,
+                rep.io_overlapped,
+            );
+            rep
+        }
+    };
     println!("loss {:.4} -> {:.4}", rep.records[0].loss, rep.final_loss());
 
     // evaluate: per-voxel accuracy and mean Dice over the test scans

@@ -69,6 +69,9 @@ pub struct Counters {
     /// recorded by `comm::halo` on the sending side — the §III-A
     /// per-dimension halo-region volumes.
     pub halo_axis_bytes: [AtomicU64; 3],
+    /// Data-store redistribution payload bytes (the §III-B group-to-group
+    /// shard staging), recorded by `iosim::store` on the sending side.
+    pub redist_bytes: AtomicU64,
 }
 
 impl Counters {
@@ -92,6 +95,13 @@ impl Counters {
     pub(crate) fn add_halo_bytes(&self, axis: usize, bytes: u64) {
         self.halo_axis_bytes[axis].fetch_add(bytes, Ordering::Relaxed);
     }
+    /// Store-redistribution bytes sent so far over this world.
+    pub fn redist_bytes(&self) -> u64 {
+        self.redist_bytes.load(Ordering::Relaxed)
+    }
+    pub(crate) fn add_redist_bytes(&self, bytes: u64) {
+        self.redist_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
 }
 
 /// Traffic class of a point-to-point message, for per-class accounting
@@ -101,6 +111,8 @@ pub enum MsgTag {
     Generic,
     /// Halo face along spatial axis 0=D, 1=H, 2=W.
     Halo(u8),
+    /// Data-store shard redistribution (§III-B group-to-group staging).
+    Redist,
 }
 
 /// Collective operations, for the [`Communicator::on_collective`] hook and

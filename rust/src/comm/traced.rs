@@ -116,6 +116,18 @@ impl TraceCollector {
         out
     }
 
+    /// Total data-store redistribution payload bytes ([`MsgTag::Redist`])
+    /// — the §III-B staging volume the calibrated I/O model prices.
+    pub fn redist_bytes(&self) -> u64 {
+        self.messages
+            .lock()
+            .expect("trace poisoned")
+            .iter()
+            .filter(|e| e.tag == MsgTag::Redist)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
     /// Forget everything recorded so far (between steps/phases).
     pub fn clear(&self) {
         self.messages.lock().expect("trace poisoned").clear();

@@ -224,6 +224,63 @@ impl Container {
         }
         Ok(Tensor::from_vec(&[1, channels, len, s, s], data))
     }
+
+    /// Native (D, H, W) hyperslab of the input volume: reads exactly the
+    /// block's bytes — one contiguous run per channel for full-H×W depth
+    /// slabs, per (c, d) plane for full-W slabs, per (c, d, h) row
+    /// otherwise. No read-slab-then-crop: this is the access pattern
+    /// parallel HDF5 hyperslab selection gives the paper's grid reader.
+    pub fn read_input_block3(&self, sample: usize, off: [usize; 3],
+                             len: [usize; 3]) -> Result<Tensor> {
+        self.read_block3(self.inputs_off, self.meta.channels, sample, off, len)
+    }
+
+    /// Native (D, H, W) hyperslab of the one-hot label volume.
+    pub fn read_label_block3(&self, sample: usize, off: [usize; 3],
+                             len: [usize; 3]) -> Result<Tensor> {
+        if self.meta.label_channels == 0 {
+            bail!("container has no labels");
+        }
+        self.read_block3(self.labels_off, self.meta.label_channels, sample, off, len)
+    }
+
+    fn read_block3(&self, base: u64, channels: usize, sample: usize,
+                   off: [usize; 3], len: [usize; 3]) -> Result<Tensor> {
+        let s = self.meta.size;
+        for a in 0..3 {
+            if off[a] + len[a] > s || len[a] == 0 {
+                bail!("hyperslab [{}, {}) out of axis {a} extent {s}",
+                      off[a], off[a] + len[a]);
+            }
+        }
+        let plane = s * s;
+        let vol = (s * plane) as u64;
+        let mut data = Vec::with_capacity(channels * len[0] * len[1] * len[2]);
+        for c in 0..channels {
+            let cbase = base + (sample * channels + c) as u64 * vol * 4;
+            if len[1] == s && len[2] == s {
+                // full-plane depth slab: one contiguous read per channel
+                data.extend(self.read_f32s(cbase + (off[0] * plane) as u64 * 4,
+                                           len[0] * plane)?);
+            } else if len[2] == s {
+                // full-W rows: one contiguous read per (c, d) plane
+                for d in 0..len[0] {
+                    let o = ((off[0] + d) * plane + off[1] * s) as u64;
+                    data.extend(self.read_f32s(cbase + o * 4, len[1] * s)?);
+                }
+            } else {
+                // general block: one read per (c, d, h) row
+                for d in 0..len[0] {
+                    for h in 0..len[1] {
+                        let o = ((off[0] + d) * plane + (off[1] + h) * s + off[2])
+                            as u64;
+                        data.extend(self.read_f32s(cbase + o * 4, len[2])?);
+                    }
+                }
+            }
+        }
+        Ok(Tensor::from_vec(&[1, channels, len[0], len[1], len[2]], data))
+    }
 }
 
 /// Direct-from-file shard source: every rank reads only its hyperslab —
@@ -240,6 +297,14 @@ impl SampleSource for Container {
     }
     fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
         self.read_label_shard(sample, d0, len)
+    }
+    fn input_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                    -> Result<Tensor> {
+        self.read_input_block3(sample, off, len)
+    }
+    fn target_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                     -> Result<Tensor> {
+        self.read_label_block3(sample, off, len)
     }
 }
 
@@ -272,6 +337,20 @@ pub fn write_dataset(
         }
     }
     w.finish()
+}
+
+/// Write a segmentation dataset (inputs + one-hot label volumes) into a
+/// container. Spatial-label tasks never read the flat target slot, but the
+/// layout requires one target per sample, so a minimal placeholder is
+/// written — the one idiom every store-backed U-Net caller needs.
+pub fn write_label_dataset(
+    path: &Path,
+    inputs: &[Tensor],
+    labels: &[Tensor],
+) -> Result<()> {
+    let dummy: Vec<Tensor> =
+        (0..inputs.len()).map(|_| Tensor::zeros(&[1, 1])).collect();
+    write_dataset(path, inputs, &dummy, Some(labels))
 }
 
 #[cfg(test)]
@@ -317,6 +396,34 @@ mod tests {
         c.bytes_read.store(0, Ordering::Relaxed);
         let _ = c.read_input_shard(0, 0, 2).unwrap();
         assert_eq!(c.bytes_read.load(Ordering::Relaxed), 2 * 2 * 64 * 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn block3_reads_match_memory_and_touch_exact_bytes() {
+        let mut rng = Pcg::new(3, 1);
+        let inputs: Vec<Tensor> =
+            (0..2).map(|_| rand_tensor(&mut rng, &[1, 2, 8, 8, 8])).collect();
+        let targets: Vec<Tensor> =
+            (0..2).map(|_| rand_tensor(&mut rng, &[1, 4])).collect();
+        let path = tmpfile("block3");
+        write_dataset(&path, &inputs, &targets, None).unwrap();
+        let c = Container::open(&path).unwrap();
+        for (off, len) in [
+            ([0usize, 0, 0], [8usize, 8, 8]), // whole volume
+            ([2, 0, 0], [4, 8, 8]),           // depth slab fast path
+            ([2, 4, 0], [4, 4, 8]),           // full-W rows path
+            ([1, 2, 3], [3, 4, 5]),           // general block
+        ] {
+            c.bytes_read.store(0, Ordering::Relaxed);
+            let got = c.read_input_block3(1, off, len).unwrap();
+            assert_eq!(got, inputs[1].block3(off, len), "off {off:?} len {len:?}");
+            // exactly the block's bytes were read, never a superset
+            assert_eq!(c.bytes_read.load(Ordering::Relaxed),
+                       (2 * len[0] * len[1] * len[2] * 4) as u64,
+                       "off {off:?} len {len:?}");
+        }
+        assert!(c.read_input_block3(0, [6, 0, 0], [4, 8, 8]).is_err());
         std::fs::remove_file(&path).ok();
     }
 

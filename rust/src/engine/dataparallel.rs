@@ -8,8 +8,8 @@
 
 use super::optim::Adam;
 use super::{
-    dropout_mask, init_params, sample_schedule, LrSchedule, PhaseTimes, StepRecord,
-    TrainReport, BN_MOMENTUM,
+    dropout_mask, init_params, sample_schedule_epochs, LrSchedule, PhaseTimes,
+    StepRecord, TrainReport, BN_MOMENTUM,
 };
 use crate::comm::{CommBackend, Communicator, GradReduce, OverlapAllreduce};
 use crate::runtime::{ModelInfo, RuntimeHandle};
@@ -65,8 +65,8 @@ pub fn train_fused_with(
         bail!("per-rank batch {bpg} must be a multiple of the fused batch {}",
               info.fused.batch);
     }
-    let sched = Arc::new(sample_schedule(opts.seed, source.inputs.len(),
-                                         opts.batch_global, opts.steps));
+    let sched = Arc::new(sample_schedule_epochs(opts.seed, source.inputs.len(),
+                                                opts.batch_global, opts.steps));
     let endpoints = backend.build_world(opts.groups)?;
     let grad_eps = reduce.build_grad_world(backend, opts.groups)?;
 
@@ -217,7 +217,7 @@ fn run_group(
             eprintln!("[fused x{} {}] step {:>4} loss {:.6} lr {:.2e}",
                       opts.groups, opts.model, step, loss_global, lr);
         }
-        records.push(StepRecord { step, loss: loss_global, lr });
+        records.push(StepRecord { step, loss: loss_global, lr, io_wait: 0.0 });
     }
 
     let mut comm_bytes = ep.counters().bytes();
@@ -232,6 +232,10 @@ fn run_group(
         phases,
         comm_bytes,
         halo_bytes: [0; 3],
+        io_exposed: 0.0,
+        io_overlapped: 0.0,
+        ingest_bytes: 0,
+        redist_bytes: 0,
     })
 }
 

@@ -30,10 +30,12 @@
 
 use super::optim::Adam;
 use super::{
-    dropout_mask, init_params, sample_schedule, LrSchedule, PhaseTimes, StepRecord,
-    TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
+    dropout_mask, init_params, sample_schedule_epochs, LrSchedule, PhaseTimes,
+    StepRecord, TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
 };
 use crate::comm::{halo, CommBackend, Communicator, GradReduce, OverlapAllreduce};
+use crate::data::container::Container;
+use crate::iosim::store::{AsyncStaging, DataStore, StoreSource};
 use crate::partition::{GridNeighbors, GridTopology, SpatialGrid};
 use crate::runtime::{LayerDesc, ModelInfo, RuntimeHandle};
 use crate::tensor::Tensor;
@@ -124,6 +126,127 @@ pub struct HybridOpts {
     pub log_every: usize,
 }
 
+/// Where a rank's per-step shards come from — the functional realization
+/// of the paper's Fig. 5 I/O matrix (`--io` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// In-memory / direct source: shards sliced per step, no store.
+    InMem,
+    /// §III-B data store with *blocking* per-step redistribution on the
+    /// compute thread (staging cost fully exposed).
+    Store,
+    /// §III-B data store with asynchronous double-buffered staging: a
+    /// per-rank prefetch worker on a second world stages step `s + 1`
+    /// behind step `s`'s compute (only the residual wait is exposed).
+    StoreAsync,
+}
+
+impl IoMode {
+    /// Parse the CLI spelling: `inmem` | `store` | `store-async`.
+    pub fn parse(s: &str) -> Result<IoMode> {
+        match s {
+            "inmem" => Ok(IoMode::InMem),
+            "store" => Ok(IoMode::Store),
+            "store-async" => Ok(IoMode::StoreAsync),
+            other => bail!("unknown --io mode {other:?} (inmem|store|store-async)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoMode::InMem => "inmem",
+            IoMode::Store => "store",
+            IoMode::StoreAsync => "store-async",
+        }
+    }
+}
+
+/// Per-rank I/O driver: serves the step's shards and, for store-backed
+/// modes, runs (or awaits) the per-step redistribution.
+enum RankIo {
+    Shared(Arc<dyn SampleSource>),
+    Store(StoreSource),
+    StoreAsync(AsyncStaging),
+}
+
+/// Ingestion/redistribution totals of one rank's I/O driver.
+#[derive(Clone, Copy, Debug, Default)]
+struct RankIoStats {
+    ingest_bytes: u64,
+    redist_bytes: u64,
+    overlapped_secs: f64,
+    /// Staging-world traffic not visible in the compute world's counters
+    /// (the async prefetch worker's second world).
+    comm_bytes: u64,
+}
+
+impl RankIo {
+    /// Make this step's shards available. Returns the exposed wall-clock
+    /// wait on the compute thread (zero for shared sources).
+    fn begin_step(&mut self, ep: &dyn Communicator, row: &[usize]) -> Result<f64> {
+        match self {
+            RankIo::Shared(_) => Ok(0.0),
+            RankIo::Store(src) => {
+                let t0 = Instant::now();
+                src.begin_step(ep, row)?;
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            RankIo::StoreAsync(a) => a.begin_step(),
+        }
+    }
+
+    fn input_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                    -> Result<Tensor> {
+        match self {
+            RankIo::Shared(s) => s.input_shard3(sample, off, len),
+            RankIo::Store(s) => s.input_shard3(sample, off, len),
+            RankIo::StoreAsync(a) => a.input_shard3(sample, off, len),
+        }
+    }
+
+    fn target_full(&self, sample: usize) -> Result<Tensor> {
+        match self {
+            RankIo::Shared(s) => s.target_full(sample),
+            RankIo::Store(s) => s.target_full(sample),
+            RankIo::StoreAsync(a) => a.target_full(sample),
+        }
+    }
+
+    fn target_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                     -> Result<Tensor> {
+        match self {
+            RankIo::Shared(s) => s.target_shard3(sample, off, len),
+            RankIo::Store(s) => s.target_shard3(sample, off, len),
+            RankIo::StoreAsync(a) => a.target_shard3(sample, off, len),
+        }
+    }
+
+    /// Tear down (joining the staging worker if any) and report totals.
+    fn finish(self) -> Result<RankIoStats> {
+        match self {
+            RankIo::Shared(_) => Ok(RankIoStats::default()),
+            RankIo::Store(s) => Ok(RankIoStats {
+                ingest_bytes: s.store.ingest_bytes,
+                redist_bytes: s.store.redist_bytes,
+                overlapped_secs: 0.0,
+                // blocking staging runs on the compute world: its bytes are
+                // already in the compute counters
+                comm_bytes: 0,
+            }),
+            RankIo::StoreAsync(a) => {
+                let counters = a.counters().clone();
+                let st = a.shutdown()?;
+                Ok(RankIoStats {
+                    ingest_bytes: st.ingest_bytes,
+                    redist_bytes: st.redist_bytes,
+                    overlapped_secs: st.redist_secs,
+                    comm_bytes: counters.bytes(),
+                })
+            }
+        }
+    }
+}
+
 /// Train `opts.model` with `groups x grid.ways()` hybrid parallelism on
 /// the default channel backend with bucketed, backprop-overlapped gradient
 /// allreduce. Returns rank 0's view (parameters are replicated and
@@ -146,6 +269,82 @@ pub fn train_hybrid_with(
     backend: &CommBackend,
     reduce: GradReduce,
 ) -> Result<TrainReport> {
+    let topo = GridTopology::new(opts.groups, opts.grid);
+    let sched = Arc::new(sample_schedule_epochs(opts.seed, source.len(),
+                                                opts.batch_global, opts.steps));
+    let ios: Vec<RankIo> = (0..topo.world_size())
+        .map(|_| RankIo::Shared(source.clone()))
+        .collect();
+    run_world(rt, opts, backend, reduce, sched, ios)
+}
+
+/// Train from a container file through the §III-B store pipeline: each
+/// rank ingests only its grid block of its owned samples at epoch 0, then
+/// every step's shards come from group-to-group redistribution — blocking
+/// ([`IoMode::Store`]) or double-buffered behind compute
+/// ([`IoMode::StoreAsync`]). Bit-identical to [`train_hybrid_with`] over an
+/// in-memory copy of the same dataset: the store moves bytes, never values.
+pub fn train_hybrid_store(
+    rt: &RuntimeHandle,
+    opts: &HybridOpts,
+    container: Arc<Container>,
+    mode: IoMode,
+    backend: &CommBackend,
+    reduce: GradReduce,
+) -> Result<TrainReport> {
+    let topo = GridTopology::new(opts.groups, opts.grid);
+    // validate before ingesting a single byte or spawning a staging worker
+    // (run_world re-checks, but by then workers would already be running)
+    if opts.batch_global % opts.groups != 0 {
+        bail!("batch {} not divisible by {} groups", opts.batch_global, opts.groups);
+    }
+    let n_samples = container.meta.n_samples;
+    let sched = Arc::new(sample_schedule_epochs(opts.seed, n_samples,
+                                                opts.batch_global, opts.steps));
+    // U-Net-style plans end in a spatially partitioned loss: the store must
+    // cache label shards instead of flat targets.
+    let info = rt.manifest().model(&opts.model)?;
+    let (plan, _) = info.hybrid_plan(&opts.grid)?;
+    let label_mode = plan.iter().any(|l| matches!(l, LayerDesc::Xent { .. }));
+    let ios: Vec<RankIo> = match mode {
+        IoMode::InMem => bail!("IoMode::InMem has no store; use train_hybrid_with \
+                                (the container itself is a SampleSource)"),
+        IoMode::Store => (0..topo.world_size())
+            .map(|r| {
+                let store = DataStore::ingest(&container, topo, r, label_mode)?;
+                Ok(RankIo::Store(StoreSource::new(store)))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        IoMode::StoreAsync => {
+            // staging worker world: the analogue of a dedicated comm stream,
+            // so staging traffic never interleaves with halo/BN messages
+            let io_eps = backend.build_world(topo.world_size())?;
+            io_eps
+                .into_iter()
+                .enumerate()
+                .map(|(r, ep)| {
+                    RankIo::StoreAsync(AsyncStaging::start(
+                        container.clone(), topo, r, label_mode, ep,
+                        sched.clone(), opts.groups,
+                    ))
+                })
+                .collect()
+        }
+    };
+    run_world(rt, opts, backend, reduce, sched, ios)
+}
+
+/// Shared multi-rank driver: spawn one thread per rank over the chosen
+/// backend and aggregate the per-rank reports (rank 0's parameters, plus
+/// world-summed I/O byte counters and worst-rank staging times).
+fn run_world(
+    rt: &RuntimeHandle,
+    opts: &HybridOpts,
+    backend: &CommBackend,
+    reduce: GradReduce,
+    sched: Arc<Vec<Vec<usize>>>,
+    ios: Vec<RankIo>,
+) -> Result<TrainReport> {
     let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
     let (plan, pad_axes) = {
         let (p, axes) = info.hybrid_plan(&opts.grid)?;
@@ -155,8 +354,7 @@ pub fn train_hybrid_with(
         bail!("batch {} not divisible by {} groups", opts.batch_global, opts.groups);
     }
     let topo = GridTopology::new(opts.groups, opts.grid);
-    let sched = Arc::new(sample_schedule(opts.seed, source.len(), opts.batch_global,
-                                         opts.steps));
+    assert_eq!(ios.len(), topo.world_size());
     let endpoints = backend.build_world(topo.world_size())?;
     let grad_eps = reduce.build_grad_world(backend, topo.world_size())?;
 
@@ -164,11 +362,11 @@ pub fn train_hybrid_with(
         let handles: Vec<_> = endpoints
             .into_iter()
             .zip(grad_eps)
-            .map(|(ep, grad_ep)| {
+            .zip(ios)
+            .map(|((ep, grad_ep), io)| {
                 let rt = rt.clone();
                 let info = info.clone();
                 let plan = plan.clone();
-                let source = source.clone();
                 let sched = sched.clone();
                 let opts = opts.clone();
                 s.spawn(move || {
@@ -181,7 +379,7 @@ pub fn train_hybrid_with(
                         rt,
                         info,
                         plan,
-                        source,
+                        io,
                         sched,
                         opts,
                     })
@@ -190,14 +388,25 @@ pub fn train_hybrid_with(
             .collect();
         handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
     });
-    let mut out = None;
+    let mut out: Option<TrainReport> = None;
+    let (mut ingest, mut redist) = (0u64, 0u64);
+    let (mut exposed, mut overlapped) = (0.0f64, 0.0f64);
     for (r, rep) in reports.into_iter().enumerate() {
         let rep = rep.with_context(|| format!("rank {r}"))?;
+        ingest += rep.ingest_bytes;
+        redist += rep.redist_bytes;
+        exposed = exposed.max(rep.io_exposed);
+        overlapped = overlapped.max(rep.io_overlapped);
         if r == 0 {
             out = Some(rep);
         }
     }
-    Ok(out.unwrap())
+    let mut out = out.unwrap();
+    out.ingest_bytes = ingest;
+    out.redist_bytes = redist;
+    out.io_exposed = exposed;
+    out.io_overlapped = overlapped;
+    Ok(out)
 }
 
 struct RankCtx {
@@ -211,7 +420,7 @@ struct RankCtx {
     rt: RuntimeHandle,
     info: Arc<ModelInfo>,
     plan: Arc<Vec<LayerDesc>>,
-    source: Arc<dyn SampleSource>,
+    io: RankIo,
     sched: Arc<Vec<Vec<usize>>>,
     opts: HybridOpts,
 }
@@ -295,11 +504,19 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
     let mut records = Vec::new();
     let mut phases = PhaseTimes::default();
 
+    let mut io_exposed_total = 0.0f64;
     for step in 0..cx.opts.steps {
         let lr = cx.opts.schedule.at(step);
         let mut grads: Vec<Tensor> =
             cx.info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
         let mut loss_local = 0.0f32;
+
+        // ---- staging: make this step's shards available ------------------
+        // (collective for the blocking store; a double-buffer swap for the
+        // async store; free for shared sources)
+        let io_wait = cx.io.begin_step(cx.ep.as_ref(), &cx.sched[step])?;
+        phases.io += io_wait;
+        io_exposed_total += io_wait;
 
         for j in 0..bpg {
             let slot = group * bpg + j;
@@ -308,7 +525,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
 
             // ---- I/O: fetch only this rank's hyperslab -------------------
             let t0 = Instant::now();
-            let x_shard = cx.source.input_shard3(sample, shard_off, shard_len)?;
+            let x_shard = cx.io.input_shard3(sample, shard_off, shard_len)?;
             phases.io += t0.elapsed().as_secs_f64();
 
             // ---- forward -------------------------------------------------
@@ -466,7 +683,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                     }
                     LayerDesc::Mse { n, fwd_bwd } => {
                         if let Some(pred) = h.take() {
-                            let tgt = cx.source.target_full(sample)?;
+                            let tgt = cx.io.target_full(sample)?;
                             let t = Instant::now();
                             let mut out = cx.rt.call(fwd_bwd.as_ref().unwrap(),
                                                      vec![pred, tgt])?;
@@ -486,7 +703,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let logits = h.take().unwrap();
                         let t0 = Instant::now();
                         let tgt =
-                            cx.source.target_shard3(sample, shard_off, shard_len)?;
+                            cx.io.target_shard3(sample, shard_off, shard_len)?;
                         phases.io += t0.elapsed().as_secs_f64();
                         let t = Instant::now();
                         let mut out = cx.rt.call(fwd_bwd.as_ref().unwrap(),
@@ -693,7 +910,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
             eprintln!("[hybrid {}x{} {}] step {:>4} loss {:.6} lr {:.2e}",
                       cx.opts.groups, grid, cx.opts.model, step, lbuf[0], lr);
         }
-        records.push(StepRecord { step, loss: lbuf[0], lr });
+        records.push(StepRecord { step, loss: lbuf[0], lr, io_wait });
     }
 
     let mut comm_bytes = cx.ep.counters().bytes();
@@ -702,6 +919,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
         comm_bytes += ov.counters().bytes();
         ov.shutdown()?;
     }
+    let iostats = cx.io.finish()?;
+    comm_bytes += iostats.comm_bytes;
     Ok(TrainReport {
         records,
         params,
@@ -709,6 +928,10 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
         phases,
         comm_bytes,
         halo_bytes,
+        io_exposed: io_exposed_total,
+        io_overlapped: iostats.overlapped_secs,
+        ingest_bytes: iostats.ingest_bytes,
+        redist_bytes: iostats.redist_bytes,
     })
 }
 

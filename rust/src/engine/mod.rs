@@ -152,12 +152,54 @@ pub fn sample_schedule(seed: u64, n_samples: usize, batch: usize, steps: usize)
     out
 }
 
+/// Sample order of one epoch: a permutation of `0..n_samples` that depends
+/// only on `(seed, epoch)` — any pipeline component (either engine, the
+/// data store, the async staging worker) can reproduce an epoch's order
+/// independently, which is how the paper's store computes a global shuffle
+/// before each epoch (§III-B) without a coordination broadcast.
+pub fn epoch_order(seed: u64, epoch: u64, n_samples: usize) -> Vec<usize> {
+    let mut rng = Pcg::new(seed ^ 0x5C0Fu64, 0xE90C ^ epoch);
+    let mut order: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+/// [`sample_schedule`] with per-epoch seeding ([`epoch_order`]): both
+/// engines and the store-backed I/O pipeline consume this variant, so the
+/// compute schedule and the store's redistribution schedule are one object.
+pub fn sample_schedule_epochs(seed: u64, n_samples: usize, batch: usize,
+                              steps: usize) -> Vec<Vec<usize>> {
+    let mut epoch = 0u64;
+    let mut order = epoch_order(seed, epoch, n_samples);
+    let mut cursor = 0;
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut b = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if cursor == n_samples {
+                epoch += 1;
+                order = epoch_order(seed, epoch, n_samples);
+                cursor = 0;
+            }
+            b.push(order[cursor]);
+            cursor += 1;
+        }
+        out.push(b);
+    }
+    out
+}
+
 /// Per-step training record.
 #[derive(Clone, Copy, Debug)]
 pub struct StepRecord {
     pub step: usize,
     pub loss: f32,
     pub lr: f64,
+    /// Exposed (non-overlapped) I/O staging wait this step, seconds: zero
+    /// for in-memory sources, the blocking redistribution time for the
+    /// synchronous store, the residual double-buffer wait for async
+    /// staging (the paper's "I/O waits" stream in Fig. 6).
+    pub io_wait: f64,
 }
 
 /// Wall-clock breakdown of one engine run (the functional analogue of the
@@ -207,6 +249,19 @@ pub struct TrainReport {
     /// Halo-face bytes sent per spatial axis (D, H, W) — zero for the
     /// fused engine, the §III-A per-dimension halo volume for hybrid runs.
     pub halo_bytes: [u64; 3],
+    /// Exposed (compute-thread wall-clock) I/O staging seconds, worst rank
+    /// — what the step time actually pays for data movement.
+    pub io_exposed: f64,
+    /// Staging seconds hidden behind compute by the async prefetch worker,
+    /// worst rank (not wall-clock additive) — Fig. 5's overlapped I/O.
+    pub io_overlapped: f64,
+    /// Epoch-0 container ("PFS") ingestion bytes, summed over all ranks:
+    /// exactly one copy of the dataset plus one target read per shard
+    /// position for store-backed runs, zero for in-memory sources.
+    pub ingest_bytes: u64,
+    /// Store redistribution bytes, summed over all ranks — the §III-B
+    /// group-to-group staging volume (deterministic given seed/topology).
+    pub redist_bytes: u64,
 }
 
 impl TrainReport {
@@ -254,5 +309,29 @@ mod tests {
         }
         // 4 full epochs: every sample seen exactly 4 times
         assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn epoch_schedule_is_fair_and_independently_seeded() {
+        let sched = sample_schedule_epochs(3, 10, 4, 10); // 4 epochs of 10
+        let mut counts = [0usize; 10];
+        for b in &sched {
+            assert_eq!(b.len(), 4);
+            for &i in b {
+                counts[i] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+        // the flattened schedule is exactly the concatenated epoch orders,
+        // so a detached component can reproduce any epoch on its own
+        let flat: Vec<usize> = sched.iter().flatten().copied().collect();
+        for e in 0..4u64 {
+            assert_eq!(&flat[(e as usize) * 10..(e as usize + 1) * 10],
+                       &epoch_order(3, e, 10)[..], "epoch {e}");
+        }
+        // epochs genuinely reshuffle
+        assert_ne!(epoch_order(3, 0, 10), epoch_order(3, 1, 10));
+        // and the order depends only on (seed, epoch)
+        assert_eq!(epoch_order(3, 2, 10), epoch_order(3, 2, 10));
     }
 }

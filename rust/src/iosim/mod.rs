@@ -1,18 +1,26 @@
-//! The I/O pipeline: distributed in-memory data store (functional) and the
-//! PFS performance model (paper §III-B, Figs. 3 & 5).
+//! The I/O pipeline: the grid-aware distributed data store that feeds the
+//! hybrid engine, and the PFS performance model (paper §III-B, Figs. 3 & 5).
 //!
-//! * [`store`] — the functional data store: epoch-0 hyperslab ingestion
-//!   where each rank reads only its slab of its owned samples, a global
-//!   owner map, and per-step redistribution over the communicator.
+//! * [`store`] — the functional data store, keyed by the engine's D×H×W
+//!   process grid: epoch-0 hyperslab ingestion where each rank reads only
+//!   its (D, H, W) block of its owned samples (native container block
+//!   reads), a global owner map, per-step group-to-group redistribution
+//!   over the communicator (tagged `MsgTag::Redist`), and two training
+//!   front-ends — [`store::StoreSource`] (blocking staging) and
+//!   [`store::AsyncStaging`] (a prefetch worker that double-buffers the
+//!   next step's exchange behind compute). `engine::hybrid` consumes these
+//!   through `train_hybrid_store`, so the §III-B pipeline is part of the
+//!   functional training path, not just a cost model.
 //! * [`pfs`] — the parallel-file-system bandwidth model (240 GB/s aggregate
 //!   on Lassen) used by the Fig. 5 ablation.
 //! * [`pipeline`] — iteration-time composition: sample-parallel I/O
 //!   (baseline, does not strong-scale) vs spatially-parallel I/O with
-//!   caching and overlap (the paper's approach).
+//!   caching and overlap (the paper's approach), plus calibration of the
+//!   spatial-parallel term against traced redistribution bytes.
 
 pub mod pfs;
 pub mod pipeline;
 pub mod store;
 
 pub use pfs::Pfs;
-pub use store::DataStore;
+pub use store::{AsyncStaging, DataStore, StoreSource};

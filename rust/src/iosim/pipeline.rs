@@ -26,7 +26,12 @@ use crate::config::ClusterConfig;
 pub enum IoStrategy {
     SampleParallelPfs,
     SampleParallelCached,
+    /// The paper's pipeline: per-rank hyperslab staging, prefetched behind
+    /// compute (the functional `--io store-async` path).
     SpatialParallel,
+    /// Spatially-parallel staging *without* the prefetch overlap — the
+    /// functional `--io store` path; same volume, fully exposed.
+    SpatialParallelBlocking,
 }
 
 /// Per-iteration I/O time for a mini-batch of `n` samples of `sample_bytes`
@@ -54,13 +59,34 @@ pub fn io_time_per_iter(
             let scatter = scatter_time(sample_bytes, ways, link_bw);
             read + scatter
         }
-        IoStrategy::SpatialParallel => {
+        IoStrategy::SpatialParallel | IoStrategy::SpatialParallelBlocking => {
             // every rank moves only its hyperslab, group-to-group, all
-            // pairs concurrently; the copy is fully overlapped with the
-            // previous iteration's compute, but we report its raw cost.
+            // pairs concurrently; in the async variant the copy is fully
+            // overlapped with the previous iteration's compute, but we
+            // report its raw cost either way.
             (sample_bytes / ways as f64) / link_bw
         }
     }
+}
+
+/// Per-rank, per-iteration redistribution volume of the spatially-parallel
+/// store (bytes): the deterministic quantity the functional store's
+/// `MsgTag::Redist` counters measure, so the model and a traced run gate
+/// against the same number.
+pub fn spatial_redist_bytes(sample_bytes: f64, ways: usize) -> f64 {
+    sample_bytes / ways.max(1) as f64
+}
+
+/// Calibrate the spatially-parallel I/O term against a *traced* run: price
+/// the measured per-rank, per-iteration redistribution bytes (the sum of
+/// `MsgTag::Redist` payloads divided by ranks × steps) with the cluster
+/// link, instead of the analytic `sample_bytes / ways` estimate. When the
+/// trace matches the model's volume the two agree exactly — the same
+/// measured-vs-closed-form validation `perfmodel::trace` performs for
+/// collectives.
+pub fn io_time_from_redist_trace(redist_bytes_per_rank_iter: f64,
+                                 cluster: &ClusterConfig) -> f64 {
+    redist_bytes_per_rank_iter / (cluster.ib_gbps * 1e9)
 }
 
 fn scatter_time(sample_bytes: f64, ways: usize, link_bw: f64) -> f64 {
@@ -73,7 +99,9 @@ fn scatter_time(sample_bytes: f64, ways: usize, link_bw: f64) -> f64 {
 }
 
 /// Whether the strategy's I/O overlaps with compute (the paper's pipeline
-/// prefetches the next mini-batch during the current iteration).
+/// prefetches the next mini-batch during the current iteration; the
+/// blocking store variant moves the same bytes but stays on the critical
+/// path).
 pub fn overlaps(strategy: IoStrategy) -> bool {
     matches!(strategy, IoStrategy::SpatialParallel)
 }
@@ -129,5 +157,26 @@ mod tests {
         assert_eq!(iteration_time(0.2, 0.05, false), 0.25);
         assert!(overlaps(IoStrategy::SpatialParallel));
         assert!(!overlaps(IoStrategy::SampleParallelCached));
+        assert!(!overlaps(IoStrategy::SpatialParallelBlocking));
+    }
+
+    /// The blocking store variant moves the same volume as the overlapped
+    /// one, and the trace-calibrated price agrees with the analytic model
+    /// when the traced volume matches `sample_bytes / ways`.
+    #[test]
+    fn calibration_matches_analytic_model() {
+        let (pfs, cl) = setup();
+        let gib = (1u64 << 30) as f64;
+        for ways in [8usize, 32] {
+            let a = io_time_per_iter(IoStrategy::SpatialParallel, &pfs, &cl, gib,
+                                     16, ways);
+            let b = io_time_per_iter(IoStrategy::SpatialParallelBlocking, &pfs,
+                                     &cl, gib, 16, ways);
+            assert_eq!(a, b, "same volume at {ways} ways");
+            let cal = io_time_from_redist_trace(spatial_redist_bytes(gib, ways),
+                                                &cl);
+            assert!((cal - a).abs() < 1e-12 * a.max(1.0),
+                    "calibrated {cal} vs analytic {a}");
+        }
     }
 }

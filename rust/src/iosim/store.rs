@@ -1,31 +1,52 @@
-//! The distributed in-memory data store (paper §III-B, Fig. 3).
+//! The distributed in-memory data store (paper §III-B, Fig. 3), keyed by
+//! the engine's D×H×W process grid.
 //!
-//! Epoch 0: every rank ingests *only its own hyperslabs* of the samples it
-//! owns (spatially-parallel ingestion — each rank reads the depth range
-//! matching its shard position, for the subset of samples assigned to it
-//! by the owner map). The aggregate of all ranks' caches is the full
-//! dataset, so the PFS is never touched again.
+//! Epoch 0: every rank ingests *only its own (D, H, W) hyperslabs* of the
+//! samples its group owns (spatially-parallel ingestion — each rank reads
+//! the grid block matching its shard coordinates via the container's
+//! native `read_input_block3` path, never a slab-then-crop). The aggregate
+//! of all ranks' caches is the full dataset, so the PFS is never touched
+//! again.
 //!
 //! Epoch 1+: before each step, the store redistributes cached hyperslabs so
 //! the ranks about to train on a sample hold its shards — peer-to-peer
-//! exchanges over the (fast) interconnect instead of PFS reads.
+//! exchanges over the (fast) interconnect instead of PFS reads, tagged
+//! [`MsgTag::Redist`] so the traced backend and the calibrated §III-C I/O
+//! model can audit the staging volume.
 //!
-//! The owner map distributes samples round-robin over *positions within
-//! groups*, so a rank only ever caches hyperslabs of its own depth range:
-//! redistribution is a pure group-to-group transfer, never a re-slicing —
-//! the "aligns the spatially parallel I/O, training, and data caching"
-//! property of §III-B.
+//! The owner map distributes samples round-robin over groups; because every
+//! member of a group holds the shard at *its own grid position*, a rank
+//! only ever caches hyperslabs of its own (D, H, W) block, and
+//! redistribution is a pure position-to-position, group-to-group transfer —
+//! never a re-slicing. Shard geometry is [`SpatialGrid::shard_of`]
+//! (floor-even, last shard takes the remainder), identical to the engine's
+//! even split whenever extents divide — the "aligns the spatially parallel
+//! I/O, training, and data caching" property of §III-B.
+//!
+//! Two functional front-ends wire the store into the training loop:
+//!
+//! * [`StoreSource`] — a [`SampleSource`] whose per-step shards come from a
+//!   blocking [`DataStore::redistribute`] at the top of each step.
+//! * [`AsyncStaging`] — a per-rank prefetch worker (the same worker-thread
+//!   pattern as `comm::bucket`'s gradient worker, on a second world) that
+//!   double-buffers the *next* step's shard exchange behind the current
+//!   step's compute, leaving only the residual wait exposed (Fig. 5's
+//!   overlapped I/O).
 
-use crate::comm::Communicator;
+use crate::comm::{Communicator, Counters, MsgTag};
 use crate::data::container::Container;
 use crate::engine::hybrid::SampleSource;
-use crate::partition::{DepthPartition, Topology};
+use crate::partition::GridTopology;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Global owner map: which *group* caches each sample (every member of the
-/// group holds its own depth shard of it).
+/// group holds the shard at its own grid position).
 #[derive(Clone, Debug)]
 pub struct OwnerMap {
     pub n_samples: usize,
@@ -43,55 +64,91 @@ impl OwnerMap {
     }
 }
 
+/// Split one schedule row (`batch_global` sample slots, group-major) into
+/// the per-group consumption lists [`DataStore::redistribute`] expects.
+pub fn assignments_of(row: &[usize], groups: usize) -> Vec<Vec<usize>> {
+    assert!(groups > 0 && row.len() % groups == 0,
+            "schedule row of {} slots not divisible by {groups} groups",
+            row.len());
+    let bpg = row.len() / groups;
+    (0..groups).map(|g| row[g * bpg..(g + 1) * bpg].to_vec()).collect()
+}
+
 /// One rank's shard cache + redistribution logic.
 pub struct DataStore {
-    pub topo: Topology,
+    pub topo: GridTopology,
     pub rank: usize,
     pub owner: OwnerMap,
-    pub part: DepthPartition,
-    /// sample -> cached (input shard, target) — this rank's depth range only
+    /// (D, H, W) offset of this rank's hyperslab in the global volume.
+    pub shard_off: [usize; 3],
+    /// (D, H, W) extents of this rank's hyperslab.
+    pub shard_len: [usize; 3],
+    /// sample -> cached (input shard, target) — this rank's block only
     cache: HashMap<usize, (Tensor, Tensor)>,
     /// per-step staging of shards fetched from owners
     staged: HashMap<usize, (Tensor, Tensor)>,
+    /// shard tensor shapes (known even when this rank owns no samples)
+    x_shape: Vec<usize>,
+    t_shape: Vec<usize>,
     pub ingest_bytes: u64,
     pub redist_bytes: u64,
     label_mode: bool,
 }
 
 impl DataStore {
-    /// Epoch-0 ingestion: read this rank's hyperslab of every owned sample.
-    /// `label_mode` caches spatial label shards (U-Net) instead of flat
-    /// targets (CosmoFlow).
+    /// Epoch-0 ingestion: read this rank's (D, H, W) hyperslab of every
+    /// owned sample through the container's native block path. `label_mode`
+    /// caches spatial label shards (U-Net) instead of flat targets
+    /// (CosmoFlow).
     pub fn ingest(
         container: &Container,
-        topo: Topology,
+        topo: GridTopology,
         rank: usize,
         label_mode: bool,
     ) -> Result<DataStore> {
         let (group, pos) = topo.coords_of(rank);
-        let part = DepthPartition::new_even(container.meta.size, topo.d_ways)?;
-        let owner = OwnerMap { n_samples: container.meta.n_samples, groups: topo.groups };
-        let (d0, dlen) = (part.shard_start(pos), part.shard_len());
+        let (shard_off, shard_len) = topo.grid.shard_of(container.meta.size, pos);
+        let owner =
+            OwnerMap { n_samples: container.meta.n_samples, groups: topo.groups };
+        let shard_vox = (shard_len[0] * shard_len[1] * shard_len[2]) as u64;
+        let x_shape =
+            vec![1, container.meta.channels, shard_len[0], shard_len[1], shard_len[2]];
+        let (t_shape, t_bytes) = if label_mode {
+            if container.meta.label_channels == 0 {
+                bail!("label-mode store on a container without labels");
+            }
+            (vec![1, container.meta.label_channels, shard_len[0], shard_len[1],
+                  shard_len[2]],
+             4 * container.meta.label_channels as u64 * shard_vox)
+        } else {
+            (vec![1, container.meta.target_len], 4 * container.meta.target_len as u64)
+        };
         let mut cache = HashMap::new();
-        let before = container.bytes_read.load(std::sync::atomic::Ordering::Relaxed);
+        // Count ingestion from the shard geometry, not the (shared)
+        // container byte counter: ranks ingest concurrently under the
+        // async staging path, so counter deltas would mix ranks' reads.
+        let mut ingest_bytes = 0u64;
         for s in owner.samples_of(group) {
-            let x = container.read_input_shard(s, d0, dlen)?;
+            let x = container.read_input_block3(s, shard_off, shard_len)?;
             let t = if label_mode {
-                container.read_label_shard(s, d0, dlen)?
+                container.read_label_block3(s, shard_off, shard_len)?
             } else {
                 container.read_target(s)?
             };
+            ingest_bytes += 4 * container.meta.channels as u64 * shard_vox + t_bytes;
             cache.insert(s, (x, t));
         }
-        let after = container.bytes_read.load(std::sync::atomic::Ordering::Relaxed);
         Ok(DataStore {
             topo,
             rank,
             owner,
-            part,
+            shard_off,
+            shard_len,
             cache,
             staged: HashMap::new(),
-            ingest_bytes: after - before,
+            x_shape,
+            t_shape,
+            ingest_bytes,
             redist_bytes: 0,
             label_mode,
         })
@@ -109,11 +166,13 @@ impl DataStore {
 
     /// Redistribute shards for one step: `assignments[g]` is the list of
     /// samples group `g` will train on. Each rank exchanges with the rank
-    /// at the *same shard position* in the owning/consuming group, so every
-    /// transfer stays within one depth range. Collective: every rank calls
-    /// this with identical `assignments`.
+    /// at the *same grid position* in the owning/consuming group, so every
+    /// transfer stays within one (D, H, W) block. Collective: every rank
+    /// calls this with identical `assignments`.
     pub fn redistribute(&mut self, ep: &dyn Communicator, assignments: &[Vec<usize>])
                         -> Result<()> {
+        assert_eq!(assignments.len(), self.topo.groups,
+                   "assignments per group mismatch");
         let (my_group, pos) = self.topo.coords_of(self.rank);
         self.staged.clear();
         // send phase: for every sample I own that another group needs
@@ -126,9 +185,11 @@ impl DataStore {
                         .ok_or_else(|| anyhow!("rank {}: sample {s} not cached",
                                                self.rank))?;
                     let dst = self.topo.rank_of(g, pos);
-                    ep.send(dst, x.data().to_vec());
-                    ep.send(dst, t.data().to_vec());
-                    self.redist_bytes += 4 * (x.numel() + t.numel()) as u64;
+                    let bytes = 4 * (x.numel() + t.numel()) as u64;
+                    ep.counters().add_redist_bytes(bytes);
+                    ep.send_tagged(dst, x.data().to_vec(), MsgTag::Redist);
+                    ep.send_tagged(dst, t.data().to_vec(), MsgTag::Redist);
+                    self.redist_bytes += bytes;
                 }
             }
         }
@@ -136,36 +197,37 @@ impl DataStore {
         for &s in &assignments[my_group] {
             let og = self.owner.owner_group(s);
             if og == my_group {
-                let (x, t) = self.cache.get(&s).unwrap();
+                let (x, t) = self
+                    .cache
+                    .get(&s)
+                    .ok_or_else(|| anyhow!("rank {}: sample {s} not cached",
+                                           self.rank))?;
                 self.staged.insert(s, (x.clone(), t.clone()));
             } else {
                 let src = self.topo.rank_of(og, pos);
                 let xbuf = ep.recv(src)?;
                 let tbuf = ep.recv(src)?;
-                let (xs, ts) = self.shard_shapes()?;
                 self.staged.insert(
                     s,
-                    (Tensor::from_vec(&xs, xbuf), Tensor::from_vec(&ts, tbuf)),
+                    (Tensor::from_vec(&self.x_shape, xbuf),
+                     Tensor::from_vec(&self.t_shape, tbuf)),
                 );
             }
         }
         Ok(())
     }
 
-    fn shard_shapes(&self) -> Result<(Vec<usize>, Vec<usize>)> {
-        let (x, t) = self
-            .cache
-            .values()
-            .next()
-            .ok_or_else(|| anyhow!("empty cache on rank {}", self.rank))?;
-        Ok((x.shape().to_vec(), t.shape().to_vec()))
-    }
-
-    /// Fetch a staged shard (after [`redistribute`]).
+    /// Fetch a staged shard (after [`DataStore::redistribute`]).
     pub fn staged_shard(&self, sample: usize) -> Result<&(Tensor, Tensor)> {
         self.staged
             .get(&sample)
             .ok_or_else(|| anyhow!("sample {sample} not staged on rank {}", self.rank))
+    }
+
+    /// Move the staged map out (the async worker ships it to the compute
+    /// thread and immediately starts staging the next step).
+    pub fn take_staged(&mut self) -> HashMap<usize, (Tensor, Tensor)> {
+        std::mem::take(&mut self.staged)
     }
 
     pub fn label_mode(&self) -> bool {
@@ -173,34 +235,268 @@ impl DataStore {
     }
 }
 
-/// A [`SampleSource`] over a store that has been fully pre-staged for the
-/// samples a rank will consume (used by the store-backed training path).
-pub struct StagedSource {
-    pub shards: HashMap<(usize, usize, usize), Tensor>, // (sample, d0, len)
-    pub targets: HashMap<usize, Tensor>,
-    pub n: usize,
+/// Serve one staged (input, target) entry through the [`SampleSource`]
+/// geometry checks shared by [`StoreSource`] and [`AsyncStaging`].
+fn serve_input(
+    staged: &HashMap<usize, (Tensor, Tensor)>,
+    sample: usize,
+    off: [usize; 3],
+    len: [usize; 3],
+    shard_off: [usize; 3],
+    shard_len: [usize; 3],
+) -> Result<Tensor> {
+    if off != shard_off || len != shard_len {
+        bail!("store shard is {shard_off:?}+{shard_len:?}, engine asked for \
+               {off:?}+{len:?} (grid mismatch)");
+    }
+    staged
+        .get(&sample)
+        .map(|(x, _)| x.clone())
+        .ok_or_else(|| anyhow!("sample {sample} not staged for this step"))
 }
 
-impl SampleSource for StagedSource {
+fn serve_target(
+    staged: &HashMap<usize, (Tensor, Tensor)>,
+    sample: usize,
+) -> Result<Tensor> {
+    staged
+        .get(&sample)
+        .map(|(_, t)| t.clone())
+        .ok_or_else(|| anyhow!("target {sample} not staged for this step"))
+}
+
+/// A [`SampleSource`] over the data store with *blocking* per-step
+/// redistribution: [`StoreSource::begin_step`] runs the group-to-group
+/// exchange on the calling (compute) thread, so the staging cost is fully
+/// exposed — the overlap ablation's baseline.
+pub struct StoreSource {
+    pub store: DataStore,
+}
+
+impl StoreSource {
+    pub fn new(store: DataStore) -> StoreSource {
+        StoreSource { store }
+    }
+
+    /// Stage this step's shards (collective over all ranks; `row` is the
+    /// step's schedule row, identical everywhere).
+    pub fn begin_step(&mut self, ep: &dyn Communicator, row: &[usize]) -> Result<()> {
+        let assigns = assignments_of(row, self.store.topo.groups);
+        self.store.redistribute(ep, &assigns)
+    }
+}
+
+impl SampleSource for StoreSource {
     fn len(&self) -> usize {
-        self.n
+        self.store.owner.n_samples
     }
+
+    /// Depth-slab view — valid only for depth-only grids (the store shard
+    /// is then a full H×W slab).
     fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
-        self.shards
-            .get(&(sample, d0, len))
-            .cloned()
-            .ok_or_else(|| anyhow!("shard ({sample},{d0},{len}) not staged"))
+        if !self.store.topo.grid.is_depth_only()
+            || d0 != self.store.shard_off[0]
+            || len != self.store.shard_len[0]
+        {
+            bail!("store shard is D{}+{} of a {} grid, engine asked for depth \
+                   slab [{d0}, {})",
+                  self.store.shard_off[0], self.store.shard_len[0],
+                  self.store.topo.grid, d0 + len);
+        }
+        serve_input(&self.store.staged, sample, self.store.shard_off,
+                    self.store.shard_len, self.store.shard_off,
+                    self.store.shard_len)
     }
+
     fn target_full(&self, sample: usize) -> Result<Tensor> {
-        self.targets
-            .get(&sample)
-            .cloned()
-            .ok_or_else(|| anyhow!("target {sample} not staged"))
+        if self.store.label_mode {
+            bail!("label-mode store has no flat targets");
+        }
+        serve_target(&self.store.staged, sample)
     }
+
     fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
-        let t = self.target_full(sample)?;
-        Ok(t.slice_d(d0, len))
+        self.target_shard3(sample, [d0, 0, 0],
+                           [len, self.store.shard_len[1], self.store.shard_len[2]])
     }
+
+    fn input_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                    -> Result<Tensor> {
+        serve_input(&self.store.staged, sample, off, len, self.store.shard_off,
+                    self.store.shard_len)
+    }
+
+    fn target_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                     -> Result<Tensor> {
+        if !self.store.label_mode {
+            bail!("target_shard3 on a store without spatial labels");
+        }
+        if off != self.store.shard_off || len != self.store.shard_len {
+            bail!("label shard is {:?}+{:?}, engine asked for {off:?}+{len:?}",
+                  self.store.shard_off, self.store.shard_len);
+        }
+        serve_target(&self.store.staged, sample)
+    }
+}
+
+/// Ingestion + redistribution totals of one staging worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoWorkerStats {
+    pub ingest_bytes: u64,
+    pub redist_bytes: u64,
+    /// Worker-side seconds spent inside redistributions (hidden behind
+    /// compute when the double buffer keeps up; not wall-clock additive).
+    pub redist_secs: f64,
+}
+
+/// Asynchronous double-buffered staging: a per-rank worker thread owns the
+/// store and a *second-world* communicator endpoint (the same isolation
+/// pattern as `comm::bucket`'s gradient worker, so staging traffic never
+/// interleaves with compute-world halo/BN messages). The worker ingests at
+/// start-up, then stages step `s + 1`'s shard exchange while the compute
+/// thread trains on step `s`; the bounded channel (capacity 1) caps the
+/// run-ahead at one step — a classic double buffer.
+pub struct AsyncStaging {
+    rx: Receiver<HashMap<usize, (Tensor, Tensor)>>,
+    worker: Option<JoinHandle<Result<IoWorkerStats>>>,
+    current: HashMap<usize, (Tensor, Tensor)>,
+    counters: Arc<Counters>,
+    shard_off: [usize; 3],
+    shard_len: [usize; 3],
+    n_samples: usize,
+    label_mode: bool,
+    depth_only: bool,
+}
+
+impl AsyncStaging {
+    /// Spawn the staging worker for `rank`. `ep` must be this rank's
+    /// endpoint into a world dedicated to staging traffic; `sched` is the
+    /// global sample schedule (one row per step, identical on every rank).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        container: Arc<Container>,
+        topo: GridTopology,
+        rank: usize,
+        label_mode: bool,
+        ep: Box<dyn Communicator>,
+        sched: Arc<Vec<Vec<usize>>>,
+        groups: usize,
+    ) -> AsyncStaging {
+        let (_, pos) = topo.coords_of(rank);
+        let (shard_off, shard_len) = topo.grid.shard_of(container.meta.size, pos);
+        let n_samples = container.meta.n_samples;
+        let depth_only = topo.grid.is_depth_only();
+        let counters = ep.counters().clone();
+        let (tx, rx) = sync_channel::<HashMap<usize, (Tensor, Tensor)>>(1);
+        let worker = std::thread::Builder::new()
+            .name(format!("io-staging-{rank}"))
+            .spawn(move || staging_worker(container, topo, rank, label_mode, ep,
+                                          sched, groups, tx))
+            .expect("spawn staging worker");
+        AsyncStaging {
+            rx,
+            worker: Some(worker),
+            current: HashMap::new(),
+            counters,
+            shard_off,
+            shard_len,
+            n_samples,
+            label_mode,
+            depth_only,
+        }
+    }
+
+    /// Shared traffic counters of the staging world (for
+    /// `TrainReport::comm_bytes`, like the gradient world's).
+    pub fn counters(&self) -> &Arc<Counters> {
+        &self.counters
+    }
+
+    /// Swap in the next step's staged shards. Returns the exposed wait:
+    /// ~zero when the worker kept ahead of compute, the residual staging
+    /// time otherwise.
+    pub fn begin_step(&mut self) -> Result<f64> {
+        let t0 = Instant::now();
+        self.current = self.rx.recv().map_err(|_| {
+            anyhow!("I/O staging worker terminated early (see join error)")
+        })?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_samples
+    }
+
+    pub fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
+        if !self.depth_only || d0 != self.shard_off[0] || len != self.shard_len[0] {
+            bail!("staged shard is D{}+{}, engine asked for depth slab [{d0}, {})",
+                  self.shard_off[0], self.shard_len[0], d0 + len);
+        }
+        serve_input(&self.current, sample, self.shard_off, self.shard_len,
+                    self.shard_off, self.shard_len)
+    }
+
+    pub fn input_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                        -> Result<Tensor> {
+        serve_input(&self.current, sample, off, len, self.shard_off, self.shard_len)
+    }
+
+    pub fn target_full(&self, sample: usize) -> Result<Tensor> {
+        if self.label_mode {
+            bail!("label-mode staging has no flat targets");
+        }
+        serve_target(&self.current, sample)
+    }
+
+    pub fn target_shard3(&self, sample: usize, off: [usize; 3], len: [usize; 3])
+                         -> Result<Tensor> {
+        if !self.label_mode {
+            bail!("target_shard3 on a staging source without spatial labels");
+        }
+        if off != self.shard_off || len != self.shard_len {
+            bail!("label shard is {:?}+{:?}, engine asked for {off:?}+{len:?}",
+                  self.shard_off, self.shard_len);
+        }
+        serve_target(&self.current, sample)
+    }
+
+    /// Stop the worker and collect its ingestion/redistribution totals.
+    pub fn shutdown(mut self) -> Result<IoWorkerStats> {
+        drop(self.rx); // unblocks a worker parked on a full double buffer
+        match self.worker.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("staging worker panicked"))?,
+            None => Ok(IoWorkerStats::default()),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn staging_worker(
+    container: Arc<Container>,
+    topo: GridTopology,
+    rank: usize,
+    label_mode: bool,
+    ep: Box<dyn Communicator>,
+    sched: Arc<Vec<Vec<usize>>>,
+    groups: usize,
+    tx: SyncSender<HashMap<usize, (Tensor, Tensor)>>,
+) -> Result<IoWorkerStats> {
+    let mut store = DataStore::ingest(&container, topo, rank, label_mode)?;
+    let mut redist_secs = 0.0;
+    for row in sched.iter() {
+        let assigns = assignments_of(row, groups);
+        let t0 = Instant::now();
+        store.redistribute(ep.as_ref(), &assigns)?;
+        redist_secs += t0.elapsed().as_secs_f64();
+        if tx.send(store.take_staged()).is_err() {
+            break; // consumer gone (error or early exit): stop staging
+        }
+    }
+    Ok(IoWorkerStats {
+        ingest_bytes: store.ingest_bytes,
+        redist_bytes: store.redist_bytes,
+        redist_secs,
+    })
 }
 
 #[cfg(test)]
@@ -219,5 +515,13 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn assignments_split_schedule_rows_group_major() {
+        let row = [5usize, 1, 4, 2, 0, 3];
+        assert_eq!(assignments_of(&row, 3),
+                   vec![vec![5, 1], vec![4, 2], vec![0, 3]]);
+        assert_eq!(assignments_of(&row, 1), vec![row.to_vec()]);
     }
 }

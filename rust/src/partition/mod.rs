@@ -134,6 +134,24 @@ impl SpatialGrid {
         debug_assert!(pos < self.ways());
         [pos / (self.h * self.w), (pos / self.w) % self.h, pos % self.w]
     }
+
+    /// (offset, extents) of the (D, H, W) hyperslab owned by linear
+    /// position `pos` when a cubic `size`^3 volume is partitioned over this
+    /// grid — [`axis_range`] per axis (floor-even, last shard takes the
+    /// remainder), so the data store and the engine agree on shard
+    /// geometry for every extent, divisible or not.
+    pub fn shard_of(&self, size: usize, pos: usize) -> ([usize; 3], [usize; 3]) {
+        let c = self.coords(pos);
+        let dims = self.dims();
+        let mut off = [0usize; 3];
+        let mut len = [0usize; 3];
+        for a in 0..3 {
+            let (s, l) = axis_range(size, dims[a], c[a]);
+            off[a] = s;
+            len[a] = l;
+        }
+        (off, len)
+    }
 }
 
 impl std::fmt::Display for SpatialGrid {
@@ -209,39 +227,6 @@ impl GridTopology {
     }
 }
 
-/// An even depth partition of `d` planes over `ways` shards.
-#[derive(Clone, Copy, Debug)]
-pub struct DepthPartition {
-    pub d: usize,
-    pub ways: usize,
-}
-
-impl DepthPartition {
-    /// The engine requires even splits (the AOT shard executables are
-    /// lowered at a single shard shape).
-    pub fn new_even(d: usize, ways: usize) -> Result<DepthPartition> {
-        if ways == 0 || d % ways != 0 {
-            bail!("depth {d} not divisible by {ways} ways");
-        }
-        Ok(DepthPartition { d, ways })
-    }
-
-    pub fn shard_len(&self) -> usize {
-        self.d / self.ways
-    }
-
-    pub fn shard_start(&self, pos: usize) -> usize {
-        debug_assert!(pos < self.ways);
-        pos * self.shard_len()
-    }
-
-    /// Global depth range [start, end) of shard `pos`.
-    pub fn range(&self, pos: usize) -> (usize, usize) {
-        let s = self.shard_start(pos);
-        (s, s + self.shard_len())
-    }
-}
-
 /// General `N x D x H x W`-way decomposition used by the performance model
 /// and the cluster simulator (the paper's Figs. 4/7/8 sweep these).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -272,10 +257,10 @@ impl Grid4 {
 
     /// Per-axis shard `(start, len)` of grid coordinate `coord` over a
     /// (D, H, W) volume: floor-even split, last shard takes the remainder,
-    /// so non-power-of-two grids cover 512^3 volumes exactly (unlike
-    /// [`DepthPartition::new_even`], which rejects non-divisible extents —
-    /// the AOT functional engine needs even shards, the simulator and the
-    /// data store do not).
+    /// so non-power-of-two grids cover 512^3 volumes exactly. When an
+    /// extent divides evenly this degenerates to the even split the AOT
+    /// functional engine requires — the data store and the engine therefore
+    /// share one shard geometry (the §III-B cache/compute alignment).
     pub fn shard_range(&self, vol: (usize, usize, usize),
                        coord: (usize, usize, usize)) -> [(usize, usize); 3] {
         [
@@ -356,17 +341,19 @@ mod tests {
     }
 
     #[test]
-    fn depth_partition_covers() {
-        let p = DepthPartition::new_even(64, 4).unwrap();
-        assert_eq!(p.shard_len(), 16);
-        let mut end = 0;
+    fn shard_of_matches_axis_range_geometry() {
+        // divisible extents: the even split the AOT engine assumes
+        let g = SpatialGrid::new(4, 1, 1);
         for pos in 0..4 {
-            let (s, e) = p.range(pos);
-            assert_eq!(s, end);
-            end = e;
+            let (off, len) = g.shard_of(64, pos);
+            assert_eq!(off, [pos * 16, 0, 0]);
+            assert_eq!(len, [16, 64, 64]);
         }
-        assert_eq!(end, 64);
-        assert!(DepthPartition::new_even(10, 4).is_err());
+        // non-divisible: last shard takes the remainder on every axis
+        let g = SpatialGrid::new(3, 2, 1);
+        let (off, len) = g.shard_of(10, g.pos_of([2, 1, 0]));
+        assert_eq!(off, [6, 5, 0]);
+        assert_eq!(len, [4, 5, 10]);
     }
 
     #[test]
@@ -479,22 +466,26 @@ mod tests {
     }
 
     #[test]
-    fn prop_depth_partition_exact_cover() {
-        prop::check("depth-cover", 100, |g| {
-            let ways = g.pow2_in(1, 16);
-            let d = ways * g.usize_in(1, 32);
-            let p = DepthPartition::new_even(d, ways).map_err(|e| e.to_string())?;
-            let mut covered = vec![0u8; d];
-            for pos in 0..ways {
-                let (s, e) = p.range(pos);
-                for i in s..e {
-                    covered[i] += 1;
+    fn prop_grid_shards_exactly_cover_volume() {
+        prop::check("grid-shard-cover", 60, |g| {
+            let grid = SpatialGrid::new(g.usize_in(1, 4), g.usize_in(1, 3),
+                                        g.usize_in(1, 3));
+            let size = g.usize_in(4, 24).max(grid.d).max(grid.h).max(grid.w);
+            let mut covered = vec![0u8; size * size * size];
+            for pos in 0..grid.ways() {
+                let (off, len) = grid.shard_of(size, pos);
+                for d in off[0]..off[0] + len[0] {
+                    for h in off[1]..off[1] + len[1] {
+                        for w in off[2]..off[2] + len[2] {
+                            covered[(d * size + h) * size + w] += 1;
+                        }
+                    }
                 }
             }
             if covered.iter().all(|&c| c == 1) {
                 Ok(())
             } else {
-                Err("not an exact cover".into())
+                Err(format!("grid {grid} size {size}: not an exact cover"))
             }
         });
     }

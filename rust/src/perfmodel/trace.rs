@@ -40,6 +40,10 @@ pub struct TraceReplay {
     /// tags the halo exchange attaches to its sends — the per-dimension
     /// halo volumes the §III-A cost model sums over.
     pub halo_bytes_axis: [u64; 3],
+    /// Data-store redistribution payload bytes (`MsgTag::Redist`) — the
+    /// §III-B staging volume; `iosim::pipeline::io_time_from_redist_trace`
+    /// prices it against the analytic spatial-parallel I/O term.
+    pub redist_bytes: u64,
 }
 
 /// Replay `trace` (from a world of `world` ranks) against `link`.
@@ -68,6 +72,7 @@ pub fn replay(trace: &TraceCollector, world: usize, link: &SrModel) -> TraceRepl
         allreduce_model_secs,
         collectives: colls.len(),
         halo_bytes_axis: trace.halo_bytes_per_axis(),
+        redist_bytes: trace.redist_bytes(),
     }
 }
 
@@ -163,6 +168,34 @@ mod tests {
         // (1,1,4,4,1) = 64 B.
         assert_eq!(rep.halo_bytes_axis, [4 * 4 * 4, 0, 4 * 16 * 4]);
         assert_eq!(rep.bytes, (4 * 4 * 4 + 4 * 16 * 4) as u64);
+    }
+
+    /// Store-redistribution sends carry `MsgTag::Redist` into the replay,
+    /// separately from halo and generic traffic.
+    #[test]
+    fn replay_accounts_redistribution_bytes() {
+        use crate::comm::MsgTag;
+        let tc = Arc::new(TraceCollector::new());
+        let eps: Vec<_> = world(2)
+            .into_iter()
+            .map(|e| Traced::new(e, tc.clone()))
+            .collect();
+        thread::scope(|s| {
+            for ep in eps {
+                s.spawn(move || {
+                    let peer = 1 - ep.rank();
+                    ep.send_tagged(peer, vec![0.0; 50], MsgTag::Redist);
+                    ep.send(peer, vec![0.0; 7]); // generic: not redist
+                    ep.recv(peer).unwrap();
+                    ep.recv(peer).unwrap();
+                });
+            }
+        });
+        let link = SrModel { alpha_s: 1e-6, bytes_per_s: 10e9 };
+        let rep = replay(&tc, 2, &link);
+        assert_eq!(rep.redist_bytes, 2 * 50 * 4);
+        assert_eq!(rep.bytes, (2 * 50 * 4 + 2 * 7 * 4) as u64);
+        assert_eq!(rep.halo_bytes_axis, [0; 3]);
     }
 
     /// Per-rank send loads in a ring are balanced.

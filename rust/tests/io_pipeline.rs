@@ -1,12 +1,21 @@
 //! I/O pipeline integration: GRF synthesis → container file → epoch-0
-//! hyperslab ingestion → owner-mapped data store → per-step redistribution
-//! (the functional realization of the paper's Fig. 3).
+//! hyperslab ingestion on the D×H×W grid → owner-mapped data store →
+//! per-step redistribution → store-backed training (the functional
+//! realization of the paper's Fig. 3, wired into §III-A training).
 
-use hydra3d::comm::{world, Communicator};
-use hydra3d::data::container::{write_dataset, Container};
+use hydra3d::comm::{world, CommBackend, Communicator, GradReduce};
+use hydra3d::data::container::{write_dataset, write_label_dataset, Container};
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
-use hydra3d::iosim::store::DataStore;
-use hydra3d::partition::Topology;
+use hydra3d::engine::hybrid::{train_hybrid, train_hybrid_store, HybridOpts,
+                              InMemorySource, IoMode};
+use hydra3d::engine::{LrSchedule, TrainReport};
+use hydra3d::iosim::store::{assignments_of, DataStore};
+use hydra3d::partition::{GridTopology, SpatialGrid};
+use hydra3d::runtime::RuntimeHandle;
+use hydra3d::tensor::Tensor;
+use hydra3d::util::prop;
+use hydra3d::util::rng::Pcg;
+use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
@@ -14,6 +23,18 @@ fn tmpfile(name: &str) -> std::path::PathBuf {
     let mut p = std::env::temp_dir();
     p.push(format!("hydra3d-io-{name}-{}", std::process::id()));
     p
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn has_grid_plan(rt: &RuntimeHandle, model: &str, grid: &SpatialGrid) -> bool {
+    match rt.manifest().model(model) {
+        Ok(info) => info.hybrid_plan(grid).is_ok(),
+        Err(_) => false,
+    }
 }
 
 /// Epoch-0 ingestion reads each input byte of the dataset exactly once
@@ -26,7 +47,7 @@ fn epoch0_ingestion_is_exactly_once() {
     write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
     let c = Arc::new(Container::open(&path).unwrap());
 
-    let topo = Topology::new(3, 2); // 3 groups x 2-way depth
+    let topo = GridTopology::new(3, SpatialGrid::depth(2)); // 3 groups x 2-way
     let mut stores = Vec::new();
     for r in 0..topo.world_size() {
         stores.push(DataStore::ingest(&c, topo, r, false).unwrap());
@@ -35,27 +56,160 @@ fn epoch0_ingestion_is_exactly_once() {
     for st in &stores {
         assert_eq!(st.cached(), 2);
     }
-    // input voxels read exactly once in total; targets once per position
+    // input voxels read exactly once in total; targets once per position;
+    // the per-store geometric accounting agrees with the PFS byte counter
     let total_bytes: u64 = stores.iter().map(|s| s.ingest_bytes).sum();
     let vol_bytes = 6 * 8 * 8 * 8 * 4;
     let target_bytes = 6 * 4 * 4 * 2;
     assert_eq!(total_bytes, vol_bytes + target_bytes);
+    assert_eq!(c.bytes_read.load(Ordering::Relaxed), total_bytes);
 
     // shard contents match the source dataset
     for st in &stores {
-        let (group, pos) = topo.coords_of(st.rank);
+        let (group, _) = topo.coords_of(st.rank);
         for s in st.owner.samples_of(group) {
             let (x, t) = st.cache_entry(s).unwrap();
-            assert_eq!(x, &ds.inputs[s].slice_d(pos * 4, 4));
+            assert_eq!(x, &ds.inputs[s].block3(st.shard_off, st.shard_len));
             assert_eq!(t.data(), ds.targets[s].data());
         }
     }
     std::fs::remove_file(&path).ok();
 }
 
+/// Property: on random (possibly non-divisible) grids and group counts,
+/// the union of all ranks' epoch-0 ingests covers every sample exactly
+/// once per grid position — each voxel of each sample is cached by exactly
+/// one rank of the owning group, with the correct contents.
+#[test]
+fn prop_ingest_union_covers_every_sample_once() {
+    prop::check("ingest-union-cover", 12, |g| {
+        let grid = SpatialGrid::new(g.usize_in(1, 2), g.usize_in(1, 2),
+                                    g.usize_in(1, 2));
+        let groups = g.usize_in(1, 3);
+        let size = g.usize_in(4, 9); // often not divisible by the grid
+        let n = g.usize_in(1, 5);
+        let topo = GridTopology::new(groups, grid);
+        let ds = GrfDataset::generate(&GrfConfig { size, seed: 7 }, n);
+        let path = tmpfile(&format!("prop-ingest-{}", g.case));
+        write_dataset(&path, &ds.inputs, &ds.targets, None)
+            .map_err(|e| e.to_string())?;
+        let c = Container::open(&path).map_err(|e| e.to_string())?;
+        let stores: Vec<DataStore> = (0..topo.world_size())
+            .map(|r| DataStore::ingest(&c, topo, r, false))
+            .collect::<anyhow::Result<_>>()
+            .map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+
+        let vol = size * size * size;
+        for (s, input) in ds.inputs.iter().enumerate() {
+            let mut covered = vec![0u8; vol];
+            for st in &stores {
+                let (group, _) = topo.coords_of(st.rank);
+                if st.owner.owner_group(s) != group {
+                    if st.cache_entry(s).is_some() {
+                        return Err(format!("rank {} cached unowned sample {s}",
+                                           st.rank));
+                    }
+                    continue;
+                }
+                let (x, _) = st.cache_entry(s).ok_or_else(|| {
+                    format!("rank {} missing owned sample {s}", st.rank)
+                })?;
+                if x != &input.block3(st.shard_off, st.shard_len) {
+                    return Err(format!("rank {} sample {s}: wrong shard",
+                                       st.rank));
+                }
+                for d in st.shard_off[0]..st.shard_off[0] + st.shard_len[0] {
+                    for h in st.shard_off[1]..st.shard_off[1] + st.shard_len[1] {
+                        for w in st.shard_off[2]..st.shard_off[2] + st.shard_len[2] {
+                            covered[(d * size + h) * size + w] += 1;
+                        }
+                    }
+                }
+            }
+            if !covered.iter().all(|&v| v == 1) {
+                return Err(format!(
+                    "grid {grid} groups {groups} size {size}: sample {s} not \
+                     covered exactly once"));
+            }
+        }
+        // every input byte ingested exactly once, one target per position
+        let total: u64 = stores.iter().map(|st| st.ingest_bytes).sum();
+        let expect = (n * vol * 4 + n * 4 * 4 * grid.ways()) as u64;
+        if total != expect {
+            return Err(format!("ingest bytes {total} != {expect}"));
+        }
+        Ok(())
+    });
+}
+
+/// Property: after redistribution, every rank's staged shards are
+/// bit-identical to direct container reads of its (D, H, W) block — on
+/// random grids, group counts and assignments.
+#[test]
+fn prop_staged_shards_equal_direct_reads() {
+    prop::check("staged-equals-direct", 8, |g| {
+        let grid = SpatialGrid::new(g.usize_in(1, 2), g.usize_in(1, 2),
+                                    g.usize_in(1, 2));
+        let groups = g.usize_in(1, 3);
+        let size = g.usize_in(4, 8);
+        let n = g.usize_in(1, 4);
+        let topo = GridTopology::new(groups, grid);
+        let ds = GrfDataset::generate(&GrfConfig { size, seed: 11 }, n);
+        let path = tmpfile(&format!("prop-staged-{}", g.case));
+        write_dataset(&path, &ds.inputs, &ds.targets, None)
+            .map_err(|e| e.to_string())?;
+        let c = Arc::new(Container::open(&path).map_err(|e| e.to_string())?);
+        // one random step: every group consumes a random sample
+        let assignments: Vec<Vec<usize>> =
+            (0..groups).map(|_| vec![g.usize_in(0, n - 1)]).collect();
+
+        let eps = world(topo.world_size());
+        let outs: Vec<Result<Vec<(usize, Tensor)>, String>> =
+            std::thread::scope(|s| {
+                eps.into_iter()
+                    .enumerate()
+                    .map(|(r, ep)| {
+                        let c = c.clone();
+                        let assignments = assignments.clone();
+                        s.spawn(move || {
+                            let mut st = DataStore::ingest(&c, topo, r, false)
+                                .map_err(|e| e.to_string())?;
+                            st.redistribute(&ep, &assignments)
+                                .map_err(|e| e.to_string())?;
+                            let (group, _) = topo.coords_of(r);
+                            assignments[group]
+                                .iter()
+                                .map(|&smp| st.staged_shard(smp)
+                                     .map(|(x, _)| (smp, x.clone()))
+                                     .map_err(|e| e.to_string()))
+                                .collect()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+        std::fs::remove_file(&path).ok();
+        for (r, got) in outs.into_iter().enumerate() {
+            let (_, pos) = topo.coords_of(r);
+            let (off, len) = grid.shard_of(size, pos);
+            for (smp, x) in got? {
+                if x != ds.inputs[smp].block3(off, len) {
+                    return Err(format!("rank {r} sample {smp}: staged shard \
+                                        != direct read"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Steady-state redistribution: after `redistribute`, every rank holds the
 /// shards of the samples its group is about to train on, moved only over
-/// the communicator (zero PFS reads).
+/// the communicator (zero PFS reads), with the volume visible in both the
+/// store counters and the world's `Redist` byte counter.
 #[test]
 fn steady_state_redistribution() {
     let ds = GrfDataset::generate(&GrfConfig { size: 8, seed: 4 }, 4);
@@ -63,53 +217,57 @@ fn steady_state_redistribution() {
     write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
     let c = Arc::new(Container::open(&path).unwrap());
 
-    let topo = Topology::new(2, 2);
+    let topo = GridTopology::new(2, SpatialGrid::depth(2));
     // step assignment: group 0 trains on sample 3, group 1 on sample 0 —
     // both owned by the *other* group (owner = sample % 2).
     let assignments = vec![vec![3usize], vec![0usize]];
 
     let eps = world(topo.world_size());
-    let results: Vec<(u64, Vec<(usize, hydra3d::tensor::Tensor)>)> =
-        std::thread::scope(|s| {
-            eps.into_iter()
-                .enumerate()
-                .map(|(r, ep)| {
-                    let c = c.clone();
-                    let assignments = assignments.clone();
-                    s.spawn(move || {
-                        let mut st = DataStore::ingest(&c, topo, r, false).unwrap();
-                        // all ranks finish ingesting before we snapshot the
-                        // (shared) PFS byte counter
-                        let all: Vec<usize> = (0..topo.world_size()).collect();
-                        ep.barrier(&all).unwrap();
-                        let before = c.bytes_read.load(Ordering::Relaxed);
-                        st.redistribute(&ep, &assignments).unwrap();
-                        let after = c.bytes_read.load(Ordering::Relaxed);
-                        assert_eq!(before, after, "redistribution must not hit PFS");
-                        let (group, _) = topo.coords_of(r);
-                        let got: Vec<_> = assignments[group]
-                            .iter()
-                            .map(|&smp| (smp, st.staged_shard(smp).unwrap().0.clone()))
-                            .collect();
-                        (st.redist_bytes, got)
-                    })
+    let world_counters = eps[0].counters().clone();
+    let results: Vec<(u64, Vec<(usize, Tensor)>)> = std::thread::scope(|s| {
+        eps.into_iter()
+            .enumerate()
+            .map(|(r, ep)| {
+                let c = c.clone();
+                let assignments = assignments.clone();
+                s.spawn(move || {
+                    let mut st = DataStore::ingest(&c, topo, r, false).unwrap();
+                    // all ranks finish ingesting before we snapshot the
+                    // (shared) PFS byte counter
+                    let all: Vec<usize> = (0..topo.world_size()).collect();
+                    ep.barrier(&all).unwrap();
+                    let before = c.bytes_read.load(Ordering::Relaxed);
+                    st.redistribute(&ep, &assignments).unwrap();
+                    let after = c.bytes_read.load(Ordering::Relaxed);
+                    assert_eq!(before, after, "redistribution must not hit PFS");
+                    let (group, _) = topo.coords_of(r);
+                    let got: Vec<_> = assignments[group]
+                        .iter()
+                        .map(|&smp| (smp, st.staged_shard(smp).unwrap().0.clone()))
+                        .collect();
+                    (st.redist_bytes, got)
                 })
-                .collect::<Vec<_>>()
-                .into_iter()
-                .map(|h| h.join().unwrap())
-                .collect()
-        });
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
 
     for (r, (_, got)) in results.iter().enumerate() {
         let (_, pos) = topo.coords_of(r);
+        let (off, len) = topo.grid.shard_of(8, pos);
         for (smp, x) in got {
-            assert_eq!(x, &ds.inputs[*smp].slice_d(pos * 4, 4),
+            assert_eq!(x, &ds.inputs[*smp].block3(off, len),
                        "rank {r} sample {smp}");
         }
     }
-    // both owner groups sent their shards: nonzero redistribution traffic
+    // both owner groups sent their shards: 2 samples x 2 positions, each a
+    // (1,1,4,8,8) shard + a 4-f32 target
     let total: u64 = results.iter().map(|(b, _)| b).sum();
-    assert!(total > 0);
+    assert_eq!(total, 4 * (256 + 4) * 4);
+    // ... and the world counters saw exactly the same Redist volume
+    assert_eq!(world_counters.redist_bytes(), total);
     std::fs::remove_file(&path).ok();
 }
 
@@ -120,7 +278,7 @@ fn self_owned_assignment_is_local() {
     let path = tmpfile("local");
     write_dataset(&path, &ds.inputs, &ds.targets, None).unwrap();
     let c = Arc::new(Container::open(&path).unwrap());
-    let topo = Topology::new(2, 1);
+    let topo = GridTopology::new(2, SpatialGrid::depth(1));
     let assignments = vec![vec![0usize], vec![1usize]]; // owner == consumer
     let eps = world(2);
     std::thread::scope(|s| {
@@ -137,30 +295,31 @@ fn self_owned_assignment_is_local() {
     std::fs::remove_file(&path).ok();
 }
 
-/// Label-mode store: U-Net style spatially partitioned ground truth
-/// (the paper: "we also spatially distribute the ground-truth
-/// segmentation").
+/// Label-mode store on a true 3D grid: U-Net style spatially partitioned
+/// ground truth (the paper: "we also spatially distribute the ground-truth
+/// segmentation") cached as (D, H, W) blocks.
 #[test]
 fn label_mode_store_caches_label_shards() {
     let (inputs, labels) = hydra3d::data::ct::ct_dataset(8, 2, 2, 7);
-    let targets: Vec<hydra3d::tensor::Tensor> =
-        (0..2).map(|_| hydra3d::tensor::Tensor::zeros(&[1, 1])).collect();
+    let targets: Vec<Tensor> = (0..2).map(|_| Tensor::zeros(&[1, 1])).collect();
     let path = tmpfile("labels");
     write_dataset(&path, &inputs, &targets, Some(&labels)).unwrap();
     let c = Container::open(&path).unwrap();
-    let topo = Topology::new(1, 2);
-    let st = DataStore::ingest(&c, topo, 1, true).unwrap();
-    let (group, pos) = topo.coords_of(1);
-    for s in st.owner.samples_of(group) {
-        let (x, l) = st.cache_entry(s).unwrap();
-        assert_eq!(x, &inputs[s].slice_d(pos * 4, 4));
-        assert_eq!(l, &labels[s].slice_d(pos * 4, 4));
+    let topo = GridTopology::new(1, SpatialGrid::new(2, 2, 1));
+    for r in 0..topo.world_size() {
+        let st = DataStore::ingest(&c, topo, r, true).unwrap();
+        let (group, _) = topo.coords_of(r);
+        for s in st.owner.samples_of(group) {
+            let (x, l) = st.cache_entry(s).unwrap();
+            assert_eq!(x, &inputs[s].block3(st.shard_off, st.shard_len));
+            assert_eq!(l, &labels[s].block3(st.shard_off, st.shard_len));
+        }
     }
     std::fs::remove_file(&path).ok();
 }
 
 /// Container-as-SampleSource: direct epoch-0 training path reads shards
-/// straight from the file.
+/// (depth slabs and native 3D blocks) straight from the file.
 #[test]
 fn container_is_a_sample_source() {
     use hydra3d::engine::hybrid::SampleSource;
@@ -171,6 +330,143 @@ fn container_is_a_sample_source() {
     assert_eq!(SampleSource::len(&c), 3);
     let shard = c.input_shard(1, 2, 4).unwrap();
     assert_eq!(shard, ds.inputs[1].slice_d(2, 4));
+    // native 3D block path (no slab-then-crop)
+    let block = SampleSource::input_shard3(&c, 1, [2, 0, 4], [4, 4, 4]).unwrap();
+    assert_eq!(block, ds.inputs[1].block3([2, 0, 4], [4, 4, 4]));
     assert_eq!(c.target_full(2).unwrap().data(), ds.targets[2].data());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Schedule rows split group-major, matching the engine's slot layout.
+#[test]
+fn schedule_assignments_match_engine_slots() {
+    let row = [9usize, 8, 7, 6];
+    let a = assignments_of(&row, 2);
+    assert_eq!(a, vec![vec![9, 8], vec![7, 6]]);
+}
+
+// ---------------------------------------------------------------------------
+// Store-backed training equivalence (artifact-gated, like the engine tests)
+// ---------------------------------------------------------------------------
+
+fn make_cf_data(n: usize, size: usize, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    let mut rng = Pcg::new(seed, 77);
+    let mut inputs = Vec::new();
+    let mut targets = Vec::new();
+    for _ in 0..n {
+        let mut x = Tensor::zeros(&[1, 1, size, size, size]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let m: f32 = x.data().iter().sum::<f32>() / x.numel() as f32;
+        let s: f32 = x.data().iter().map(|v| v * v).sum::<f32>() / x.numel() as f32;
+        inputs.push(x);
+        targets.push(Tensor::from_vec(&[1, 4], vec![m, s, -m, 0.3]));
+    }
+    (inputs, targets)
+}
+
+fn assert_bit_identical(a: &TrainReport, b: &TrainReport, what: &str) {
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert!(ra.loss.to_bits() == rb.loss.to_bits(),
+                "{what}: step {} loss {} vs {}", ra.step, ra.loss, rb.loss);
+    }
+    for (i, (pa, pb)) in a.params.iter().zip(&b.params).enumerate() {
+        assert!(pa.data() == pb.data(), "{what}: param {i} differs");
+    }
+}
+
+/// THE acceptance claim: `train_hybrid` fed by the store (blocking and
+/// async) on a 2x2x2 grid x 2 groups is *bit-identical* to the
+/// InMemorySource — the store moves bytes, never values — and epochs 1+
+/// never touch the container (every byte read is epoch-0 ingestion).
+#[test]
+fn store_training_bit_identical_cosmoflow_2x2x2() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let grid = SpatialGrid::new(2, 2, 2);
+    if !has_grid_plan(&rt, "cf-nano", &grid) {
+        eprintln!("(artifacts predate grid shard sets; rebuild with \
+                   `make artifacts` to run the store equivalence test)");
+        return;
+    }
+    let (inputs, targets) = make_cf_data(6, 8, 31);
+    let steps = 7; // 14 draws over 6 samples: the schedule crosses 2 epochs
+    let opts = HybridOpts {
+        model: "cf-nano".into(),
+        grid,
+        groups: 2,
+        batch_global: 2,
+        steps,
+        seed: 21,
+        schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
+        log_every: 0,
+    };
+    let inmem = train_hybrid(&rt, &opts, Arc::new(InMemorySource {
+        inputs: inputs.clone(),
+        targets: targets.clone(),
+    })).unwrap();
+
+    let path = tmpfile("equiv-cf");
+    write_dataset(&path, &inputs, &targets, None).unwrap();
+    for mode in [IoMode::Store, IoMode::StoreAsync] {
+        let c = Arc::new(Container::open(&path).unwrap());
+        let rep = train_hybrid_store(&rt, &opts, c.clone(), mode,
+                                     &CommBackend::Channel,
+                                     GradReduce::default())
+            .unwrap();
+        assert_bit_identical(&inmem, &rep, mode.name());
+        // epochs 1+ perform zero container reads: the run's total PFS
+        // traffic is exactly the epoch-0 ingest (dataset once + targets
+        // once per grid position), nothing more
+        let read = c.bytes_read.load(Ordering::Relaxed);
+        assert_eq!(read, rep.ingest_bytes, "{}: reads beyond ingestion",
+                   mode.name());
+        let expect = (6 * 8 * 8 * 8 * 4 + 6 * 4 * 4 * grid.ways()) as u64;
+        assert_eq!(rep.ingest_bytes, expect, "{}: ingest bytes", mode.name());
+        assert!(rep.redist_bytes > 0, "{}: no staging traffic", mode.name());
+        if mode == IoMode::StoreAsync {
+            assert!(rep.io_overlapped > 0.0, "async staging did no worker work");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The same bit-identity for the U-Net workload: spatially partitioned
+/// one-hot ground truth staged through the store on a 2x2x2 grid.
+#[test]
+fn store_training_bit_identical_unet_2x2x2() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let grid = SpatialGrid::new(2, 2, 2);
+    if !has_grid_plan(&rt, "unet16", &grid) {
+        eprintln!("(artifacts predate grid shard sets; rebuild with \
+                   `make artifacts` to run the U-Net store test)");
+        return;
+    }
+    let (inputs, labels) = hydra3d::data::ct::ct_dataset(16, 2, 4, 99);
+    let steps = 5; // 5 draws over 4 scans: crosses an epoch boundary
+    let opts = HybridOpts {
+        model: "unet16".into(),
+        grid,
+        groups: 1,
+        batch_global: 1,
+        steps,
+        seed: 5,
+        schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
+        log_every: 0,
+    };
+    let inmem = train_hybrid(&rt, &opts, Arc::new(InMemorySource {
+        inputs: inputs.clone(),
+        targets: labels.clone(),
+    })).unwrap();
+
+    let path = tmpfile("equiv-unet");
+    write_label_dataset(&path, &inputs, &labels).unwrap();
+    let c = Arc::new(Container::open(&path).unwrap());
+    let rep = train_hybrid_store(&rt, &opts, c.clone(), IoMode::StoreAsync,
+                                 &CommBackend::Channel, GradReduce::default())
+        .unwrap();
+    assert_bit_identical(&inmem, &rep, "unet store-async");
+    let read = c.bytes_read.load(Ordering::Relaxed);
+    assert_eq!(read, rep.ingest_bytes, "reads beyond ingestion");
     std::fs::remove_file(&path).ok();
 }

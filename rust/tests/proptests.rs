@@ -5,7 +5,7 @@ use hydra3d::comm::{world, BucketPlan, Communicator, OverlapAllreduce};
 use hydra3d::data::grf::{synthesize, GrfConfig, Universe};
 use hydra3d::engine::sample_schedule;
 use hydra3d::iosim::store::OwnerMap;
-use hydra3d::partition::{axis_range, DepthPartition, Grid4, SpatialGrid, Topology};
+use hydra3d::partition::{axis_range, Grid4, SpatialGrid, Topology};
 use hydra3d::tensor::Tensor;
 use hydra3d::util::prop;
 use std::thread;
@@ -24,18 +24,18 @@ fn prop_shard_pad_tiles_global() {
         x.data_mut().copy_from_slice(&data);
         let halo = 1;
         let padded = x.pad_d(halo, halo);
-        let part = DepthPartition::new_even(d, ways).map_err(|e| e.to_string())?;
         for pos in 0..ways {
-            let want = padded.slice_d(part.shard_start(pos), part.shard_len() + 2 * halo);
+            // even split: axis_range degenerates to pos * dsh for d = ways * dsh
+            let (start, len) = axis_range(d, ways, pos);
+            let want = padded.slice_d(start, len + 2 * halo);
             // reconstruct what exchange_forward produces locally:
-            let shard = x.slice_d(part.shard_start(pos), part.shard_len());
+            let shard = x.slice_d(start, len);
             let mut local = shard.pad_d(halo, halo);
             if pos > 0 {
-                local.set_slice_d(0, &x.slice_d(part.shard_start(pos) - halo, halo));
+                local.set_slice_d(0, &x.slice_d(start - halo, halo));
             }
             if pos + 1 < ways {
-                local.set_slice_d(halo + part.shard_len(),
-                                  &x.slice_d(part.shard_start(pos) + part.shard_len(), halo));
+                local.set_slice_d(halo + len, &x.slice_d(start + len, halo));
             }
             if local != want {
                 return Err(format!("ways={ways} pos={pos} mismatch"));
