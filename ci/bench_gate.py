@@ -14,9 +14,11 @@ uploads as a workflow artifact on every PR.
 Gate rules, per metric present in BOTH the PR run and the baseline:
 
 * `*_bytes` / `*_count` metrics are deterministic (model-derived halo
-  volumes, store ingest/redistribution volumes, message counts): any
-  difference fails — a structural change must update the baseline
-  intentionally.
+  volumes, store ingest/redistribution volumes, message counts, pool-miss
+  counts): any difference fails — a structural change must update the
+  baseline intentionally.
+* `*_per_sec` / `*_x` metrics are throughputs / speedup ratios
+  (higher is better): fail when PR < baseline * (1 - tol).
 * other numeric metrics are timings: fail when PR > baseline * (1 + tol).
   Improvements and metrics missing from the baseline are reported only, so
   freshly added benches don't gate until the baseline is refreshed (copy a
@@ -96,12 +98,21 @@ def main() -> int:
             continue
         pr, bl = merged[key], base[key]
         gated += 1
+        higher_better = key.endswith("_per_sec") or key.endswith("_x")
         if exact:
             status = "ok" if pr == bl else "FAIL"
             if pr != bl:
                 failures.append(
                     f"{key}: {pr:g} != baseline {bl:g} (deterministic metric "
                     f"changed — update BENCH_baseline.json if intentional)")
+        elif higher_better:
+            floor = bl * (1.0 - args.tolerance)
+            status = "ok" if pr >= floor else "FAIL"
+            if pr < floor:
+                failures.append(
+                    f"{key}: {pr:g} < baseline {bl:g} "
+                    f"(-{(1.0 - pr / bl) * 100.0:.1f}% below the "
+                    f"{args.tolerance * 100.0:.0f}% budget; higher is better)")
         else:
             limit = bl * (1.0 + args.tolerance)
             status = "ok" if pr <= limit else "FAIL"

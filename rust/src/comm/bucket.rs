@@ -295,6 +295,11 @@ impl OverlapAllreduce {
                 let n = grads[pi].numel();
                 grads[pi].data_mut().copy_from_slice(&buf[off..off + n]);
             }
+            // Keep the bucket buffer staged for the next step: offsets
+            // cover it contiguously and every member param is re-copied
+            // before launch, so reuse is safe and steady-state steps
+            // allocate no staging storage.
+            self.staging[b] = Some(buf);
             completed += 1;
         }
         let report = OverlapReport {

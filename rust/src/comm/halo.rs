@@ -8,20 +8,35 @@
 //! Boundary ranks get zero faces on the outer side (the global "same"
 //! padding).
 //!
-//! A 3D grid runs one face exchange **per partitioned axis, sequentially**
-//! (D, then H, then W). Because each axis exchange sends the full,
-//! already-padded boundary face, corner and edge regions propagate through
-//! the neighbours' previous exchanges — after the last axis the shard is
+//! A 3D grid exchange is **per partitioned axis, sequentially** (D, then
+//! H, then W). Because each axis exchange sends the full, already-padded
+//! boundary face, corner and edge regions propagate through the
+//! neighbours' previous exchanges — after the last axis the shard is
 //! *exactly* the halo-padded hyperslab of the globally padded volume (the
 //! reassembly test below asserts bitwise equality), which is the paper's
 //! per-dimension halo-region scheme and is exact for separable "same"
 //! padding.
 //!
-//! Backward: `conv_bwd_data` produces gradients for the *padded* input; the
-//! halo-face gradients belong to the neighbours' interiors, so they are
-//! sent back and **accumulated**. The 3D backward walks the axes in
+//! The grid entry points ([`exchange_forward_grid`] /
+//! [`exchange_backward_grid`]) implement that sequential algorithm
+//! **fused**: one padded buffer of the final shape is built up front and
+//! every per-axis face is packed/unpacked as a `block3` hyperslab of that
+//! buffer, with send/recv storage drawn from an optional per-rank
+//! [`BufferPool`]. No intermediate repadded/cropped tensors exist — the
+//! per-axis composition used to move the whole (growing) shard through a
+//! fresh allocation per axis, which dominated step time. Face extents per
+//! axis are identical to the sequential composition (already-exchanged
+//! axes contribute their full padded extent, later axes only their
+//! interior), so byte counters and results are bit-identical; the
+//! composition test below asserts this against the per-axis functions.
+//!
+//! Backward: `conv_bwd_data` produces gradients for the *padded* input;
+//! the halo-face gradients belong to the neighbours' interiors, so they
+//! are sent back and **accumulated**. The 3D backward walks the axes in
 //! reverse (W, then H, then D) — the exact adjoint of the forward
-//! composition, verified by the adjoint property test.
+//! composition, verified by the adjoint property test. The fused backward
+//! mutates the padded gradient in place and extracts the interior once at
+//! the end.
 //!
 //! Pack/unpack are contiguous-slab copies (see [`crate::tensor`]); the
 //! paper's equivalent is its suite of optimized CUDA packing kernels. Every
@@ -31,8 +46,22 @@
 
 use super::{Communicator, MsgTag};
 use crate::partition::GridNeighbors;
+use crate::tensor::pool::BufferPool;
 use crate::tensor::Tensor;
 use anyhow::Result;
+
+fn take_buf(pool: Option<&BufferPool>, len: usize) -> Vec<f32> {
+    match pool {
+        Some(p) => p.take(len),
+        None => vec![0.0; len],
+    }
+}
+
+fn put_buf(pool: Option<&BufferPool>, buf: Vec<f32>) {
+    if let Some(p) = pool {
+        p.put(buf);
+    }
+}
 
 /// Forward face exchange along one spatial `axis` (2=D, 3=H, 4=W): returns
 /// the shard padded with `halo` faces on each side of that axis (neighbour
@@ -57,28 +86,29 @@ pub fn exchange_forward_axis(
     assert!(len >= halo,
             "shard axis {axis} extent {len} < halo {halo} (over-decomposed)");
     let ax = (axis - 2) as u8;
+    let felems = shard.numel() / len * halo;
     // post sends first (non-blocking), then receive — no deadlock with
     // buffered channels.
     if let Some(u) = lo {
-        let face = shard.slice_ax(axis, 0, halo);
-        ep.counters().add_halo_bytes(ax as usize, (face.numel() * 4) as u64);
-        ep.send_tagged(u, face.into_vec(), MsgTag::Halo(ax));
+        let mut face = vec![0.0f32; felems];
+        shard.slice_ax_into(axis, 0, halo, &mut face);
+        ep.counters().add_halo_bytes(ax as usize, (felems * 4) as u64);
+        ep.send_tagged(u, face, MsgTag::Halo(ax));
     }
     if let Some(d) = hi {
-        let face = shard.slice_ax(axis, len - halo, halo);
-        ep.counters().add_halo_bytes(ax as usize, (face.numel() * 4) as u64);
-        ep.send_tagged(d, face.into_vec(), MsgTag::Halo(ax));
+        let mut face = vec![0.0f32; felems];
+        shard.slice_ax_into(axis, len - halo, halo, &mut face);
+        ep.counters().add_halo_bytes(ax as usize, (felems * 4) as u64);
+        ep.send_tagged(d, face, MsgTag::Halo(ax));
     }
     let mut padded = shard.pad_ax(axis, halo, halo);
-    let mut fshape = shard.shape().to_vec();
-    fshape[axis] = halo;
     if let Some(u) = lo {
         let buf = ep.recv(u)?;
-        padded.set_slice_ax(axis, 0, &Tensor::from_vec(&fshape, buf));
+        padded.set_slice_ax_from(axis, 0, halo, &buf);
     }
     if let Some(d) = hi {
         let buf = ep.recv(d)?;
-        padded.set_slice_ax(axis, halo + len, &Tensor::from_vec(&fshape, buf));
+        padded.set_slice_ax_from(axis, halo + len, halo, &buf);
     }
     Ok(padded)
 }
@@ -100,74 +130,219 @@ pub fn exchange_backward_axis(
     let lp = dx_padded.shape()[axis];
     let len = lp - 2 * halo;
     let ax = (axis - 2) as u8;
+    let felems = dx_padded.numel() / lp * halo;
     // grads that live in my padding belong to the neighbours' interiors
     if let Some(u) = lo {
-        let face = dx_padded.slice_ax(axis, 0, halo);
-        ep.counters().add_halo_bytes(ax as usize, (face.numel() * 4) as u64);
-        ep.send_tagged(u, face.into_vec(), MsgTag::Halo(ax));
+        let mut face = vec![0.0f32; felems];
+        dx_padded.slice_ax_into(axis, 0, halo, &mut face);
+        ep.counters().add_halo_bytes(ax as usize, (felems * 4) as u64);
+        ep.send_tagged(u, face, MsgTag::Halo(ax));
     }
     if let Some(d) = hi {
-        let face = dx_padded.slice_ax(axis, halo + len, halo);
-        ep.counters().add_halo_bytes(ax as usize, (face.numel() * 4) as u64);
-        ep.send_tagged(d, face.into_vec(), MsgTag::Halo(ax));
+        let mut face = vec![0.0f32; felems];
+        dx_padded.slice_ax_into(axis, halo + len, halo, &mut face);
+        ep.counters().add_halo_bytes(ax as usize, (felems * 4) as u64);
+        ep.send_tagged(d, face, MsgTag::Halo(ax));
     }
     let mut dx = dx_padded.crop_ax(axis, halo, halo);
-    let mut fshape = dx.shape().to_vec();
-    fshape[axis] = halo;
     // … and the neighbours' padding grads accumulate into my boundary.
     if let Some(u) = lo {
         // lo neighbour's *far* padding overlaps my first `halo` faces
         let buf = ep.recv(u)?;
-        dx.add_slice_ax(axis, 0, &Tensor::from_vec(&fshape, buf));
+        dx.add_slice_ax_from(axis, 0, halo, &buf);
     }
     if let Some(d) = hi {
         let buf = ep.recv(d)?;
-        dx.add_slice_ax(axis, len - halo, &Tensor::from_vec(&fshape, buf));
+        dx.add_slice_ax_from(axis, len - halo, halo, &buf);
     }
     Ok(dx)
 }
 
-/// Forward halo exchange over a 3D process grid: one sequential face
-/// exchange per axis with `pad_axes[a]` set (D, then H, then W). Axes the
-/// plan's executables pad internally keep `pad_axes[a] = false`; the
-/// depth-only engine is `[true, false, false]`, grid plans are all-true.
+/// Face-block geometry for the fused exchange of axis `a`: per-axis
+/// `(off, len)` of the hyperslab orthogonal to `a` inside the fully
+/// padded buffer, matching what the sequential per-axis composition would
+/// send at that point — axes exchanged *before* `a` contribute their full
+/// padded extent, axes exchanged *after* only their interior. Entries for
+/// axis `a` itself are placeholders `(0, halo)`; callers set `off[a]`.
+fn face_box(s: &[usize], halo: usize, pad_axes: [bool; 3], a: usize)
+            -> ([usize; 3], [usize; 3]) {
+    let mut off = [0usize; 3];
+    let mut len = [0usize; 3];
+    for j in 0..3 {
+        (off[j], len[j]) = if j == a {
+            (0, halo)
+        } else if !pad_axes[j] {
+            (0, s[2 + j])
+        } else if j < a {
+            (0, s[2 + j] + 2 * halo)
+        } else {
+            (halo, s[2 + j])
+        };
+    }
+    (off, len)
+}
+
+/// Forward halo exchange over a 3D process grid: the sequential per-axis
+/// exchange (D, then H, then W over the axes with `pad_axes[a]` set),
+/// fused into one padded buffer. Axes the plan's executables pad
+/// internally keep `pad_axes[a] = false`; the depth-only engine is
+/// `[true, false, false]`, grid plans are all-true.
+///
+/// With `pool` set, the padded result and all transient send buffers come
+/// from / return to the per-rank [`BufferPool`]; the caller owns the
+/// returned tensor and should recycle it when done.
 pub fn exchange_forward_grid(
     ep: &dyn Communicator,
     shard: &Tensor,
     halo: usize,
     nbrs: &GridNeighbors,
     pad_axes: [bool; 3],
+    pool: Option<&BufferPool>,
 ) -> Result<Tensor> {
-    let mut out: Option<Tensor> = None;
+    let h = halo;
+    let s = shard.shape().to_vec();
+    if h == 0 || !pad_axes.iter().any(|&p| p) {
+        return Ok(match pool {
+            Some(p) => p.take_clone(shard),
+            None => shard.clone(),
+        });
+    }
+    let mut pshape = s.clone();
     for a in 0..3 {
         if pad_axes[a] {
-            let src = out.as_ref().unwrap_or(shard);
-            out = Some(exchange_forward_axis(ep, src, 2 + a, halo,
-                                             nbrs.lo[a], nbrs.hi[a])?);
+            assert!(s[2 + a] >= h,
+                    "shard axis {} extent {} < halo {h} (over-decomposed)",
+                    2 + a, s[2 + a]);
+            pshape[2 + a] += 2 * h;
         }
     }
-    Ok(out.unwrap_or_else(|| shard.clone()))
+    // One zero-filled buffer of the final shape; boundary faces that no
+    // exchange below writes stay zero — the global "same" padding.
+    let mut padded = match pool {
+        Some(p) => p.take_tensor_zeroed(&pshape),
+        None => Tensor::zeros(&pshape),
+    };
+    let int_off = [0, 1, 2].map(|a| if pad_axes[a] { h } else { 0 });
+    padded.set_block3_from(int_off, [s[2], s[3], s[4]], shard.data());
+
+    for a in 0..3 {
+        if !pad_axes[a] || (nbrs.lo[a].is_none() && nbrs.hi[a].is_none()) {
+            continue;
+        }
+        let (base, len) = face_box(&s, h, pad_axes, a);
+        let elems = s[0] * s[1] * len[0] * len[1] * len[2];
+        let sa = s[2 + a];
+        // pack + send my boundary interior faces (non-blocking) …
+        if let Some(u) = nbrs.lo[a] {
+            let mut off = base;
+            off[a] = h;
+            let mut buf = take_buf(pool, elems);
+            padded.block3_into(off, len, &mut buf);
+            ep.counters().add_halo_bytes(a, (elems * 4) as u64);
+            ep.send_tagged(u, buf, MsgTag::Halo(a as u8));
+        }
+        if let Some(d) = nbrs.hi[a] {
+            let mut off = base;
+            off[a] = sa;
+            let mut buf = take_buf(pool, elems);
+            padded.block3_into(off, len, &mut buf);
+            ep.counters().add_halo_bytes(a, (elems * 4) as u64);
+            ep.send_tagged(d, buf, MsgTag::Halo(a as u8));
+        }
+        // … then unpack the neighbours' faces straight into my halo slots.
+        if let Some(u) = nbrs.lo[a] {
+            let buf = ep.recv(u)?;
+            let mut off = base;
+            off[a] = 0;
+            padded.set_block3_from(off, len, &buf);
+            put_buf(pool, buf);
+        }
+        if let Some(d) = nbrs.hi[a] {
+            let buf = ep.recv(d)?;
+            let mut off = base;
+            off[a] = h + sa;
+            padded.set_block3_from(off, len, &buf);
+            put_buf(pool, buf);
+        }
+    }
+    Ok(padded)
 }
 
 /// Backward (transpose) halo exchange over a 3D process grid: the exact
 /// adjoint of [`exchange_forward_grid`], so the axes run in reverse order
-/// (W, then H, then D).
+/// (W, then H, then D). Takes the padded gradient *by value* — faces are
+/// packed from and accumulated into it in place, and the interior is
+/// extracted once at the end (its storage is recycled into `pool` when
+/// one is provided).
 pub fn exchange_backward_grid(
     ep: &dyn Communicator,
-    dx_padded: &Tensor,
+    dx_padded: Tensor,
     halo: usize,
     nbrs: &GridNeighbors,
     pad_axes: [bool; 3],
+    pool: Option<&BufferPool>,
 ) -> Result<Tensor> {
-    let mut out: Option<Tensor> = None;
-    for a in (0..3).rev() {
+    let h = halo;
+    if h == 0 || !pad_axes.iter().any(|&p| p) {
+        return Ok(dx_padded);
+    }
+    let mut s = dx_padded.shape().to_vec();
+    for a in 0..3 {
         if pad_axes[a] {
-            let src = out.as_ref().unwrap_or(dx_padded);
-            out = Some(exchange_backward_axis(ep, src, 2 + a, halo,
-                                              nbrs.lo[a], nbrs.hi[a])?);
+            s[2 + a] -= 2 * h;
         }
     }
-    Ok(out.unwrap_or_else(|| dx_padded.clone()))
+    let mut g = dx_padded;
+    for a in (0..3).rev() {
+        if !pad_axes[a] || (nbrs.lo[a].is_none() && nbrs.hi[a].is_none()) {
+            continue;
+        }
+        let (base, len) = face_box(&s, h, pad_axes, a);
+        let elems = s[0] * s[1] * len[0] * len[1] * len[2];
+        let sa = s[2 + a];
+        // grads in my padding belong to the neighbours' interiors …
+        if let Some(u) = nbrs.lo[a] {
+            let mut off = base;
+            off[a] = 0;
+            let mut buf = take_buf(pool, elems);
+            g.block3_into(off, len, &mut buf);
+            ep.counters().add_halo_bytes(a, (elems * 4) as u64);
+            ep.send_tagged(u, buf, MsgTag::Halo(a as u8));
+        }
+        if let Some(d) = nbrs.hi[a] {
+            let mut off = base;
+            off[a] = h + sa;
+            let mut buf = take_buf(pool, elems);
+            g.block3_into(off, len, &mut buf);
+            ep.counters().add_halo_bytes(a, (elems * 4) as u64);
+            ep.send_tagged(d, buf, MsgTag::Halo(a as u8));
+        }
+        // … and the neighbours' padding grads accumulate into my boundary.
+        if let Some(u) = nbrs.lo[a] {
+            let buf = ep.recv(u)?;
+            let mut off = base;
+            off[a] = h;
+            g.add_block3_from(off, len, &buf);
+            put_buf(pool, buf);
+        }
+        if let Some(d) = nbrs.hi[a] {
+            let buf = ep.recv(d)?;
+            let mut off = base;
+            off[a] = sa;
+            g.add_block3_from(off, len, &buf);
+            put_buf(pool, buf);
+        }
+    }
+    let int_off = [0, 1, 2].map(|a| if pad_axes[a] { h } else { 0 });
+    let mut dx = match pool {
+        Some(p) => p.take_tensor(&s),
+        None => Tensor::zeros(&s),
+    };
+    g.block3_into(int_off, [s[2], s[3], s[4]], dx.data_mut());
+    if let Some(p) = pool {
+        p.recycle(g);
+    }
+    Ok(dx)
 }
 
 /// Depth-only forward exchange (axis 2) — the 1D special case.
@@ -213,7 +388,7 @@ mod tests {
             let mut data = vec![0.0f32; 2 * 3 * d * 2 * 2];
             rng.fill_normal(&mut data, 1.0);
             let global = Tensor::from_vec(&[2, 3, d, 2, 2], data);
-            let global_padded = global.pad_d(1, 1);
+            let global_padded = global.pad_ax(2, 1, 1);
 
             let eps = world(ways);
             let padded: Vec<Tensor> = thread::scope(|s| {
@@ -221,7 +396,7 @@ mod tests {
                     .into_iter()
                     .enumerate()
                     .map(|(r, ep)| {
-                        let shard = global.slice_d(r * sh, sh);
+                        let shard = global.slice_ax(2, r * sh, sh);
                         let (up, down) = (topo.up(r), topo.down(r));
                         s.spawn(move || {
                             exchange_forward(&ep, &shard, 1, up, down).unwrap()
@@ -231,7 +406,7 @@ mod tests {
                 hs.into_iter().map(|h| h.join().unwrap()).collect()
             });
             for (r, p) in padded.iter().enumerate() {
-                let want = global_padded.slice_d(r * sh, sh + 2);
+                let want = global_padded.slice_ax(2, r * sh, sh + 2);
                 assert_eq!(p, &want, "ways={ways} rank={r}");
             }
         }
@@ -255,7 +430,7 @@ mod tests {
                     let nbrs = topo.neighbors(r);
                     s.spawn(move || {
                         exchange_forward_grid(&ep, &shard, halo, &nbrs,
-                                              [true, true, true])
+                                              [true, true, true], None)
                         .unwrap()
                     })
                 })
@@ -264,8 +439,8 @@ mod tests {
         })
     }
 
-    /// The sequential per-axis exchange reproduces the globally padded
-    /// volume *exactly* — corners and edges included — on true 3D grids.
+    /// The fused per-axis exchange reproduces the globally padded volume
+    /// *exactly* — corners and edges included — on true 3D grids.
     #[test]
     fn grid_forward_reassembles_global_padding() {
         let mut rng = Pcg::new(3, 0);
@@ -315,7 +490,7 @@ mod tests {
                 .into_iter()
                 .enumerate()
                 .map(|(r, ep)| {
-                    let shard = x.slice_d(r * sh, sh);
+                    let shard = x.slice_ax(2, r * sh, sh);
                     let y = ys[r].clone();
                     let (up, down) = (topo.up(r), topo.down(r));
                     s.spawn(move || {
@@ -340,7 +515,7 @@ mod tests {
             .iter()
             .enumerate()
             .map(|(r, b)| {
-                let shard = x.slice_d(r * sh, sh);
+                let shard = x.slice_ax(2, r * sh, sh);
                 b.data()
                     .iter()
                     .zip(shard.data())
@@ -387,10 +562,10 @@ mod tests {
                         let nbrs = topo.neighbors(r);
                         s.spawn(move || {
                             let f = exchange_forward_grid(&ep, &shard, 1, &nbrs,
-                                                          [true, true, true])
+                                                          [true, true, true], None)
                                 .unwrap();
-                            let b = exchange_backward_grid(&ep, &y, 1, &nbrs,
-                                                           [true, true, true])
+                            let b = exchange_backward_grid(&ep, y, 1, &nbrs,
+                                                           [true, true, true], None)
                                 .unwrap();
                             (f, b)
                         })
@@ -425,6 +600,136 @@ mod tests {
         });
     }
 
+    /// The fused grid exchange is bit-identical to composing the per-axis
+    /// functions sequentially (D,H,W forward; W,H,D backward), pooled or
+    /// not — the invariant that keeps every `*_bytes` counter and every
+    /// training trajectory unchanged by the fused rewrite.
+    #[test]
+    fn prop_fused_matches_sequential_composition() {
+        prop::check("fused-vs-sequential", 10, |g| {
+            let grid = SpatialGrid::new(g.usize_in(1, 2), g.usize_in(1, 2),
+                                        g.usize_in(1, 2));
+            let sh = [g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(2, 3)];
+            let c = g.usize_in(1, 2);
+            let topo = GridTopology::new(1, grid);
+            let shards: Vec<Tensor> = (0..grid.ways())
+                .map(|_| {
+                    Tensor::from_vec(&[1, c, sh[0], sh[1], sh[2]],
+                                     g.vec_f32(c * sh[0] * sh[1] * sh[2], 1.0))
+                })
+                .collect();
+            let ys: Vec<Tensor> = (0..grid.ways())
+                .map(|_| {
+                    let ps = [sh[0] + 2, sh[1] + 2, sh[2] + 2];
+                    Tensor::from_vec(&[1, c, ps[0], ps[1], ps[2]],
+                                     g.vec_f32(c * ps[0] * ps[1] * ps[2], 1.0))
+                })
+                .collect();
+            let run = |fused: bool, pooled: bool| -> (Vec<Tensor>, Vec<Tensor>) {
+                let eps = world(grid.ways());
+                thread::scope(|s| {
+                    let hs: Vec<_> = eps
+                        .into_iter()
+                        .enumerate()
+                        .map(|(r, ep)| {
+                            let shard = shards[r].clone();
+                            let y = ys[r].clone();
+                            let nbrs = topo.neighbors(r);
+                            s.spawn(move || {
+                                if fused {
+                                    let pool = BufferPool::new();
+                                    let pl = pooled.then_some(&pool);
+                                    let f = exchange_forward_grid(
+                                        &ep, &shard, 1, &nbrs, [true, true, true],
+                                        pl).unwrap();
+                                    let b = exchange_backward_grid(
+                                        &ep, y, 1, &nbrs, [true, true, true],
+                                        pl).unwrap();
+                                    (f, b)
+                                } else {
+                                    let mut f = shard;
+                                    for a in 0..3 {
+                                        f = exchange_forward_axis(
+                                            &ep, &f, 2 + a, 1,
+                                            nbrs.lo[a], nbrs.hi[a]).unwrap();
+                                    }
+                                    let mut b = y;
+                                    for a in (0..3).rev() {
+                                        b = exchange_backward_axis(
+                                            &ep, &b, 2 + a, 1,
+                                            nbrs.lo[a], nbrs.hi[a]).unwrap();
+                                    }
+                                    (f, b)
+                                }
+                            })
+                        })
+                        .collect();
+                    let pairs: Vec<_> =
+                        hs.into_iter().map(|h| h.join().unwrap()).collect();
+                    pairs.into_iter().unzip()
+                })
+            };
+            let (f_seq, b_seq) = run(false, false);
+            for pooled in [false, true] {
+                let (f_fused, b_fused) = run(true, pooled);
+                for r in 0..grid.ways() {
+                    if f_fused[r] != f_seq[r] {
+                        return Err(format!("fwd mismatch rank {r} (pooled={pooled})"));
+                    }
+                    if b_fused[r] != b_seq[r] {
+                        return Err(format!("bwd mismatch rank {r} (pooled={pooled})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// After one warm-up round-trip, pooled exchanges run entirely off the
+    /// free lists: zero pool misses — the zero-alloc steady-state claim.
+    #[test]
+    fn pooled_exchange_zero_misses_after_warmup() {
+        let grid = SpatialGrid::new(2, 2, 2);
+        let topo = GridTopology::new(1, grid);
+        let mut rng = Pcg::new(11, 0);
+        let shards: Vec<Tensor> = (0..8)
+            .map(|_| {
+                let mut v = vec![0.0f32; 2 * 3 * 3 * 3];
+                rng.fill_normal(&mut v, 1.0);
+                Tensor::from_vec(&[1, 2, 3, 3, 3], v)
+            })
+            .collect();
+        let eps = world(8);
+        let misses: Vec<u64> = thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(r, ep)| {
+                    let shard = shards[r].clone();
+                    let nbrs = topo.neighbors(r);
+                    s.spawn(move || {
+                        let pool = BufferPool::new();
+                        for round in 0..3 {
+                            if round == 1 {
+                                pool.reset_counters();
+                            }
+                            let f = exchange_forward_grid(
+                                &ep, &shard, 1, &nbrs, [true, true, true],
+                                Some(&pool)).unwrap();
+                            let dx = exchange_backward_grid(
+                                &ep, f, 1, &nbrs, [true, true, true],
+                                Some(&pool)).unwrap();
+                            pool.recycle(dx);
+                        }
+                        pool.misses()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(misses, vec![0; 8], "steady-state pool misses");
+    }
+
     /// Per-axis halo byte counters see exactly the face volume sent.
     #[test]
     fn halo_byte_counters_per_axis() {
@@ -443,7 +748,8 @@ mod tests {
                 let shard = global.block3([c[0] * 2, c[1] * 2, 0], [2, 2, 4]);
                 let nbrs = topo.neighbors(r);
                 s.spawn(move || {
-                    exchange_forward_grid(&ep, &shard, 1, &nbrs, [true, true, true])
+                    exchange_forward_grid(&ep, &shard, 1, &nbrs,
+                                          [true, true, true], None)
                         .unwrap();
                 });
             }

@@ -269,19 +269,26 @@ pub trait Communicator: Send {
     /// Gather variable-length f32 buffers to `group[0]`; returns Some(parts)
     /// on the root (in group order), None elsewhere.
     fn gather_to_root(&self, mine: &[f32], group: &[usize]) -> Result<Option<Vec<Vec<f32>>>> {
+        self.gather_to_root_vec(mine.to_vec(), group)
+    }
+
+    /// [`Communicator::gather_to_root`] taking the contribution by value —
+    /// non-roots hand their (possibly pooled) buffer straight to `send`
+    /// with no defensive copy.
+    fn gather_to_root_vec(&self, mine: Vec<f32>, group: &[usize]) -> Result<Option<Vec<Vec<f32>>>> {
         let me = index_in(group, self.rank());
         if group.len() > 1 {
             self.on_collective(Collective::GatherToRoot, mine.len(), group);
         }
         if me == 0 {
             let mut parts = Vec::with_capacity(group.len());
-            parts.push(mine.to_vec());
+            parts.push(mine);
             for &r in &group[1..] {
                 parts.push(self.recv(r)?);
             }
             Ok(Some(parts))
         } else {
-            self.send(group[0], mine.to_vec());
+            self.send(group[0], mine);
             Ok(None)
         }
     }
@@ -396,9 +403,13 @@ fn ring_reduce_scatter<C: Communicator + ?Sized>(
         // silently truncate, so fail loudly instead — a hard assert, since
         // release builds are exactly where silent corruption would hide.
         assert_eq!(incoming.len(), hi - lo, "ring schedule out of sync");
-        for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
-            *dst += src;
-        }
+        // per-element adds are independent, so threading keeps the result
+        // bit-identical (see util::par's determinism contract)
+        crate::util::par::zip_mut(&mut buf[lo..hi], &incoming, |d, s| {
+            for (dst, src) in d.iter_mut().zip(s) {
+                *dst += src;
+            }
+        });
     }
     Ok(())
 }

@@ -390,7 +390,7 @@ mod tests {
             assert_eq!(full, inputs[s]);
             // hyperslab == slice
             let shard = c.read_input_shard(s, 2, 4).unwrap();
-            assert_eq!(shard, inputs[s].slice_d(2, 4));
+            assert_eq!(shard, inputs[s].slice_ax(2, 2, 4));
         }
         // hyperslab reads touch only the bytes they need (per channel read)
         c.bytes_read.store(0, Ordering::Relaxed);
@@ -438,7 +438,7 @@ mod tests {
         let path = tmpfile("labels");
         write_dataset(&path, &inputs, &targets, Some(&labels)).unwrap();
         let c = Container::open(&path).unwrap();
-        assert_eq!(c.read_label_shard(1, 1, 2).unwrap(), labels[1].slice_d(1, 2));
+        assert_eq!(c.read_label_shard(1, 1, 2).unwrap(), labels[1].slice_ax(2, 1, 2));
         std::fs::remove_file(&path).ok();
     }
 

@@ -162,9 +162,9 @@ impl GrfDataset {
             assert!(n % sub == 0);
             let per = n / sub;
             for di in 0..per {
-                // extract (sub)^3 blocks; reuse slice_d for depth and
+                // extract (sub)^3 blocks; reuse slice_ax for depth and
                 // manual gather for h/w
-                let slab = x.slice_d(di * sub, sub);
+                let slab = x.slice_ax(2, di * sub, sub);
                 for hi in 0..per {
                     for wi in 0..per {
                         let mut block = Tensor::zeros(&[1, 1, sub, sub, sub]);

@@ -135,10 +135,17 @@ fn run_group(
     let sizes: Vec<usize> = info.params.iter().map(|(_, s)| s.iter().product()).collect();
     let mut overlap = OverlapAllreduce::for_rank(reduce, grad_ep, world_group.clone(), &sizes);
 
+    // gradient accumulators and the monolithic-allreduce flatten buffer are
+    // hoisted out of the step loop: steady-state steps reuse them in place
+    let mut grads: Vec<Tensor> =
+        info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+    let mut flat_scratch: Vec<f32> = Vec::new();
+
     for step in 0..opts.steps {
         let lr = opts.schedule.at(step);
-        let mut grads: Vec<Tensor> =
-            info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+        for g in grads.iter_mut() {
+            g.data_mut().fill(0.0);
+        }
         let mut loss_acc = 0.0f32;
 
         // micro-batches of the fused executable's lowered batch size
@@ -197,7 +204,7 @@ fn run_group(
         // scalar loss rides its own tiny allreduce in both strategies.
         let inv_g = 1.0 / opts.groups as f32;
         super::reduce_grads(ep.as_ref(), overlap.as_mut(), &mut grads,
-                            &world_group, &mut phases)?;
+                            &world_group, &mut phases, &mut flat_scratch)?;
         for g in grads.iter_mut() {
             g.scale(inv_g);
         }

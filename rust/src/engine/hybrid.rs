@@ -7,9 +7,10 @@
 //! split) and walks the per-layer shard executables of the AOT manifest in
 //! lockstep, with
 //!
-//! * **halo exchanges** around every conv — one face exchange per
-//!   partitioned axis, sequentially, which is exact for separable "same"
-//!   padding ([`crate::comm::halo`]),
+//! * **halo exchanges** around every conv — a fused pack/exchange/unpack
+//!   over all partitioned axes into one pooled padded buffer, bit-identical
+//!   to the sequential per-axis composition (exact for separable "same"
+//!   padding, [`crate::comm::halo`]),
 //! * **distributed batch-norm**: (sum, sumsq, count) partials allreduced
 //!   over all ranks of the instant batch before `bn_apply`, and the
 //!   matching (g1, g2) allreduce in backward,
@@ -38,6 +39,7 @@ use crate::data::container::Container;
 use crate::iosim::store::{AsyncStaging, DataStore, StoreSource};
 use crate::partition::{GridNeighbors, GridTopology, SpatialGrid};
 use crate::runtime::{LayerDesc, ModelInfo, RuntimeHandle};
+use crate::tensor::pool::BufferPool;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -101,13 +103,13 @@ impl SampleSource for InMemorySource {
         self.inputs.len()
     }
     fn input_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
-        Ok(self.inputs[sample].slice_d(d0, len))
+        Ok(self.inputs[sample].slice_ax(2, d0, len))
     }
     fn target_full(&self, sample: usize) -> Result<Tensor> {
         Ok(self.targets[sample].clone())
     }
     fn target_shard(&self, sample: usize, d0: usize, len: usize) -> Result<Tensor> {
-        Ok(self.targets[sample].slice_d(d0, len))
+        Ok(self.targets[sample].slice_ax(2, d0, len))
     }
 }
 
@@ -504,11 +506,21 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
     let mut records = Vec::new();
     let mut phases = PhaseTimes::default();
 
+    // Per-rank buffer pool: halo faces, padded activations, saved
+    // pre-activations and gather/scatter staging all cycle through it, so
+    // steady-state steps stop allocating on the hot path. Gradient
+    // accumulators are hoisted out of the step loop for the same reason.
+    let pool = BufferPool::new();
+    let mut grads: Vec<Tensor> =
+        cx.info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+    let mut flat_scratch: Vec<f32> = Vec::new();
+
     let mut io_exposed_total = 0.0f64;
     for step in 0..cx.opts.steps {
         let lr = cx.opts.schedule.at(step);
-        let mut grads: Vec<Tensor> =
-            cx.info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+        for g in grads.iter_mut() {
+            g.data_mut().fill(0.0);
+        }
         let mut loss_local = 0.0f32;
 
         // ---- staging: make this step's shards available ------------------
@@ -539,8 +551,9 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let x = h.take().unwrap();
                         let t = Instant::now();
                         let padded = halo::exchange_forward_grid(
-                            &cx.ep, &x, *hl, &nbrs, cx.pad_axes)?;
+                            &cx.ep, &x, *hl, &nbrs, cx.pad_axes, Some(&pool))?;
                         phases.halo += t.elapsed().as_secs_f64();
+                        pool.recycle(x);
                         let wi = cx.info.param_index(&format!("{tag}.w"))
                             .ok_or_else(|| anyhow!("no param {tag}.w"))?;
                         let t = Instant::now();
@@ -612,11 +625,13 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                     }
                     LayerDesc::Act { .. } => {
                         let x = h.take().unwrap();
-                        h = Some(x.leaky_relu(LEAKY_SLOPE));
+                        let mut y = pool.take_tensor(x.shape());
+                        x.leaky_relu_into(LEAKY_SLOPE, &mut y);
+                        h = Some(y);
                         saved.push(Saved::Act { pre: x });
                     }
                     LayerDesc::SaveSkip { slot, .. } => {
-                        skips.insert(*slot, h.as_ref().unwrap().clone());
+                        skips.insert(*slot, pool.take_clone(h.as_ref().unwrap()));
                         saved.push(Saved::Skip);
                     }
                     LayerDesc::ConcatSkip { slot, c_skip, .. } => {
@@ -624,6 +639,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let skip = skips.remove(slot)
                             .ok_or_else(|| anyhow!("missing skip {slot}"))?;
                         h = Some(Tensor::concat_c(&skip, &up_act));
+                        pool.recycle(skip);
+                        pool.recycle(up_act);
                         saved.push(Saved::Concat { c_skip: *c_skip });
                     }
                     LayerDesc::Flatten { .. } => {
@@ -631,9 +648,11 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let shard_shape = x.shape().to_vec();
                         let t = Instant::now();
                         let gathered =
-                            cx.ep.gather_to_root(x.data(), &group_ranks)?;
+                            cx.ep.gather_to_root_vec(x.into_vec(), &group_ranks)?;
                         phases.halo += t.elapsed().as_secs_f64();
-                        // reassemble the (D, H, W) block grid on the root
+                        // reassemble the (D, H, W) block grid on the root;
+                        // the received part buffers feed the pool that the
+                        // backward scatter draws its send blocks from
                         h = gathered.map(|parts| {
                             let (c, sd, sh, sw) = (shard_shape[1], shard_shape[2],
                                                    shard_shape[3], shard_shape[4]);
@@ -642,9 +661,10 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                             ]);
                             for (p, part) in parts.into_iter().enumerate() {
                                 let pc = grid.coords(p);
-                                let block = Tensor::from_vec(&shard_shape, part);
-                                full.set_block3(
-                                    [pc[0] * sd, pc[1] * sh, pc[2] * sw], &block);
+                                full.set_block3_from(
+                                    [pc[0] * sd, pc[1] * sh, pc[2] * sw],
+                                    [sd, sh, sw], &part);
+                                pool.put(part);
                             }
                             let flat = full.numel();
                             full.reshape(&[1, flat])
@@ -663,16 +683,17 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                             let mut pre = None;
                             let mut mask = None;
                             if *act {
-                                pre = Some(y.clone());
-                                y = y.leaky_relu(LEAKY_SLOPE);
+                                let mut a = pool.take_tensor(y.shape());
+                                y.leaky_relu_into(LEAKY_SLOPE, &mut a);
+                                pre = Some(y);
+                                y = a;
                             }
                             if *dropout {
                                 let layer_id = fc_index(&cx.info, tag) as u64;
                                 let m = dropout_mask(cx.opts.seed, instance, layer_id,
                                                      *fout,
                                                      cx.info.dropout_keep as f32);
-                                let mt = Tensor::from_vec(&[1, *fout], m.clone());
-                                y = y.mul_elem(&mt);
+                                y.mul_assign_slice(&m);
                                 mask = Some(m);
                             }
                             saved.push(Saved::Fc { x: Some(x), pre, mask });
@@ -722,27 +743,30 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                 }
             }
 
-            // ---- backward (reverse plan walk) ----------------------------
+            // ---- backward (reverse plan walk; saved state is consumed so
+            // its buffers return to the pool as soon as a layer is done) ----
             let mut dy = h; // gradient w.r.t. the loss input, from above
             let mut dskips: HashMap<usize, Tensor> = HashMap::new();
-            for (layer, sv) in cx.plan.iter().zip(saved.iter()).rev() {
+            for (layer, sv) in cx.plan.iter().zip(saved).rev() {
                 match (layer, sv) {
                     (LayerDesc::Mse { .. }, _) | (LayerDesc::Xent { .. }, _) => {}
                     (LayerDesc::Fc { tag, bwd, act, .. },
                      Saved::Fc { x, pre, mask }) => {
                         if let Some(x) = x {
                             let mut g = dy.take().unwrap();
-                            if let Some(m) = mask {
-                                g = g.mul_elem(&Tensor::from_vec(g.shape(), m.clone()));
+                            if let Some(m) = &mask {
+                                g.mul_assign_slice(m);
                             }
                             if *act {
-                                g = pre.as_ref().unwrap().leaky_relu_bwd(&g, LEAKY_SLOPE);
+                                let pre = pre.unwrap();
+                                pre.leaky_relu_bwd_inplace(&mut g, LEAKY_SLOPE);
+                                pool.recycle(pre);
                             }
                             let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
                             let bi = cx.info.param_index(&format!("{tag}.b")).unwrap();
                             let t = Instant::now();
                             let mut out = cx.rt.call(bwd.as_ref().unwrap(), vec![
-                                x.clone(), params[wi].clone(), g,
+                                x, params[wi].clone(), g,
                             ])?;
                             phases.bwd_compute += t.elapsed().as_secs_f64();
                             let db = out.remove(2);
@@ -754,7 +778,9 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         }
                     }
                     (LayerDesc::Flatten { .. }, Saved::Flatten { shard_shape }) => {
-                        // scatter the flat gradient back to the grid shards
+                        // scatter the flat gradient back to the grid shards;
+                        // send blocks come from the pool (fed by the forward
+                        // gather), so the root stays allocation-free
                         let t = Instant::now();
                         if is_root {
                             let g = dy.take().unwrap();
@@ -763,23 +789,30 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                             let dfull = g.reshape(&[
                                 1, c, sd * gdims[0], sh * gdims[1], sw * gdims[2],
                             ]);
+                            let blk = c * sd * sh * sw;
                             for p in (1..ways).rev() {
                                 let pc = grid.coords(p);
-                                let block = dfull.block3(
+                                let mut buf = pool.take(blk);
+                                dfull.block3_into(
                                     [pc[0] * sd, pc[1] * sh, pc[2] * sw],
-                                    [sd, sh, sw]);
-                                cx.ep.send(group_ranks[p], block.into_vec());
+                                    [sd, sh, sw], &mut buf);
+                                cx.ep.send(group_ranks[p], buf);
                             }
-                            dy = Some(dfull.block3([0, 0, 0], [sd, sh, sw]));
+                            let mut mine = pool.take_tensor(&shard_shape);
+                            dfull.block3_into([0, 0, 0], [sd, sh, sw],
+                                              mine.data_mut());
+                            pool.recycle(dfull);
+                            dy = Some(mine);
                         } else {
                             let buf = cx.ep.recv(group_ranks[0])?;
-                            dy = Some(Tensor::from_vec(shard_shape, buf));
+                            dy = Some(Tensor::from_vec(&shard_shape, buf));
                         }
                         phases.halo += t.elapsed().as_secs_f64();
                     }
                     (LayerDesc::ConcatSkip { slot, .. }, Saved::Concat { c_skip }) => {
                         let g = dy.take().unwrap();
-                        let (dskip, dup) = g.split_c(*c_skip);
+                        let (dskip, dup) = g.split_c(c_skip);
+                        pool.recycle(g);
                         dskips.insert(*slot, dskip);
                         dy = Some(dup);
                     }
@@ -787,12 +820,15 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let mut g = dy.take().unwrap();
                         if let Some(ds) = dskips.remove(slot) {
                             g.add_assign(&ds);
+                            pool.recycle(ds);
                         }
                         dy = Some(g);
                     }
                     (LayerDesc::Act { .. }, Saved::Act { pre }) => {
-                        let g = dy.take().unwrap();
-                        dy = Some(pre.leaky_relu_bwd(&g, LEAKY_SLOPE));
+                        let mut g = dy.take().unwrap();
+                        pre.leaky_relu_bwd_inplace(&mut g, LEAKY_SLOPE);
+                        pool.recycle(pre);
+                        dy = Some(g);
                     }
                     (LayerDesc::Bn { tag, c, bwd_partials, bwd_apply, .. },
                      Saved::Bn { x, mean, var, cnt }) => {
@@ -822,9 +858,9 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         }
                         let t = Instant::now();
                         let dx = cx.rt.call(bwd_apply.as_ref().unwrap(), vec![
-                            x.clone(), g, mean.clone(), var.clone(),
+                            x, g, mean, var,
                             params[gi].clone(), params[bi].clone(),
-                            g1, g2, Tensor::scalar(*cnt),
+                            g1, g2, Tensor::scalar(cnt),
                         ])?.remove(0);
                         phases.bwd_compute += t.elapsed().as_secs_f64();
                         dy = Some(dx);
@@ -834,9 +870,10 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let t = Instant::now();
                         let dx = if op == "max" {
                             cx.rt.call(bwd.as_ref().unwrap(), vec![
-                                x.clone(), y.clone().unwrap(), g,
+                                x, y.unwrap(), g,
                             ])?.remove(0)
                         } else {
+                            pool.recycle(x);
                             cx.rt.call(bwd.as_ref().unwrap(), vec![g])?.remove(0)
                         };
                         phases.bwd_compute += t.elapsed().as_secs_f64();
@@ -848,7 +885,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
                         let t = Instant::now();
                         let dw = cx.rt.call(bwd_filter.as_ref().unwrap(), vec![
-                            x.clone(), g.clone(),
+                            x, g.clone(),
                         ])?.remove(0);
                         let dx = cx.rt.call(bwd_data.as_ref().unwrap(), vec![
                             g, params[wi].clone(),
@@ -863,7 +900,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         let wi = cx.info.param_index(&format!("{tag}.w")).unwrap();
                         let t = Instant::now();
                         let dw = cx.rt.call(bwd_filter.as_ref().unwrap(), vec![
-                            padded.clone(), g.clone(),
+                            padded, g.clone(),
                         ])?.remove(0);
                         grads[wi].add_assign(&dw);
                         let dxp = cx.rt.call(bwd_data.as_ref().unwrap(), vec![
@@ -872,7 +909,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                         phases.bwd_compute += t.elapsed().as_secs_f64();
                         let t = Instant::now();
                         let dx = halo::exchange_backward_grid(
-                            &cx.ep, &dxp, *hl, &nbrs, cx.pad_axes)?;
+                            &cx.ep, dxp, *hl, &nbrs, cx.pad_axes, Some(&pool))?;
                         phases.halo += t.elapsed().as_secs_f64();
                         dy = Some(dx);
                     }
@@ -889,12 +926,17 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                     }
                 }
             }
-            let _ = (dy, loss_scale);
+            // the input gradient closes the pool cycle: next sample's
+            // backward draws its interior buffer from here
+            if let Some(d) = dy {
+                pool.recycle(d);
+            }
+            let _ = loss_scale;
         }
 
         // ---- gradient allreduce over the whole world (ring) --------------
         super::reduce_grads(cx.ep.as_ref(), overlap.as_mut(), &mut grads,
-                            &world_group, &mut phases)?;
+                            &world_group, &mut phases, &mut flat_scratch)?;
 
         // ---- optimizer (replicated, identical on every rank) -------------
         let t = Instant::now();

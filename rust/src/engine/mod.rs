@@ -41,12 +41,15 @@ pub const BN_EPS: f32 = 1e-5;
 /// hidden behind backward is exposed — otherwise run one blocking ring
 /// allreduce over the flattened gradients. Either way `grads` ends holding
 /// the group-wide sums and `phases` gets the allreduce attribution.
+/// `scratch` is the monolithic path's flatten buffer; callers hoist it out
+/// of the step loop so steady-state steps reuse one allocation.
 pub(crate) fn reduce_grads(
     ep: &dyn Communicator,
     overlap: Option<&mut OverlapAllreduce>,
     grads: &mut [Tensor],
     group: &[usize],
     phases: &mut PhaseTimes,
+    scratch: &mut Vec<f32>,
 ) -> Result<()> {
     match overlap {
         Some(ov) => {
@@ -55,18 +58,18 @@ pub(crate) fn reduce_grads(
             phases.allreduce_overlapped += rep.worker_secs;
         }
         None => {
-            let flat_len: usize = grads.iter().map(|g| g.numel()).sum();
-            let mut flat = Vec::with_capacity(flat_len);
+            scratch.clear();
+            scratch.reserve(grads.iter().map(|g| g.numel()).sum());
             for g in grads.iter() {
-                flat.extend_from_slice(g.data());
+                scratch.extend_from_slice(g.data());
             }
             let t = Instant::now();
-            ep.allreduce_sum(&mut flat, group)?;
+            ep.allreduce_sum(scratch, group)?;
             phases.allreduce += t.elapsed().as_secs_f64();
             let mut off = 0;
             for g in grads.iter_mut() {
                 let n = g.numel();
-                g.data_mut().copy_from_slice(&flat[off..off + n]);
+                g.data_mut().copy_from_slice(&scratch[off..off + n]);
                 off += n;
             }
         }

@@ -37,6 +37,7 @@ use crate::comm::{Communicator, Counters, MsgTag};
 use crate::data::container::Container;
 use crate::engine::hybrid::SampleSource;
 use crate::partition::GridTopology;
+use crate::tensor::pool::BufferPool;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -87,6 +88,9 @@ pub struct DataStore {
     cache: HashMap<usize, (Tensor, Tensor)>,
     /// per-step staging of shards fetched from owners
     staged: HashMap<usize, (Tensor, Tensor)>,
+    /// recycles last step's staged shards into this step's send copies and
+    /// own-sample stages, so steady-state redistribution stops allocating
+    pool: BufferPool,
     /// shard tensor shapes (known even when this rank owns no samples)
     x_shape: Vec<usize>,
     t_shape: Vec<usize>,
@@ -146,6 +150,7 @@ impl DataStore {
             shard_len,
             cache,
             staged: HashMap::new(),
+            pool: BufferPool::new(),
             x_shape,
             t_shape,
             ingest_bytes,
@@ -174,7 +179,12 @@ impl DataStore {
         assert_eq!(assignments.len(), self.topo.groups,
                    "assignments per group mismatch");
         let (my_group, pos) = self.topo.coords_of(self.rank);
-        self.staged.clear();
+        // retire last step's staging into the pool: those buffers become
+        // this step's send copies and own-sample stages
+        for (_, (x, t)) in self.staged.drain() {
+            self.pool.recycle(x);
+            self.pool.recycle(t);
+        }
         // send phase: for every sample I own that another group needs
         for (g, samples) in assignments.iter().enumerate() {
             for &s in samples {
@@ -187,8 +197,12 @@ impl DataStore {
                     let dst = self.topo.rank_of(g, pos);
                     let bytes = 4 * (x.numel() + t.numel()) as u64;
                     ep.counters().add_redist_bytes(bytes);
-                    ep.send_tagged(dst, x.data().to_vec(), MsgTag::Redist);
-                    ep.send_tagged(dst, t.data().to_vec(), MsgTag::Redist);
+                    let mut xb = self.pool.take(x.numel());
+                    xb.copy_from_slice(x.data());
+                    let mut tb = self.pool.take(t.numel());
+                    tb.copy_from_slice(t.data());
+                    ep.send_tagged(dst, xb, MsgTag::Redist);
+                    ep.send_tagged(dst, tb, MsgTag::Redist);
                     self.redist_bytes += bytes;
                 }
             }
@@ -202,7 +216,8 @@ impl DataStore {
                     .get(&s)
                     .ok_or_else(|| anyhow!("rank {}: sample {s} not cached",
                                            self.rank))?;
-                self.staged.insert(s, (x.clone(), t.clone()));
+                self.staged.insert(s, (self.pool.take_clone(x),
+                                       self.pool.take_clone(t)));
             } else {
                 let src = self.topo.rank_of(og, pos);
                 let xbuf = ep.recv(src)?;

@@ -156,7 +156,7 @@ mod tests {
                 s.spawn(move || {
                     let shard = Tensor::zeros(&[1, 1, 2, 2, 2]);
                     halo::exchange_forward_grid(&ep, &shard, 1, &nbrs,
-                                                [true, true, true])
+                                                [true, true, true], None)
                         .unwrap();
                 });
             }

@@ -13,7 +13,10 @@
 //! this is the same insight behind the paper's optimized halo pack/unpack
 //! CUDA kernels (§III-A), and it is benchmarked in `benches/micro.rs`.
 
+use crate::util::par;
 use anyhow::{bail, Result};
+
+pub mod pool;
 
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -92,32 +95,50 @@ impl Tensor {
 
     /// Copy out the slab `[i0, i0+len)` along spatial `axis`.
     pub fn slice_ax(&self, axis: usize, i0: usize, len: usize) -> Tensor {
-        let (outer, alen, inner) = self.axis_geom(axis);
-        assert!(i0 + len <= alen,
-                "slab [{i0}, {}) out of axis {axis} extent {alen}", i0 + len);
         let mut shape = self.shape.clone();
         shape[axis] = len;
         let mut out = Tensor::zeros(&shape);
+        self.slice_ax_into(axis, i0, len, &mut out.data);
+        out
+    }
+
+    /// Copy the slab `[i0, i0+len)` along spatial `axis` into the flat
+    /// buffer `out` (length `outer * len * inner`) — the zero-alloc pack
+    /// primitive behind pooled halo sends.
+    pub fn slice_ax_into(&self, axis: usize, i0: usize, len: usize, out: &mut [f32]) {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        assert!(i0 + len <= alen,
+                "slab [{i0}, {}) out of axis {axis} extent {alen}", i0 + len);
         let run = len * inner;
+        assert_eq!(out.len(), outer * run, "slice_ax_into buffer size");
         for o in 0..outer {
             let src = (o * alen + i0) * inner;
             let dst = o * run;
-            out.data[dst..dst + run].copy_from_slice(&self.data[src..src + run]);
+            out[dst..dst + run].copy_from_slice(&self.data[src..src + run]);
         }
-        out
     }
 
     /// Write `slab` into offset `i0` along spatial `axis` of self.
     pub fn set_slice_ax(&mut self, axis: usize, i0: usize, slab: &Tensor) {
-        let (outer, alen, inner) = self.axis_geom(axis);
+        let (outer, _, inner) = self.axis_geom(axis);
         let (souter, slen, sinner) = slab.axis_geom(axis);
-        assert!((souter, sinner) == (outer, inner) && i0 + slen <= alen,
+        assert!((souter, sinner) == (outer, inner),
                 "slab {:?} @{i0} (axis {axis}) into {:?}", slab.shape, self.shape);
-        let run = slen * inner;
+        self.set_slice_ax_from(axis, i0, slen, &slab.data);
+    }
+
+    /// Write the flat buffer `src` (slab layout, `outer * len * inner`) into
+    /// offset `i0` along spatial `axis` — the zero-alloc unpack primitive
+    /// behind pooled halo receives.
+    pub fn set_slice_ax_from(&mut self, axis: usize, i0: usize, len: usize, src: &[f32]) {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        let run = len * inner;
+        assert!(i0 + len <= alen && src.len() == outer * run,
+                "slab [{i0}, {}) (axis {axis}) into {:?}", i0 + len, self.shape);
         for o in 0..outer {
             let dst = (o * alen + i0) * inner;
-            let src = o * run;
-            self.data[dst..dst + run].copy_from_slice(&slab.data[src..src + run]);
+            let s = o * run;
+            self.data[dst..dst + run].copy_from_slice(&src[s..s + run]);
         }
     }
 
@@ -125,16 +146,25 @@ impl Tensor {
     /// reverse halo exchange (gradients of shared faces are summed into the
     /// owner).
     pub fn add_slice_ax(&mut self, axis: usize, i0: usize, slab: &Tensor) {
-        let (outer, alen, inner) = self.axis_geom(axis);
+        let (outer, _, inner) = self.axis_geom(axis);
         let (souter, slen, sinner) = slab.axis_geom(axis);
-        assert!((souter, sinner) == (outer, inner) && i0 + slen <= alen,
+        assert!((souter, sinner) == (outer, inner),
                 "slab {:?} @{i0} (axis {axis}) into {:?}", slab.shape, self.shape);
-        let run = slen * inner;
+        self.add_slice_ax_from(axis, i0, slen, &slab.data);
+    }
+
+    /// Accumulate the flat buffer `src` (slab layout) into offset `i0`
+    /// along spatial `axis` (flat-buffer variant of [`Tensor::add_slice_ax`]).
+    pub fn add_slice_ax_from(&mut self, axis: usize, i0: usize, len: usize, src: &[f32]) {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        let run = len * inner;
+        assert!(i0 + len <= alen && src.len() == outer * run,
+                "slab [{i0}, {}) (axis {axis}) into {:?}", i0 + len, self.shape);
         for o in 0..outer {
             let dst = (o * alen + i0) * inner;
-            let src = o * run;
+            let s = o * run;
             for i in 0..run {
-                self.data[dst + i] += slab.data[src + i];
+                self.data[dst + i] += src[s + i];
             }
         }
     }
@@ -159,6 +189,24 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// [`Tensor::pad_ax`] into a caller-provided (typically pooled) tensor
+    /// of the padded shape: zero faces + interior copy, no allocation.
+    pub fn pad_ax_into(&self, axis: usize, lo: usize, hi: usize, out: &mut Tensor) {
+        let (outer, alen, inner) = self.axis_geom(axis);
+        let (oo, olen, oi) = out.axis_geom(axis);
+        assert!((oo, olen, oi) == (outer, alen + lo + hi, inner),
+                "pad_ax_into {:?} +({lo},{hi}) axis {axis} into {:?}",
+                self.shape, out.shape);
+        for o in 0..outer {
+            let dst = o * olen * inner;
+            out.data[dst..dst + lo * inner].fill(0.0);
+            let src = o * alen * inner;
+            out.data[dst + lo * inner..dst + (lo + alen) * inner]
+                .copy_from_slice(&self.data[src..src + alen * inner]);
+            out.data[dst + (lo + alen) * inner..dst + olen * inner].fill(0.0);
+        }
+    }
+
     /// Drop `lo` faces from the front and `hi` from the back along `axis`.
     pub fn crop_ax(&self, axis: usize, lo: usize, hi: usize) -> Tensor {
         let (_, alen, _) = self.axis_geom(axis);
@@ -168,80 +216,90 @@ impl Tensor {
     /// Copy out the (D, H, W) sub-cuboid at `off` of extents `len` — the
     /// general hyperslab read behind the 3D-grid flatten scatter.
     pub fn block3(&self, off: [usize; 3], len: [usize; 3]) -> Tensor {
+        let (n, c, _, _, _) = self.dims5();
+        let mut out = Tensor::zeros(&[n, c, len[0], len[1], len[2]]);
+        self.block3_into(off, len, &mut out.data);
+        out
+    }
+
+    /// Copy the sub-cuboid at `off`/`len` into the flat buffer `out`
+    /// (block layout, `n*c*len[0]*len[1]*len[2]` elements) — the fused
+    /// halo-pack primitive: faces go straight into pooled send buffers.
+    pub fn block3_into(&self, off: [usize; 3], len: [usize; 3], out: &mut [f32]) {
         let (n, c, d, h, w) = self.dims5();
         assert!(off[0] + len[0] <= d && off[1] + len[1] <= h && off[2] + len[2] <= w,
                 "block @{off:?}+{len:?} out of {:?}", self.shape);
-        let mut out = Tensor::zeros(&[n, c, len[0], len[1], len[2]]);
+        assert_eq!(out.len(), n * c * len[0] * len[1] * len[2], "block3_into buffer");
         for nc in 0..n * c {
             for dd in 0..len[0] {
                 for hh in 0..len[1] {
                     let src = ((nc * d + off[0] + dd) * h + off[1] + hh) * w + off[2];
                     let dst = ((nc * len[0] + dd) * len[1] + hh) * len[2];
-                    out.data[dst..dst + len[2]]
-                        .copy_from_slice(&self.data[src..src + len[2]]);
+                    out[dst..dst + len[2]].copy_from_slice(&self.data[src..src + len[2]]);
                 }
             }
         }
-        out
     }
 
     /// Write `block` into the sub-cuboid at `off` (inverse of [`block3`]) —
     /// the 3D-grid flatten gather's reassembly step.
     pub fn set_block3(&mut self, off: [usize; 3], block: &Tensor) {
-        let (n, c, d, h, w) = self.dims5();
+        let (n, c, _, _, _) = self.dims5();
         let (bn, bc, bd, bh, bw) = block.dims5();
-        assert!((bn, bc) == (n, c)
-                    && off[0] + bd <= d && off[1] + bh <= h && off[2] + bw <= w,
-                "block {:?} @{off:?} into {:?}", block.shape, self.shape);
+        assert!((bn, bc) == (n, c), "block {:?} into {:?}", block.shape, self.shape);
+        self.set_block3_from(off, [bd, bh, bw], &block.data);
+    }
+
+    /// Write the flat buffer `src` (block layout) into the sub-cuboid at
+    /// `off`/`len` — the fused halo-unpack primitive: received bytes land
+    /// directly in the padded tensor.
+    pub fn set_block3_from(&mut self, off: [usize; 3], len: [usize; 3], src: &[f32]) {
+        let (n, c, d, h, w) = self.dims5();
+        assert!(off[0] + len[0] <= d && off[1] + len[1] <= h && off[2] + len[2] <= w,
+                "block @{off:?}+{len:?} into {:?}", self.shape);
+        assert_eq!(src.len(), n * c * len[0] * len[1] * len[2], "set_block3_from buffer");
         for nc in 0..n * c {
-            for dd in 0..bd {
-                for hh in 0..bh {
+            for dd in 0..len[0] {
+                for hh in 0..len[1] {
                     let dst = ((nc * d + off[0] + dd) * h + off[1] + hh) * w + off[2];
-                    let src = ((nc * bd + dd) * bh + hh) * bw;
-                    self.data[dst..dst + bw]
-                        .copy_from_slice(&block.data[src..src + bw]);
+                    let s = ((nc * len[0] + dd) * len[1] + hh) * len[2];
+                    self.data[dst..dst + len[2]].copy_from_slice(&src[s..s + len[2]]);
                 }
             }
         }
     }
 
-    // ---- depth-slab views (axis 2), the 1D special case -------------------
-
-    /// Copy out a depth slab `[d0, d0+len)` (axis 2) of an NCDHW tensor.
-    pub fn slice_d(&self, d0: usize, len: usize) -> Tensor {
-        self.slice_ax(2, d0, len)
+    /// Accumulate (`+=`) the flat buffer `src` (block layout) into the
+    /// sub-cuboid at `off`/`len` — the fused *backward* halo-unpack:
+    /// gradients of shared faces are summed into the owner in place.
+    pub fn add_block3_from(&mut self, off: [usize; 3], len: [usize; 3], src: &[f32]) {
+        let (n, c, d, h, w) = self.dims5();
+        assert!(off[0] + len[0] <= d && off[1] + len[1] <= h && off[2] + len[2] <= w,
+                "block @{off:?}+{len:?} into {:?}", self.shape);
+        assert_eq!(src.len(), n * c * len[0] * len[1] * len[2], "add_block3_from buffer");
+        for nc in 0..n * c {
+            for dd in 0..len[0] {
+                for hh in 0..len[1] {
+                    let dst = ((nc * d + off[0] + dd) * h + off[1] + hh) * w + off[2];
+                    let s = ((nc * len[0] + dd) * len[1] + hh) * len[2];
+                    for i in 0..len[2] {
+                        self.data[dst + i] += src[s + i];
+                    }
+                }
+            }
+        }
     }
 
-    /// Write `slab` into depth offset `d0` of self.
-    pub fn set_slice_d(&mut self, d0: usize, slab: &Tensor) {
-        self.set_slice_ax(2, d0, slab)
-    }
-
-    /// Accumulate (`+=`) `slab` into depth offset `d0`.
-    pub fn add_slice_d(&mut self, d0: usize, slab: &Tensor) {
-        self.add_slice_ax(2, d0, slab)
-    }
-
-    /// New tensor with `lo` zero planes before and `hi` after in depth.
-    pub fn pad_d(&self, lo: usize, hi: usize) -> Tensor {
-        self.pad_ax(2, lo, hi)
-    }
-
-    /// Drop `lo` planes from the front and `hi` from the back in depth.
-    pub fn crop_d(&self, lo: usize, hi: usize) -> Tensor {
-        self.crop_ax(2, lo, hi)
-    }
-
-    /// Concatenate along depth (axis 2).
-    pub fn concat_d(parts: &[&Tensor]) -> Tensor {
+    /// Concatenate along spatial `axis` (2=D, 3=H, 4=W).
+    pub fn concat_ax(axis: usize, parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty());
-        let (n, c, _, h, w) = parts[0].dims5();
-        let total: usize = parts.iter().map(|p| p.dims5().2).sum();
-        let mut out = Tensor::zeros(&[n, c, total, h, w]);
-        let mut d0 = 0;
+        let mut shape = parts[0].shape.clone();
+        shape[axis] = parts.iter().map(|p| p.shape[axis]).sum();
+        let mut out = Tensor::zeros(&shape);
+        let mut i0 = 0;
         for p in parts {
-            out.set_slice_d(d0, p);
-            d0 += p.dims5().2;
+            out.set_slice_ax(axis, i0, p);
+            i0 += p.shape[axis];
         }
         out
     }
@@ -284,24 +342,29 @@ impl Tensor {
     // ---- per-channel reductions (distributed batch-norm) ------------------
 
     /// (sum, sum of squares) per channel over (n, d, h, w).
+    ///
+    /// Channels are distributed over worker threads; each channel's
+    /// accumulation runs on one thread in ascending-sample order, exactly
+    /// as the serial loop would, so results are bit-identical for any
+    /// thread count (see `util::par`'s determinism contract).
     pub fn channel_stats(&self) -> (Vec<f32>, Vec<f32>) {
         let (n, c, d, h, w) = self.dims5();
         let block = d * h * w;
-        let mut s1 = vec![0.0f32; c];
-        let mut s2 = vec![0.0f32; c];
-        for i in 0..n {
-            for ch in 0..c {
+        let stats = par::map_indexed(c, n * block, |ch| {
+            let (mut c1, mut c2) = (0.0f32, 0.0f32);
+            for i in 0..n {
                 let off = (i * c + ch) * block;
                 let (mut a, mut b) = (0.0f64, 0.0f64);
                 for &v in &self.data[off..off + block] {
                     a += v as f64;
                     b += (v as f64) * (v as f64);
                 }
-                s1[ch] += a as f32;
-                s2[ch] += b as f32;
+                c1 += a as f32;
+                c2 += b as f32;
             }
-        }
-        (s1, s2)
+            (c1, c2)
+        });
+        stats.into_iter().unzip()
     }
 
     /// Elements per channel (n*d*h*w) — the BN `count` term.
@@ -313,40 +376,75 @@ impl Tensor {
     // ---- elementwise -----------------------------------------------------
 
     pub fn leaky_relu(&self, slope: f32) -> Tensor {
-        let data = self.data.iter().map(|&x| if x >= 0.0 { x } else { slope * x })
-            .collect();
-        Tensor { shape: self.shape.clone(), data }
+        let mut out = Tensor::zeros(&self.shape);
+        self.leaky_relu_into(slope, &mut out);
+        out
+    }
+
+    /// [`Tensor::leaky_relu`] into a caller-provided (typically pooled)
+    /// tensor of the same shape.
+    pub fn leaky_relu_into(&self, slope: f32, out: &mut Tensor) {
+        assert_eq!(self.shape, out.shape);
+        par::zip_mut(&mut out.data, &self.data, |d, s| {
+            for (y, &x) in d.iter_mut().zip(s) {
+                *y = if x >= 0.0 { x } else { slope * x };
+            }
+        });
     }
 
     /// dL/dx of leaky-ReLU given the *pre-activation* input.
     pub fn leaky_relu_bwd(&self, dy: &Tensor, slope: f32) -> Tensor {
+        let mut dx = dy.clone();
+        self.leaky_relu_bwd_inplace(&mut dx, slope);
+        dx
+    }
+
+    /// In-place [`Tensor::leaky_relu_bwd`]: `dy` (dL/dy) becomes dL/dx,
+    /// with `self` the saved pre-activation input.
+    pub fn leaky_relu_bwd_inplace(&self, dy: &mut Tensor, slope: f32) {
         assert_eq!(self.shape, dy.shape);
-        let data = self
-            .data
-            .iter()
-            .zip(&dy.data)
-            .map(|(&x, &g)| if x >= 0.0 { g } else { slope * g })
-            .collect();
-        Tensor { shape: self.shape.clone(), data }
+        par::zip_mut(&mut dy.data, &self.data, |d, s| {
+            for (g, &x) in d.iter_mut().zip(s) {
+                if x < 0.0 {
+                    *g *= slope;
+                }
+            }
+        });
     }
 
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        par::zip_mut(&mut self.data, &other.data, |d, s| {
+            for (a, b) in d.iter_mut().zip(s) {
+                *a += b;
+            }
+        });
     }
 
     pub fn scale(&mut self, s: f32) {
-        for v in &mut self.data {
-            *v *= s;
-        }
+        par::chunks_mut(&mut self.data, |c| {
+            for v in c.iter_mut() {
+                *v *= s;
+            }
+        });
     }
 
     pub fn mul_elem(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
-        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
-        Tensor { shape: self.shape.clone(), data }
+        let mut out = self.clone();
+        out.mul_assign_slice(&other.data);
+        out
+    }
+
+    /// Elementwise `self[i] *= other[i]` against a flat buffer — the
+    /// in-place dropout-mask apply (no mask `Tensor` materialized).
+    pub fn mul_assign_slice(&mut self, other: &[f32]) {
+        assert_eq!(self.data.len(), other.len(), "mul_assign_slice length");
+        par::zip_mut(&mut self.data, other, |d, s| {
+            for (a, b) in d.iter_mut().zip(s) {
+                *a *= b;
+            }
+        });
     }
 
     /// Max |a - b| — for tests and equivalence checks.
@@ -391,18 +489,18 @@ mod tests {
     #[test]
     fn slab_roundtrip() {
         let t = seq(&[2, 3, 8, 2, 2]);
-        let slab = t.slice_d(2, 4);
+        let slab = t.slice_ax(2, 2, 4);
         assert_eq!(slab.shape(), &[2, 3, 4, 2, 2]);
         let mut t2 = Tensor::zeros(t.shape());
-        t2.set_slice_d(2, &slab);
-        let back = t2.slice_d(2, 4);
+        t2.set_slice_ax(2, 2, &slab);
+        let back = t2.slice_ax(2, 2, 4);
         assert_eq!(back, slab);
     }
 
     #[test]
     fn slab_values_match_manual_index() {
         let t = seq(&[1, 2, 4, 2, 2]);
-        let slab = t.slice_d(1, 2);
+        let slab = t.slice_ax(2, 1, 2);
         // element (n=0, c=1, d=1(global d=2), h=1, w=0):
         let manual = t.data()[((0 * 2 + 1) * 4 + 2) * 4 + 2];
         let got = slab.data()[((0 * 2 + 1) * 2 + 1) * 4 + 2];
@@ -412,23 +510,23 @@ mod tests {
     #[test]
     fn pad_crop_inverse() {
         let t = seq(&[1, 2, 4, 3, 3]);
-        let p = t.pad_d(1, 2);
+        let p = t.pad_ax(2, 1, 2);
         assert_eq!(p.shape(), &[1, 2, 7, 3, 3]);
-        assert_eq!(p.crop_d(1, 2), t);
+        assert_eq!(p.crop_ax(2, 1, 2), t);
         // padding planes are zero
-        assert!(p.slice_d(0, 1).data().iter().all(|&x| x == 0.0));
-        assert!(p.slice_d(5, 2).data().iter().all(|&x| x == 0.0));
+        assert!(p.slice_ax(2, 0, 1).data().iter().all(|&x| x == 0.0));
+        assert!(p.slice_ax(2, 5, 2).data().iter().all(|&x| x == 0.0));
     }
 
     #[test]
     fn add_slice_accumulates() {
         let mut t = Tensor::zeros(&[1, 1, 4, 2, 2]);
         let ones = Tensor::from_vec(&[1, 1, 2, 2, 2], vec![1.0; 8]);
-        t.add_slice_d(1, &ones);
-        t.add_slice_d(2, &ones);
+        t.add_slice_ax(2, 1, &ones);
+        t.add_slice_ax(2, 2, &ones);
         let expect = [0.0, 1.0, 2.0, 1.0];
         for d in 0..4 {
-            assert!(t.slice_d(d, 1).data().iter().all(|&x| x == expect[d]));
+            assert!(t.slice_ax(2, d, 1).data().iter().all(|&x| x == expect[d]));
         }
     }
 
@@ -473,11 +571,69 @@ mod tests {
     }
 
     #[test]
-    fn depth_wrappers_equal_axis2() {
-        let t = seq(&[1, 2, 6, 3, 3]);
-        assert_eq!(t.slice_d(2, 3), t.slice_ax(2, 2, 3));
-        assert_eq!(t.pad_d(1, 1), t.pad_ax(2, 1, 1));
-        assert_eq!(t.crop_d(1, 2), t.crop_ax(2, 1, 2));
+    fn into_variants_match_allocating_ops() {
+        let t = seq(&[2, 3, 4, 5, 6]);
+        for axis in 2..=4 {
+            let ext = t.shape()[axis];
+            // slice_ax_into == slice_ax
+            let slab = t.slice_ax(axis, 1, ext - 2);
+            let mut flat = vec![-1.0; slab.numel()];
+            t.slice_ax_into(axis, 1, ext - 2, &mut flat);
+            assert_eq!(flat, slab.data(), "slice axis {axis}");
+            // set/add _from == Tensor variants
+            let mut a = Tensor::zeros(t.shape());
+            let mut b = Tensor::zeros(t.shape());
+            a.set_slice_ax(axis, 1, &slab);
+            b.set_slice_ax_from(axis, 1, ext - 2, &flat);
+            assert_eq!(a, b, "set axis {axis}");
+            a.add_slice_ax(axis, 1, &slab);
+            b.add_slice_ax_from(axis, 1, ext - 2, &flat);
+            assert_eq!(a, b, "add axis {axis}");
+            // pad_ax_into (over stale contents) == pad_ax
+            let p = t.pad_ax(axis, 1, 2);
+            let mut shape = t.shape().to_vec();
+            shape[axis] += 3;
+            let mut q = Tensor::from_vec(&shape, vec![9.0; p.numel()]);
+            t.pad_ax_into(axis, 1, 2, &mut q);
+            assert_eq!(q, p, "pad axis {axis}");
+        }
+    }
+
+    #[test]
+    fn block3_from_variants_match() {
+        let t = seq(&[2, 2, 4, 4, 4]);
+        let (off, len) = ([1, 0, 2], [2, 3, 2]);
+        let b = t.block3(off, len);
+        let mut flat = vec![-1.0; b.numel()];
+        t.block3_into(off, len, &mut flat);
+        assert_eq!(flat, b.data());
+        let mut x = Tensor::zeros(t.shape());
+        let mut y = Tensor::zeros(t.shape());
+        x.set_block3(off, &b);
+        y.set_block3_from(off, len, &flat);
+        assert_eq!(x, y);
+        y.add_block3_from(off, len, &flat);
+        let twice = y.block3(off, len);
+        for (a, b) in twice.data().iter().zip(b.data()) {
+            assert_eq!(*a, 2.0 * b);
+        }
+    }
+
+    #[test]
+    fn inplace_elementwise_matches() {
+        let t = seq(&[1, 1, 2, 3, 4]);
+        let pre = Tensor::from_vec(t.shape(), t.data().iter().map(|&x| x - 10.0).collect());
+        let mut dy = seq(&[1, 1, 2, 3, 4]);
+        let dx = pre.leaky_relu_bwd(&dy, 0.1);
+        pre.leaky_relu_bwd_inplace(&mut dy, 0.1);
+        assert_eq!(dy, dx);
+        let mut out = Tensor::zeros(t.shape());
+        pre.leaky_relu_into(0.1, &mut out);
+        assert_eq!(out, pre.leaky_relu(0.1));
+        let mask: Vec<f32> = (0..t.numel()).map(|i| (i % 2) as f32).collect();
+        let mut m = t.clone();
+        m.mul_assign_slice(&mask);
+        assert_eq!(m, t.mul_elem(&Tensor::from_vec(t.shape(), mask)));
     }
 
     #[test]
@@ -514,8 +670,8 @@ mod tests {
         assert_eq!(a2, a);
         assert_eq!(b2, b);
 
-        let parts = [a.slice_d(0, 1), a.slice_d(1, 1)];
-        let whole = Tensor::concat_d(&[&parts[0], &parts[1]]);
+        let parts = [a.slice_ax(2, 0, 1), a.slice_ax(2, 1, 1)];
+        let whole = Tensor::concat_ax(2, &[&parts[0], &parts[1]]);
         assert_eq!(whole, a);
     }
 

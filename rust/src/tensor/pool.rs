@@ -1,0 +1,161 @@
+//! Per-rank buffer pool: steady-state steps reuse every hot-path buffer.
+//!
+//! The hot path (halo exchange, activation saves, bucket staging, I/O
+//! staging) used to allocate fresh `Vec<f32>` storage on every step.
+//! [`BufferPool`] keeps free lists keyed by *exact* element count, so
+//! after a warm-up step every `take` is a free-list pop and the step
+//! performs zero heap allocations in the tensor/halo/bucket path — the
+//! property asserted by the pool-miss counter test and gated in CI via
+//! `micro.step_steady_pool_miss_count`.
+//!
+//! The pool is deliberately single-threaded (one pool per rank, ranks
+//! are threads/processes that never share one): `RefCell`/`Cell` keep
+//! it out of every atomic-ops fast path. Buffers returned by
+//! [`BufferPool::take`] contain stale data on a hit; callers that need
+//! zeros must use [`BufferPool::take_zeroed`] or overwrite fully.
+
+use super::Tensor;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+/// Most buffers kept per exact size class. Producer/consumer imbalances
+/// (e.g. a fresh runtime output recycled every step whose consumer hands
+/// its storage to the runtime) would otherwise grow a free list without
+/// bound; steady-state cycles need only a handful of buffers per class.
+const MAX_PER_CLASS: usize = 8;
+
+/// Exact-size free lists of `f32` buffers plus hit/miss counters.
+#[derive(Default)]
+pub struct BufferPool {
+    free: RefCell<HashMap<usize, Vec<Vec<f32>>>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+/// A [`Tensor`] checked out of a [`BufferPool`]. Thin alias used at API
+/// boundaries to document ownership: the callee is expected to
+/// [`BufferPool::recycle`] it (or hand it onward) rather than drop it.
+pub type PooledTensor = Tensor;
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a buffer of exactly `len` elements. Contents are
+    /// *unspecified* on a pool hit (stale data from the previous user);
+    /// a miss allocates zeroed storage.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        if let Some(buf) = self.free.borrow_mut().get_mut(&len).and_then(|l| l.pop()) {
+            self.hits.set(self.hits.get() + 1);
+            buf
+        } else {
+            self.misses.set(self.misses.get() + 1);
+            vec![0.0; len]
+        }
+    }
+
+    /// Check out a buffer of `len` elements, zero-filled.
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.take(len);
+        buf.fill(0.0);
+        buf
+    }
+
+    /// Return a buffer to the free list for its exact size (dropped if the
+    /// size class is already full — see [`MAX_PER_CLASS`]).
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.borrow_mut();
+        let list = free.entry(buf.len()).or_default();
+        if list.len() < MAX_PER_CLASS {
+            list.push(buf);
+        }
+    }
+
+    /// Check out a tensor of `shape` with *unspecified* contents.
+    pub fn take_tensor(&self, shape: &[usize]) -> PooledTensor {
+        let len = shape.iter().product();
+        Tensor::from_vec(shape, self.take(len))
+    }
+
+    /// Check out a tensor of `shape`, zero-filled.
+    pub fn take_tensor_zeroed(&self, shape: &[usize]) -> PooledTensor {
+        let len = shape.iter().product();
+        Tensor::from_vec(shape, self.take_zeroed(len))
+    }
+
+    /// Check out a bitwise copy of `src`.
+    pub fn take_clone(&self, src: &Tensor) -> PooledTensor {
+        let mut buf = self.take(src.numel());
+        buf.copy_from_slice(src.data());
+        Tensor::from_vec(src.shape(), buf)
+    }
+
+    /// Return a tensor's storage to the pool.
+    pub fn recycle(&self, t: Tensor) {
+        self.put(t.into_vec());
+    }
+
+    /// Free-list pops since construction / [`BufferPool::reset_counters`].
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Fresh allocations since construction / [`BufferPool::reset_counters`].
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn reset_counters(&self) {
+        self.hits.set(0);
+        self.misses.set(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_reuses_exact_sizes() {
+        let pool = BufferPool::new();
+        let a = pool.take(16);
+        let b = pool.take(32);
+        assert_eq!((pool.hits(), pool.misses()), (0, 2));
+        pool.put(a);
+        pool.put(b);
+        let a2 = pool.take(16);
+        assert_eq!(a2.len(), 16);
+        assert_eq!((pool.hits(), pool.misses()), (1, 2));
+        let _c = pool.take(17); // different size: miss
+        assert_eq!(pool.misses(), 3);
+    }
+
+    #[test]
+    fn take_zeroed_clears_stale_data() {
+        let pool = BufferPool::new();
+        let mut a = pool.take(8);
+        a.fill(7.0);
+        pool.put(a);
+        let b = pool.take_zeroed(8);
+        assert!(b.iter().all(|&x| x == 0.0));
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_clone() {
+        let pool = BufferPool::new();
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let c = pool.take_clone(&t);
+        assert_eq!(c.data(), t.data());
+        assert_eq!(c.shape(), t.shape());
+        pool.recycle(c);
+        let z = pool.take_tensor_zeroed(&[3, 2]);
+        assert!(z.data().iter().all(|&x| x == 0.0));
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(pool.misses(), 1);
+    }
+}

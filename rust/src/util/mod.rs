@@ -14,11 +14,13 @@
 //! * [`bench`] — micro-benchmark harness with warmup/median (`criterion`)
 //! * [`prop`] — seeded property-test runner (`proptest`)
 //! * [`fft`] — radix-2 complex FFT (1D/3D) for Gaussian random fields
+//! * [`par`] — fork/join helpers for intra-rank loops (`rayon`)
 
 pub mod bench;
 pub mod cli;
 pub mod fft;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,215 @@
+//! Intra-rank data parallelism on `std::thread::scope`.
+//!
+//! The vendored crate set has no `rayon`, so this is a purpose-built
+//! fork/join substrate for the per-element inner loops of the hot path
+//! (halo pack/unpack, elementwise activations, gradient-bucket sums).
+//!
+//! Determinism contract
+//! --------------------
+//! Every helper here partitions the *output* into disjoint contiguous
+//! ranges and runs the same scalar code on each range that the serial
+//! loop would run. No reductions are reordered across ranges: helpers
+//! either touch each element independently (`chunks_mut`, `zip_mut`,
+//! `for_units_mut`) or concatenate per-range results in index order
+//! (`map_indexed`). Results are therefore bit-identical for any thread
+//! count, including 1 — cross-rank training stays deterministic no
+//! matter what `HYDRA3D_THREADS` is set to.
+//!
+//! Small inputs (below [`PAR_CUTOFF`] elements) never spawn threads, so
+//! shard sizes typical of a many-way spatial grid keep the serial fast
+//! path and rank-per-thread harnesses (tests, `benches/micro.rs`) do
+//! not oversubscribe the machine.
+
+use std::sync::OnceLock;
+
+/// Below this many elements all helpers run serially: thread spawn +
+/// join costs more than the memory traffic it would hide.
+pub const PAR_CUTOFF: usize = 1 << 20;
+
+/// Worker-thread budget for one rank: `HYDRA3D_THREADS` if set, else
+/// `available_parallelism`, clamped to [1, 8].
+pub fn threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let n = std::env::var("HYDRA3D_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            });
+        n.clamp(1, 8)
+    })
+}
+
+/// Split `n` items into at most `threads()` contiguous ranges of
+/// near-equal size. Returns the list of `(start, end)` bounds.
+fn ranges(n: usize) -> Vec<(usize, usize)> {
+    let t = threads().min(n).max(1);
+    let base = n / t;
+    let rem = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Apply `f` to disjoint contiguous chunks covering `data`. Each element
+/// is visited exactly once; `f` must treat elements independently.
+pub fn chunks_mut<T: Send, F: Fn(&mut [T]) + Sync>(data: &mut [T], f: F) {
+    if data.len() < PAR_CUTOFF || threads() == 1 {
+        f(data);
+        return;
+    }
+    let bounds = ranges(data.len());
+    let mut rest: &mut [T] = data;
+    std::thread::scope(|s| {
+        for &(b0, b1) in &bounds {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(b1 - b0);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(head));
+        }
+    });
+}
+
+/// Apply `f` to aligned chunk pairs of `dst` and `src` (equal lengths).
+/// The workhorse for elementwise `dst[i] op= src[i]` loops.
+pub fn zip_mut<T: Send, U: Sync, F: Fn(&mut [T], &[U]) + Sync>(dst: &mut [T], src: &[U], f: F) {
+    assert_eq!(dst.len(), src.len(), "par::zip_mut length mismatch");
+    if dst.len() < PAR_CUTOFF || threads() == 1 {
+        f(dst, src);
+        return;
+    }
+    let bounds = ranges(dst.len());
+    let mut rest: &mut [T] = dst;
+    std::thread::scope(|s| {
+        for &(b0, b1) in &bounds {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(b1 - b0);
+            rest = tail;
+            let sl = &src[b0..b1];
+            let f = &f;
+            s.spawn(move || f(head, sl));
+        }
+    });
+}
+
+/// Split `data` into `data.len() / unit` whole blocks of `unit` elements
+/// and apply `f(unit_index, block)` to each, distributing whole units
+/// over threads. Used for per-(sample, channel) loops where a unit must
+/// stay on one thread to preserve its internal accumulation order.
+pub fn for_units_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], unit: usize, f: F) {
+    assert!(unit > 0 && data.len() % unit == 0, "par::for_units_mut bad unit");
+    let n_units = data.len() / unit;
+    if data.len() < PAR_CUTOFF || threads() == 1 {
+        for (u, block) in data.chunks_mut(unit).enumerate() {
+            f(u, block);
+        }
+        return;
+    }
+    let bounds = ranges(n_units);
+    let mut rest: &mut [T] = data;
+    std::thread::scope(|s| {
+        for &(b0, b1) in &bounds {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((b1 - b0) * unit);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || {
+                for (i, block) in head.chunks_mut(unit).enumerate() {
+                    f(b0 + i, block);
+                }
+            });
+        }
+    });
+}
+
+/// Compute `f(i)` for `i in 0..n` and return the results in index
+/// order. Each contiguous index range runs on one thread; the final
+/// vector is the in-order concatenation, so the output is identical to
+/// the serial `(0..n).map(f).collect()`.
+pub fn map_indexed<R: Send, F: Fn(usize) -> R + Sync>(n: usize, per_item: usize, f: F) -> Vec<R> {
+    if n * per_item.max(1) < PAR_CUTOFF || threads() == 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let bounds = ranges(n);
+    let mut parts: Vec<Vec<R>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(b0, b1)| {
+                let f = &f;
+                s.spawn(move || (b0..b1).map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par worker panicked"));
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_elements() {
+        let mut v: Vec<f32> = (0..(PAR_CUTOFF + 17)).map(|i| i as f32).collect();
+        chunks_mut(&mut v, |c| {
+            for x in c.iter_mut() {
+                *x += 1.0;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, (i + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn zip_matches_serial() {
+        let src: Vec<f32> = (0..(PAR_CUTOFF + 5)).map(|i| (i % 7) as f32).collect();
+        let mut a = vec![1.0f32; src.len()];
+        let mut b = a.clone();
+        zip_mut(&mut a, &src, |d, s| {
+            for (x, y) in d.iter_mut().zip(s) {
+                *x *= *y + 0.5;
+            }
+        });
+        for (x, y) in b.iter_mut().zip(&src) {
+            *x *= *y + 0.5;
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn units_get_correct_indices() {
+        let unit = 64;
+        let n_units = PAR_CUTOFF / unit + 3;
+        let mut v = vec![0usize; n_units * unit];
+        for_units_mut(&mut v, unit, |u, block| {
+            for x in block.iter_mut() {
+                *x = u;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i / unit);
+        }
+    }
+
+    #[test]
+    fn map_indexed_is_ordered() {
+        let n = PAR_CUTOFF / 128 + 11;
+        let out = map_indexed(n, 256, |i| i * 3);
+        assert_eq!(out.len(), n);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i * 3);
+        }
+    }
+}

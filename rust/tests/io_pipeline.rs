@@ -329,7 +329,7 @@ fn container_is_a_sample_source() {
     let c = Container::open(&path).unwrap();
     assert_eq!(SampleSource::len(&c), 3);
     let shard = c.input_shard(1, 2, 4).unwrap();
-    assert_eq!(shard, ds.inputs[1].slice_d(2, 4));
+    assert_eq!(shard, ds.inputs[1].slice_ax(2, 2, 4));
     // native 3D block path (no slab-then-crop)
     let block = SampleSource::input_shard3(&c, 1, [2, 0, 4], [4, 4, 4]).unwrap();
     assert_eq!(block, ds.inputs[1].block3([2, 0, 4], [4, 4, 4]));

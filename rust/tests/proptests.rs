@@ -23,19 +23,19 @@ fn prop_shard_pad_tiles_global() {
         let data = g.vec_f32(x.numel(), 1.0);
         x.data_mut().copy_from_slice(&data);
         let halo = 1;
-        let padded = x.pad_d(halo, halo);
+        let padded = x.pad_ax(2, halo, halo);
         for pos in 0..ways {
             // even split: axis_range degenerates to pos * dsh for d = ways * dsh
             let (start, len) = axis_range(d, ways, pos);
-            let want = padded.slice_d(start, len + 2 * halo);
+            let want = padded.slice_ax(2, start, len + 2 * halo);
             // reconstruct what exchange_forward produces locally:
-            let shard = x.slice_d(start, len);
-            let mut local = shard.pad_d(halo, halo);
+            let shard = x.slice_ax(2, start, len);
+            let mut local = shard.pad_ax(2, halo, halo);
             if pos > 0 {
-                local.set_slice_d(0, &x.slice_d(start - halo, halo));
+                local.set_slice_ax(2, 0, &x.slice_ax(2, start - halo, halo));
             }
             if pos + 1 < ways {
-                local.set_slice_d(halo + len, &x.slice_d(start + len, halo));
+                local.set_slice_ax(2, halo + len, &x.slice_ax(2, start + len, halo));
             }
             if local != want {
                 return Err(format!("ways={ways} pos={pos} mismatch"));
@@ -357,23 +357,28 @@ fn prop_grf_parameter_sensitivity() {
     });
 }
 
-/// Tensor slab algebra: concat_d(slices) == identity for arbitrary splits.
+/// Tensor slab algebra: concat_ax(slices) == identity for arbitrary splits
+/// along every spatial axis.
 #[test]
 fn prop_concat_slices_identity() {
     prop::check("concat-identity", 60, |g| {
         let parts = g.usize_in(1, 5);
         let per = g.usize_in(1, 3);
-        let d = parts * per;
-        let shape = [1, g.usize_in(1, 3), d, g.usize_in(1, 3), g.usize_in(1, 3)];
+        let axis = 2 + g.usize_in(0, 2);
+        let n = parts * per;
+        let mut shape = [1, g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(1, 3),
+                         g.usize_in(1, 3)];
+        shape[axis] = n;
         let mut x = Tensor::zeros(&shape);
         let data = g.vec_f32(x.numel(), 2.0);
         x.data_mut().copy_from_slice(&data);
-        let slabs: Vec<Tensor> = (0..parts).map(|p| x.slice_d(p * per, per)).collect();
+        let slabs: Vec<Tensor> =
+            (0..parts).map(|p| x.slice_ax(axis, p * per, per)).collect();
         let refs: Vec<&Tensor> = slabs.iter().collect();
-        if Tensor::concat_d(&refs) == x {
+        if Tensor::concat_ax(axis, &refs) == x {
             Ok(())
         } else {
-            Err("concat(slice) != id".into())
+            Err(format!("concat(slice) != id along axis {axis}"))
         }
     });
 }
