@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Forbid allocating tensor-op forms inside the engines' step loops.
+
+The training hot path (PR "zero-alloc hot path") routes every per-step
+tensor movement through the buffer pool: `slice_ax_into`, `pad_ax_into`
+and `block3_into` write into pooled storage instead of allocating. The
+allocating originals (`slice_ax`, `pad_ax`, `block3`) are still the right
+call at setup time, but inside `run_rank` / `run_group` step loops they
+reintroduce a per-step allocation that the steady-state pool-miss bench
+gate was built to keep at zero.
+
+This lint brace-matches the bodies of `fn run_rank` and `fn run_group` in
+rust/src/engine/*.rs, then the `for step in ...` / `for _step in ...`
+loops inside them, and fails the build if an allocating form with a
+pooled `_into` variant appears there. Suppress a deliberate use with a
+`// hot-path-lint: allow` comment on the same line.
+
+Usage: python3 ci/hot_path_lint.py [engine_dir]
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Allocating forms that have a pooled `_into` counterpart in tensor/.
+# (`crop_ax` has no `_into` variant yet, so it is not banned.)
+BANNED = ["slice_ax", "pad_ax", "block3"]
+HOT_FNS = ["run_rank", "run_group"]
+SUPPRESS = "hot-path-lint: allow"
+
+
+def strip_noncode(line: str) -> str:
+    """Drop line comments and string literals so the patterns only match
+    code. (Block comments in these files are line-leading `//!`/`///`;
+    this is a lint, not a parser.)"""
+    line = re.sub(r'"(?:[^"\\]|\\.)*"', '""', line)
+    return line.split("//")[0]
+
+
+def match_block(text: str, open_idx: int) -> int:
+    """Index one past the `}` matching the `{` at open_idx."""
+    depth = 0
+    for i in range(open_idx, len(text)):
+        c = text[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    raise ValueError(f"unbalanced braces from offset {open_idx}")
+
+
+def fn_body_span(text: str, name: str):
+    """(start, end) offsets of `fn <name>`'s body, or None."""
+    m = re.search(rf"\bfn\s+{name}\b", text)
+    if not m:
+        return None
+    open_idx = text.index("{", m.end())
+    return open_idx, match_block(text, open_idx)
+
+
+def step_loop_spans(text: str, lo: int, hi: int):
+    """Spans of `for step in ...` / `for _step in ...` bodies in [lo, hi)."""
+    spans = []
+    for m in re.finditer(r"\bfor\s+_?step\b[^{]*", text[lo:hi]):
+        open_idx = text.index("{", lo + m.end() - 1)
+        spans.append((open_idx, match_block(text, open_idx)))
+    return spans
+
+
+def lint_file(path: Path):
+    text = path.read_text()
+    violations = []
+    for fn in HOT_FNS:
+        span = fn_body_span(text, fn)
+        if span is None:
+            continue
+        for lo, hi in step_loop_spans(text, *span):
+            body = text[lo:hi]
+            base_line = text[:lo].count("\n") + 1
+            for off, raw in enumerate(body.splitlines()):
+                if SUPPRESS in raw:
+                    continue
+                code = strip_noncode(raw)
+                for op in BANNED:
+                    if re.search(rf"\.{op}\(", code):
+                        violations.append(
+                            (path, base_line + off, fn, op, raw.strip())
+                        )
+    return violations
+
+
+def main() -> int:
+    engine_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "rust/src/engine")
+    files = sorted(engine_dir.glob("*.rs"))
+    if not files:
+        print(f"hot_path_lint: no .rs files under {engine_dir}", file=sys.stderr)
+        return 2
+    violations = []
+    for f in files:
+        violations.extend(lint_file(f))
+    if violations:
+        print("hot_path_lint: allocating tensor ops inside step loops:")
+        for path, line, fn, op, snippet in violations:
+            print(
+                f"  {path}:{line}: `.{op}(` in {fn}'s step loop — use "
+                f"`{op}_into` with a pooled buffer ({snippet})"
+            )
+        print(
+            f"\n{len(violations)} violation(s). If the allocation is "
+            f"deliberate, mark the line with `// {SUPPRESS}`."
+        )
+        return 1
+    checked = ", ".join(f.name for f in files)
+    print(f"hot_path_lint: ok ({checked})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,590 @@
+//! Schedule checks: the five static properties `hydra3d verify` enforces.
+//!
+//! All checks run over an extracted [`Schedule`](super::Schedule) — pure
+//! data, no live communicators — so a failed check names the exact rank,
+//! peer, tag and op instead of a hung process:
+//!
+//! 1. **Send/recv matching** — on every directed channel of a world, the
+//!    k-th send pairs with the k-th receive (FIFO, which is the channel
+//!    backend's delivery order). Pairs must agree on byte count and tag;
+//!    leftovers on either side are unmatched traffic.
+//! 2. **Collective agreement** — all member ranks of a group must issue
+//!    the group's collectives in identical order with identical reduce
+//!    sizes; a rank that skips, reorders or resizes one desynchronizes
+//!    the ring/recursive-doubling step loops.
+//! 3. **Tag discipline** — a send whose tag *class* (halo / redist /
+//!    scatter / generic) differs from what the paired receive expects is
+//!    traffic aliasing between subsystems on one world.
+//! 4. **Deadlock freedom** — executing the schedule abstractly
+//!    (non-blocking sends, blocking FIFO receives) must drain every
+//!    rank; stuck ranks are reported with their wait-for cycle.
+//! 5. **Pool discipline** — per-rank buffer-pool event logs must never
+//!    return one buffer twice nor touch a buffer that sits in a free
+//!    list (the runtime `debug_assert` catches the former only on the
+//!    step that trips it; the log check covers the whole schedule).
+
+use super::{Schedule, WorldOps};
+use crate::comm::{MsgTag, ScheduleOp};
+use crate::tensor::pool::PoolEvent;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Classes of schedule defects, one per enforced property violation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DefectKind {
+    /// A send with no receive to pair with.
+    UnmatchedSend,
+    /// A receive with no send to pair with.
+    UnmatchedRecv,
+    /// Paired send/recv disagree on element count.
+    ByteMismatch,
+    /// Paired send/recv carry different tags of the same class.
+    TagMismatch,
+    /// Paired send/recv carry tags of *different* classes — one
+    /// subsystem's traffic delivered to another's receive.
+    TagAliasing,
+    /// Group members disagree on collective order (or count).
+    CollectiveOrder,
+    /// Group members agree on order but disagree on a reduce size.
+    CollectiveSize,
+    /// The schedule cannot drain: a blocking receive waits forever.
+    Deadlock,
+    /// A pool buffer returned to a free list twice.
+    PoolDoubleReturn,
+    /// A pool buffer used while sitting in a free list.
+    PoolUseAfterReturn,
+}
+
+impl DefectKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DefectKind::UnmatchedSend => "unmatched-send",
+            DefectKind::UnmatchedRecv => "unmatched-recv",
+            DefectKind::ByteMismatch => "byte-mismatch",
+            DefectKind::TagMismatch => "tag-mismatch",
+            DefectKind::TagAliasing => "tag-aliasing",
+            DefectKind::CollectiveOrder => "collective-order",
+            DefectKind::CollectiveSize => "collective-size",
+            DefectKind::Deadlock => "deadlock",
+            DefectKind::PoolDoubleReturn => "pool-double-return",
+            DefectKind::PoolUseAfterReturn => "pool-use-after-return",
+        }
+    }
+}
+
+/// One detected schedule defect, with enough context to locate it: the
+/// world and rank it anchors to, the peer/tag of the offending op where
+/// applicable, the op rendered as text, and a free-form detail line.
+#[derive(Clone, Debug)]
+pub struct Defect {
+    pub kind: DefectKind,
+    pub world: String,
+    pub rank: usize,
+    pub peer: Option<usize>,
+    pub tag: Option<MsgTag>,
+    pub op: String,
+    pub detail: String,
+}
+
+impl fmt::Display for Defect {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] world {} rank {}", self.kind.name(), self.world, self.rank)?;
+        if let Some(p) = self.peer {
+            write!(f, " peer {p}")?;
+        }
+        if let Some(t) = self.tag {
+            write!(f, " tag {t}")?;
+        }
+        write!(f, ": {} — {}", self.op, self.detail)
+    }
+}
+
+fn op_text(op: &ScheduleOp) -> String {
+    match op {
+        ScheduleOp::Send { to, elems, tag } => {
+            format!("send {elems} f32 [{tag}] -> rank {to}")
+        }
+        ScheduleOp::Recv { from, elems, tag } => {
+            format!("recv {elems} f32 [{tag}] <- rank {from}")
+        }
+        ScheduleOp::Collective { op, elems, group } => {
+            format!("{op:?}({elems}) over {} rank(s)", group.len())
+        }
+    }
+}
+
+/// Run every check over every world (and the pool logs) of a schedule.
+pub fn check_schedule(s: &Schedule) -> Vec<Defect> {
+    let mut out = Vec::new();
+    for w in &s.worlds {
+        check_p2p_pairing(w, &mut out);
+        check_collectives(w, &mut out);
+        check_deadlock(w, &mut out);
+    }
+    for (rank, log) in s.pool_logs.iter().enumerate() {
+        check_pool(rank, log, &mut out);
+    }
+    out
+}
+
+/// Check 1 + 3: pair the k-th send on each directed channel with the
+/// k-th receive and compare element counts and tags.
+fn check_p2p_pairing(w: &WorldOps, out: &mut Vec<Defect>) {
+    let n = w.ranks.len();
+    for from in 0..n {
+        for to in 0..n {
+            if from == to {
+                continue;
+            }
+            let sends: Vec<(usize, MsgTag)> = w.ranks[from]
+                .iter()
+                .filter_map(|op| match op {
+                    ScheduleOp::Send { to: t, elems, tag } if *t == to => {
+                        Some((*elems, *tag))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let recvs: Vec<(usize, MsgTag)> = w.ranks[to]
+                .iter()
+                .filter_map(|op| match op {
+                    ScheduleOp::Recv { from: f, elems, tag } if *f == from => {
+                        Some((*elems, *tag))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let paired = sends.len().min(recvs.len());
+            for k in 0..paired {
+                let (se, st) = sends[k];
+                let (re, rt) = recvs[k];
+                if st != rt {
+                    let kind = if st.class() != rt.class() {
+                        DefectKind::TagAliasing
+                    } else {
+                        DefectKind::TagMismatch
+                    };
+                    out.push(Defect {
+                        kind,
+                        world: w.name.clone(),
+                        rank: from,
+                        peer: Some(to),
+                        tag: Some(st),
+                        op: format!("send #{k} {se} f32 [{st}] -> rank {to}"),
+                        detail: format!(
+                            "rank {to} expects [{rt}] on its matching receive"
+                        ),
+                    });
+                } else if se != re {
+                    out.push(Defect {
+                        kind: DefectKind::ByteMismatch,
+                        world: w.name.clone(),
+                        rank: from,
+                        peer: Some(to),
+                        tag: Some(st),
+                        op: format!("send #{k} {se} f32 [{st}] -> rank {to}"),
+                        detail: format!("rank {to} receives {re} f32 instead"),
+                    });
+                }
+            }
+            for (k, &(se, st)) in sends.iter().enumerate().skip(paired) {
+                out.push(Defect {
+                    kind: DefectKind::UnmatchedSend,
+                    world: w.name.clone(),
+                    rank: from,
+                    peer: Some(to),
+                    tag: Some(st),
+                    op: format!("send #{k} {se} f32 [{st}] -> rank {to}"),
+                    detail: format!(
+                        "rank {to} posts only {} receive(s) on this channel",
+                        recvs.len()
+                    ),
+                });
+            }
+            for (k, &(re, rt)) in recvs.iter().enumerate().skip(paired) {
+                out.push(Defect {
+                    kind: DefectKind::UnmatchedRecv,
+                    world: w.name.clone(),
+                    rank: to,
+                    peer: Some(from),
+                    tag: Some(rt),
+                    op: format!("recv #{k} {re} f32 [{rt}] <- rank {from}"),
+                    detail: format!(
+                        "rank {from} posts only {} send(s) on this channel",
+                        sends.len()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Check 2: every member of a collective group must issue the group's
+/// collectives in the same order with the same sizes.
+fn check_collectives(w: &WorldOps, out: &mut Vec<Defect>) {
+    type Seq = Vec<(crate::comm::Collective, usize)>;
+    let mut by_group: HashMap<Vec<usize>, HashMap<usize, Seq>> = HashMap::new();
+    for (r, stream) in w.ranks.iter().enumerate() {
+        for op in stream {
+            if let ScheduleOp::Collective { op: c, elems, group } = op {
+                if !group.contains(&r) {
+                    out.push(Defect {
+                        kind: DefectKind::CollectiveOrder,
+                        world: w.name.clone(),
+                        rank: r,
+                        peer: None,
+                        tag: None,
+                        op: op_text(op),
+                        detail: format!(
+                            "rank {r} issued a collective for a group it is \
+                             not a member of ({group:?})"
+                        ),
+                    });
+                    continue;
+                }
+                by_group
+                    .entry(group.clone())
+                    .or_default()
+                    .entry(r)
+                    .or_default()
+                    .push((*c, *elems));
+            }
+        }
+    }
+    for (group, members) in &by_group {
+        let empty: Seq = Vec::new();
+        let reference = members.get(&group[0]).unwrap_or(&empty);
+        for &m in group {
+            let seq = members.get(&m).unwrap_or(&empty);
+            if m == group[0] {
+                continue;
+            }
+            let shared = reference.len().min(seq.len());
+            let mut diverged = false;
+            for k in 0..shared {
+                let (rop, relems) = reference[k];
+                let (sop, selems) = seq[k];
+                if rop != sop {
+                    out.push(Defect {
+                        kind: DefectKind::CollectiveOrder,
+                        world: w.name.clone(),
+                        rank: m,
+                        peer: Some(group[0]),
+                        tag: None,
+                        op: format!("collective #{k}: {sop:?}({selems})"),
+                        detail: format!(
+                            "rank {} issues {rop:?}({relems}) at the same \
+                             position on group {group:?}",
+                            group[0]
+                        ),
+                    });
+                    diverged = true;
+                    break;
+                }
+                if relems != selems {
+                    out.push(Defect {
+                        kind: DefectKind::CollectiveSize,
+                        world: w.name.clone(),
+                        rank: m,
+                        peer: Some(group[0]),
+                        tag: None,
+                        op: format!("collective #{k}: {sop:?}({selems})"),
+                        detail: format!(
+                            "rank {} reduces {relems} f32 at the same \
+                             position on group {group:?}",
+                            group[0]
+                        ),
+                    });
+                    diverged = true;
+                    break;
+                }
+            }
+            if !diverged && reference.len() != seq.len() {
+                out.push(Defect {
+                    kind: DefectKind::CollectiveOrder,
+                    world: w.name.clone(),
+                    rank: m,
+                    peer: Some(group[0]),
+                    tag: None,
+                    op: format!("{} collective(s) on group {group:?}", seq.len()),
+                    detail: format!(
+                        "rank {} issues {} collective(s) on the same group",
+                        group[0],
+                        reference.len()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Check 4: abstract execution — sends never block, receives block on an
+/// empty per-channel FIFO, collective markers are free (the real
+/// collectives are already decomposed into the surrounding sends/recvs).
+/// If the system stops progressing before every stream drains, report
+/// the wait-for cycles / starvations among the stuck ranks.
+fn check_deadlock(w: &WorldOps, out: &mut Vec<Defect>) {
+    let n = w.ranks.len();
+    let mut pc = vec![0usize; n];
+    let mut queued: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for r in 0..n {
+            while let Some(op) = w.ranks[r].get(pc[r]) {
+                match op {
+                    ScheduleOp::Send { to, .. } => {
+                        *queued.entry((r, *to)).or_insert(0) += 1;
+                    }
+                    ScheduleOp::Recv { from, .. } => {
+                        let slot = queued.entry((*from, r)).or_insert(0);
+                        if *slot == 0 {
+                            break; // blocked: nothing queued on this channel
+                        }
+                        *slot -= 1;
+                    }
+                    ScheduleOp::Collective { .. } => {}
+                }
+                pc[r] += 1;
+                progress = true;
+            }
+        }
+    }
+
+    let stuck: Vec<usize> = (0..n).filter(|&r| pc[r] < w.ranks[r].len()).collect();
+    if stuck.is_empty() {
+        return;
+    }
+    // Each stuck rank blocks on exactly one receive; follow the wait-for
+    // edges to classify starvation (peer finished) vs genuine cycles.
+    let wait_on = |r: usize| -> (usize, MsgTag, String) {
+        match &w.ranks[r][pc[r]] {
+            ScheduleOp::Recv { from, elems, tag } => {
+                (*from, *tag, format!("recv {elems} f32 [{tag}] <- rank {from}"))
+            }
+            op => unreachable!("stuck on non-blocking op {op:?}"),
+        }
+    };
+    let is_stuck = |r: usize| pc[r] < w.ranks[r].len();
+    for &r in &stuck {
+        let (from, tag, op) = wait_on(r);
+        if !is_stuck(from) {
+            out.push(Defect {
+                kind: DefectKind::Deadlock,
+                world: w.name.clone(),
+                rank: r,
+                peer: Some(from),
+                tag: Some(tag),
+                op,
+                detail: format!(
+                    "rank {r} blocks forever: rank {from} completed its \
+                     schedule without sending the awaited message"
+                ),
+            });
+        }
+    }
+    // cycle detection on the out-degree-1 wait graph restricted to stuck
+    // ranks; report each cycle once, anchored at its smallest rank
+    let mut color = vec![0u8; n]; // 0 = unvisited, 1 = on path, 2 = done
+    for &start in &stuck {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut path = Vec::new();
+        let mut cur = start;
+        while is_stuck(cur) && color[cur] == 0 {
+            color[cur] = 1;
+            path.push(cur);
+            cur = wait_on(cur).0;
+        }
+        if is_stuck(cur) && color[cur] == 1 {
+            let at = path.iter().position(|&x| x == cur).unwrap();
+            let cycle = &path[at..];
+            let anchor = *cycle.iter().min().unwrap();
+            let (peer, tag, op) = wait_on(anchor);
+            let chain: Vec<String> =
+                cycle.iter().map(|r| format!("rank {r}")).collect();
+            out.push(Defect {
+                kind: DefectKind::Deadlock,
+                world: w.name.clone(),
+                rank: anchor,
+                peer: Some(peer),
+                tag: Some(tag),
+                op,
+                detail: format!(
+                    "wait-for cycle: {} -> {}",
+                    chain.join(" -> "),
+                    chain[0]
+                ),
+            });
+        }
+        for &r in &path {
+            color[r] = 2;
+        }
+    }
+}
+
+/// Check 5: replay one rank's pool event log through the free-list state
+/// machine. `Put` of a pointer already free = double return; `Use` of a
+/// pointer currently free = use-after-return. `Evict` retires an address
+/// (the allocator may reuse it), and a `Put` of an unknown pointer is a
+/// legal first return of a buffer the pool never vended.
+fn check_pool(rank: usize, log: &[PoolEvent], out: &mut Vec<Defect>) {
+    #[derive(PartialEq)]
+    enum St {
+        Free,
+        Out,
+    }
+    let mut state: HashMap<usize, St> = HashMap::new();
+    for (i, ev) in log.iter().enumerate() {
+        match *ev {
+            PoolEvent::Take { ptr, .. } => {
+                state.insert(ptr, St::Out);
+            }
+            PoolEvent::Put { ptr, len } => {
+                if state.get(&ptr) == Some(&St::Free) {
+                    out.push(Defect {
+                        kind: DefectKind::PoolDoubleReturn,
+                        world: "pool".to_string(),
+                        rank,
+                        peer: None,
+                        tag: None,
+                        op: format!("put #{i}: {len} f32 @ {ptr:#x}"),
+                        detail: "buffer returned while already in a free list"
+                            .to_string(),
+                    });
+                }
+                state.insert(ptr, St::Free);
+            }
+            PoolEvent::Evict { ptr, .. } => {
+                state.remove(&ptr);
+            }
+            PoolEvent::Use { ptr, len } => {
+                if state.get(&ptr) == Some(&St::Free) {
+                    out.push(Defect {
+                        kind: DefectKind::PoolUseAfterReturn,
+                        world: "pool".to_string(),
+                        rank,
+                        peer: None,
+                        tag: None,
+                        op: format!("use #{i}: {len} f32 @ {ptr:#x}"),
+                        detail: "buffer touched while sitting in a free list"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Collective;
+
+    fn world(ranks: Vec<Vec<ScheduleOp>>) -> WorldOps {
+        WorldOps { name: "test".to_string(), size: ranks.len(), ranks }
+    }
+
+    fn send(to: usize, elems: usize, tag: MsgTag) -> ScheduleOp {
+        ScheduleOp::Send { to, elems, tag }
+    }
+
+    fn recv(from: usize, elems: usize, tag: MsgTag) -> ScheduleOp {
+        ScheduleOp::Recv { from, elems, tag }
+    }
+
+    fn check(w: WorldOps) -> Vec<Defect> {
+        check_schedule(&Schedule { worlds: vec![w], pool_logs: vec![] })
+    }
+
+    #[test]
+    fn clean_pingpong_has_no_defects() {
+        let h = MsgTag::Halo(0);
+        let w = world(vec![
+            vec![send(1, 8, h), recv(1, 8, h)],
+            vec![send(0, 8, h), recv(0, 8, h)],
+        ]);
+        assert!(check(w).is_empty());
+    }
+
+    #[test]
+    fn missing_recv_is_unmatched_send() {
+        let h = MsgTag::Halo(0);
+        let w = world(vec![vec![send(1, 8, h)], vec![]]);
+        let d = check(w);
+        assert!(d.iter().any(|x| x.kind == DefectKind::UnmatchedSend
+            && x.rank == 0
+            && x.peer == Some(1)));
+    }
+
+    #[test]
+    fn tag_class_mismatch_is_aliasing() {
+        let w = world(vec![
+            vec![send(1, 8, MsgTag::Redist)],
+            vec![recv(0, 8, MsgTag::Halo(1))],
+        ]);
+        let d = check(w);
+        assert!(d.iter().any(|x| x.kind == DefectKind::TagAliasing));
+        let w = world(vec![
+            vec![send(1, 8, MsgTag::Halo(0))],
+            vec![recv(0, 8, MsgTag::Halo(1))],
+        ]);
+        let d = check(w);
+        assert!(d.iter().any(|x| x.kind == DefectKind::TagMismatch));
+    }
+
+    #[test]
+    fn mutual_recv_first_is_a_cycle() {
+        let g = MsgTag::Generic;
+        let w = world(vec![
+            vec![recv(1, 4, g), send(1, 4, g)],
+            vec![recv(0, 4, g), send(0, 4, g)],
+        ]);
+        let d = check(w);
+        let dl: Vec<_> =
+            d.iter().filter(|x| x.kind == DefectKind::Deadlock).collect();
+        assert_eq!(dl.len(), 1, "one cycle reported once: {d:?}");
+        assert!(dl[0].detail.contains("cycle"));
+    }
+
+    #[test]
+    fn collective_divergence_kinds() {
+        let grp = vec![0usize, 1];
+        let c = |op, elems| ScheduleOp::Collective { op, elems, group: grp.clone() };
+        // order divergence
+        let w = world(vec![
+            vec![c(Collective::AllreduceRd, 9), c(Collective::AllreduceRing, 1)],
+            vec![c(Collective::AllreduceRing, 1), c(Collective::AllreduceRd, 9)],
+        ]);
+        assert!(check(w).iter().any(|x| x.kind == DefectKind::CollectiveOrder));
+        // size divergence
+        let w = world(vec![
+            vec![c(Collective::AllreduceRd, 9)],
+            vec![c(Collective::AllreduceRd, 10)],
+        ]);
+        assert!(check(w).iter().any(|x| x.kind == DefectKind::CollectiveSize));
+    }
+
+    #[test]
+    fn pool_discipline_violations() {
+        let logs = vec![vec![
+            PoolEvent::Take { ptr: 0x10, len: 4 },
+            PoolEvent::Put { ptr: 0x10, len: 4 },
+            PoolEvent::Use { ptr: 0x10, len: 4 },
+            PoolEvent::Put { ptr: 0x10, len: 4 },
+        ]];
+        let d = check_schedule(&Schedule { worlds: vec![], pool_logs: logs });
+        assert!(d.iter().any(|x| x.kind == DefectKind::PoolUseAfterReturn));
+        assert!(d.iter().any(|x| x.kind == DefectKind::PoolDoubleReturn));
+        // evict retires the address: a fresh Take/Put at the same ptr is fine
+        let logs = vec![vec![
+            PoolEvent::Take { ptr: 0x20, len: 4 },
+            PoolEvent::Evict { ptr: 0x20, len: 4 },
+            PoolEvent::Take { ptr: 0x20, len: 8 },
+            PoolEvent::Put { ptr: 0x20, len: 8 },
+        ]];
+        let d = check_schedule(&Schedule { worlds: vec![], pool_logs: logs });
+        assert!(d.is_empty(), "{d:?}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Static analysis of communication schedules — the `hydra3d verify`
+//! subsystem.
+//!
+//! Training correctness here rests on every rank of a world agreeing on
+//! one wire protocol: each send paired with exactly one receive of the
+//! same tag and byte count, collectives issued in the same order with the
+//! same reduce sizes everywhere, and no blocking receive that can wait on
+//! a message nobody will send. Those properties are invisible to the
+//! numeric tests (a run that deadlocks never returns a wrong number — it
+//! never returns), so this module checks them *statically*, against the
+//! extracted schedule rather than a wall-clock run.
+//!
+//! Extraction ([`extract`]) is a **dry run through the real comm layer**:
+//! it builds genuine channel-thread worlds wrapped in the traced backend
+//! and drives them with walkers that mirror the engines' per-step
+//! communication (halo exchange, BN statistics, flatten gather/scatter,
+//! bucketed or monolithic gradient allreduce, store redistribution) using
+//! zero-filled buffers of the true shapes — no kernels, no AOT artifacts,
+//! no dataset. Because the walkers call the *same* `comm::halo`,
+//! `comm::bucket` and `iosim::store` code the engines call, the recorded
+//! wire structure cannot drift from production.
+//!
+//! [`checks::check_schedule`] then verifies five properties (send/recv
+//! matching, collective agreement, tag discipline, deadlock freedom,
+//! buffer-pool discipline), and [`mutate`] seeds deliberate schedule
+//! defects to prove each property is actually enforced.
+
+pub mod checks;
+pub mod model;
+pub mod mutate;
+
+pub use checks::{check_schedule, Defect, DefectKind};
+pub use model::ModelSpec;
+pub use mutate::{MutationKind, MutationOutcome};
+
+use crate::comm::{GradReduce, ScheduleOp};
+use crate::engine::hybrid::IoMode;
+use crate::partition::SpatialGrid;
+use crate::tensor::pool::PoolEvent;
+use anyhow::Result;
+
+/// Which engine's schedule to extract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Hybrid spatial × data parallelism (`engine::hybrid`).
+    Hybrid,
+    /// Pure data parallelism over fused executables
+    /// (`engine::dataparallel`); in-memory I/O only.
+    Fused,
+}
+
+/// One configuration to extract and check.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyCfg {
+    pub grid: SpatialGrid,
+    pub groups: usize,
+    pub batch_global: usize,
+    pub steps: usize,
+    /// Dataset size for the store modes' sample schedule.
+    pub samples: usize,
+    pub seed: u64,
+    pub io: IoMode,
+    pub reduce: GradReduce,
+    pub engine: EngineKind,
+}
+
+impl VerifyCfg {
+    /// A human-readable one-liner for reports and defect context.
+    pub fn describe(&self) -> String {
+        format!(
+            "grid {} x {} group(s), batch {}, {} step(s), io {:?}, {:?}, {:?}",
+            self.grid,
+            self.groups,
+            self.batch_global,
+            self.steps,
+            self.io,
+            self.reduce,
+            self.engine
+        )
+    }
+
+    /// The mutation harness baseline: a world of 4 (2 groups × 2-way depth
+    /// grid) with BN, blocking store staging and bucketed overlap — every
+    /// traffic class (halo, scatter, redist, bucket collectives) present.
+    pub fn mutation_baseline() -> (ModelSpec, VerifyCfg) {
+        let spec = ModelSpec::builtin("cf-sim-bn").expect("builtin");
+        let cfg = VerifyCfg {
+            grid: SpatialGrid::new(2, 1, 1),
+            groups: 2,
+            batch_global: 4,
+            steps: 1,
+            samples: 8,
+            seed: 7,
+            io: IoMode::Store,
+            reduce: GradReduce::default(),
+            engine: EngineKind::Hybrid,
+        };
+        (spec, cfg)
+    }
+}
+
+/// Per-rank op streams of one communicator world.
+#[derive(Clone, Debug)]
+pub struct WorldOps {
+    /// "compute", "grad" or "staging".
+    pub name: String,
+    pub size: usize,
+    /// `ranks[r]` is rank `r`'s ops in program order.
+    pub ranks: Vec<Vec<ScheduleOp>>,
+}
+
+/// The full extracted schedule of one configuration: every world's
+/// per-rank op streams plus each rank's buffer-pool event log.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub worlds: Vec<WorldOps>,
+    /// One log per compute rank (empty for engines without a pool).
+    pub pool_logs: Vec<Vec<PoolEvent>>,
+}
+
+impl Schedule {
+    pub fn world(&self, name: &str) -> Option<&WorldOps> {
+        self.worlds.iter().find(|w| w.name == name)
+    }
+
+    pub fn world_mut(&mut self, name: &str) -> Option<&mut WorldOps> {
+        self.worlds.iter_mut().find(|w| w.name == name)
+    }
+
+    /// Total ops across all worlds (a quick sanity figure for reports).
+    pub fn total_ops(&self) -> usize {
+        self.worlds
+            .iter()
+            .map(|w| w.ranks.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+}
+
+/// Extract the communication schedule of `cfg` by dry-running the
+/// configured engine's comm path over real traced worlds.
+pub fn extract(spec: &ModelSpec, cfg: &VerifyCfg) -> Result<Schedule> {
+    match cfg.engine {
+        EngineKind::Hybrid => crate::engine::hybrid::dry_run_hybrid(spec, cfg),
+        EngineKind::Fused => crate::engine::dataparallel::dry_run_fused(spec, cfg),
+    }
+}
+
+/// Extract and check one configuration; empty result = clean.
+pub fn verify(spec: &ModelSpec, cfg: &VerifyCfg) -> Result<Vec<Defect>> {
+    Ok(check_schedule(&extract(spec, cfg)?))
+}
+
+/// The CI configuration matrix: every built-in model over the grids,
+/// group counts and I/O modes the integration tests exercise. BN models
+/// are constrained to power-of-two worlds (the recursive-doubling
+/// statistics allreduce requires it), exactly as in production.
+pub fn matrix() -> Vec<(ModelSpec, VerifyCfg)> {
+    let grids = [
+        SpatialGrid::new(1, 1, 1),
+        SpatialGrid::new(2, 1, 1),
+        SpatialGrid::new(1, 2, 1),
+        SpatialGrid::new(3, 1, 1),
+        SpatialGrid::new(2, 2, 1),
+        SpatialGrid::new(2, 2, 2),
+    ];
+    let ios = [IoMode::InMem, IoMode::Store, IoMode::StoreAsync];
+    let mut out = Vec::new();
+    for name in ModelSpec::builtin_names() {
+        let spec = ModelSpec::builtin(name).expect("builtin");
+        for grid in grids {
+            for groups in [1usize, 2] {
+                let world = groups * grid.ways();
+                if spec.has_bn() && world > 1 && !world.is_power_of_two() {
+                    continue;
+                }
+                for io in ios {
+                    let mut reduces = vec![GradReduce::default()];
+                    // monolithic variant on a representative subset: it
+                    // only changes the gradient reduction, which the grid
+                    // and io axes don't interact with
+                    if grid.ways() == 2 && io == IoMode::Store {
+                        reduces.push(GradReduce::Monolithic);
+                    }
+                    for reduce in reduces {
+                        out.push((
+                            spec.clone(),
+                            VerifyCfg {
+                                grid,
+                                groups,
+                                batch_global: 2 * groups,
+                                steps: 2,
+                                samples: 4 * groups,
+                                seed: 11,
+                                io,
+                                reduce,
+                                engine: EngineKind::Hybrid,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+        // fused data-parallel schedules: in-memory only, both reductions
+        for groups in [1usize, 2, 4] {
+            for reduce in [GradReduce::default(), GradReduce::Monolithic] {
+                out.push((
+                    spec.clone(),
+                    VerifyCfg {
+                        grid: SpatialGrid::new(1, 1, 1),
+                        groups,
+                        batch_global: 2 * groups,
+                        steps: 2,
+                        samples: 4 * groups,
+                        seed: 11,
+                        io: IoMode::InMem,
+                        reduce,
+                        engine: EngineKind::Fused,
+                    },
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Run every mutation class against the baseline schedule `rounds` times
+/// with distinct seeds; each outcome says whether the checker caught the
+/// seeded defect with the expected diagnostic kind.
+pub fn run_mutation_suite(seed: u64, rounds: usize) -> Result<Vec<MutationOutcome>> {
+    let (spec, cfg) = VerifyCfg::mutation_baseline();
+    let baseline = extract(&spec, &cfg)?;
+    let clean = check_schedule(&baseline);
+    if !clean.is_empty() {
+        anyhow::bail!(
+            "mutation baseline is not clean: {} defect(s), first: {}",
+            clean.len(),
+            clean[0]
+        );
+    }
+    let mut out = Vec::new();
+    for kind in MutationKind::ALL {
+        for round in 0..rounds.max(1) {
+            let mut mutated = baseline.clone();
+            let desc = mutate::apply(&mut mutated, kind, seed + round as u64)?;
+            let defects = check_schedule(&mutated);
+            let hit = defects.iter().find(|d| d.kind == kind.expected()).cloned();
+            out.push(MutationOutcome {
+                kind,
+                seed: seed + round as u64,
+                desc,
+                caught: hit.is_some(),
+                defect: hit,
+            });
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,281 @@
+//! Synthetic model descriptions for schedule extraction.
+//!
+//! The dry-run walkers need only what determines *communication*: layer
+//! kinds with their global input geometry, halo widths, BN channel counts
+//! and the ordered parameter table (bucket layout). [`ModelSpec`] carries
+//! exactly that, so `hydra3d verify` can check every grid/group/io
+//! combination without AOT artifacts or a dataset on disk. The built-in
+//! specs mirror the real CosmoFlow / UNet plan shapes (conv → bn → pool
+//! pyramid with a flatten/fc head, and an encoder–decoder with skip
+//! connections) at toy extents divisible by every CI grid dimension.
+//!
+//! Spatial entries use the same convention as the AOT manifests
+//! (`python/compile/model.py::layer_plan`): `d/h/w` are the layer's
+//! *global input* activation extents; ranks derive their shard as
+//! `dim / grid_dim`. That is what lets [`ModelSpec::from_model_info`]
+//! reuse a real manifest's plan verbatim.
+
+use crate::runtime::{LayerDesc, ModelInfo};
+use anyhow::{bail, Result};
+
+/// Communication-relevant description of one model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Global cubic input extent (the store serves `size^3` volumes).
+    pub input_size: usize,
+    pub in_channels: usize,
+    /// Layer plan; spatial dims are global *input* extents per layer.
+    pub plan: Vec<LayerDesc>,
+    /// Ordered `(name, shape)` parameter table (gradient/bucket order).
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Flat regression-target length (MSE models).
+    pub target_len: usize,
+    /// Per-voxel label channels (segmentation models).
+    pub label_channels: usize,
+}
+
+impl ModelSpec {
+    /// Look up a built-in spec by name.
+    pub fn builtin(name: &str) -> Result<ModelSpec> {
+        match name {
+            "cf-sim" => Ok(cf_sim(false)),
+            "cf-sim-bn" => Ok(cf_sim(true)),
+            "unet-sim" => Ok(unet_sim()),
+            _ => bail!(
+                "unknown built-in model '{name}' (have: cf-sim, cf-sim-bn, \
+                 unet-sim)"
+            ),
+        }
+    }
+
+    /// Names of every built-in spec (the CI matrix iterates these).
+    pub fn builtin_names() -> [&'static str; 3] {
+        ["cf-sim", "cf-sim-bn", "unet-sim"]
+    }
+
+    /// Build a spec from a real AOT manifest entry, so `verify` can check
+    /// the exact production plans when artifacts are present.
+    pub fn from_model_info(info: &ModelInfo) -> ModelSpec {
+        ModelSpec {
+            name: info.name.clone(),
+            input_size: info.input_size,
+            in_channels: info.in_channels,
+            plan: info.plan.clone(),
+            params: info.params.clone(),
+            target_len: info.n_targets,
+            label_channels: info.n_classes,
+        }
+    }
+
+    /// Segmentation models (per-voxel targets) end in cross-entropy.
+    pub fn label_mode(&self) -> bool {
+        self.plan.iter().any(|l| matches!(l, LayerDesc::Xent { .. }))
+    }
+
+    /// Whether the plan carries batch-norm layers (whose statistics
+    /// allreduce constrains the world size to powers of two).
+    pub fn has_bn(&self) -> bool {
+        self.plan.iter().any(|l| matches!(l, LayerDesc::Bn { .. }))
+    }
+
+    /// Total parameter elements (the monolithic allreduce payload).
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// `s` is the global input extent along each spatial axis.
+fn conv(tag: &str, cin: usize, cout: usize, k: usize, s: usize, halo: usize)
+        -> LayerDesc {
+    LayerDesc::Conv {
+        tag: tag.to_string(),
+        cin,
+        cout,
+        k,
+        stride: 1,
+        d: s,
+        h: s,
+        w: s,
+        halo,
+        fwd: None,
+        bwd_data: None,
+        bwd_filter: None,
+    }
+}
+
+fn bn(tag: &str, c: usize, s: usize) -> LayerDesc {
+    LayerDesc::Bn {
+        tag: tag.to_string(),
+        c,
+        d: s,
+        h: s,
+        w: s,
+        apply: None,
+        bwd_partials: None,
+        bwd_apply: None,
+    }
+}
+
+fn act(c: usize, s: usize) -> LayerDesc {
+    LayerDesc::Act { c, d: s, h: s, w: s }
+}
+
+fn pool(c: usize, s: usize) -> LayerDesc {
+    LayerDesc::Pool {
+        op: "max".to_string(),
+        c,
+        d: s,
+        h: s,
+        w: s,
+        fwd: None,
+        bwd: None,
+    }
+}
+
+fn fc(tag: &str, fin: usize, fout: usize, act: bool) -> LayerDesc {
+    LayerDesc::Fc {
+        tag: tag.to_string(),
+        fin,
+        fout,
+        act,
+        dropout: false,
+        fwd: None,
+        bwd: None,
+    }
+}
+
+/// Two-stage CosmoFlow-shaped pyramid: 12³ input, two conv(+BN) blocks
+/// with a 2× pool between them, flatten to an fc head, MSE targets.
+/// Extents 12 and 6 are divisible by grid dims 1, 2 and 3.
+fn cf_sim(use_bn: bool) -> ModelSpec {
+    let mut plan = vec![conv("conv0", 1, 4, 3, 12, 1)];
+    if use_bn {
+        plan.push(bn("conv0", 4, 12));
+    }
+    plan.push(act(4, 12));
+    plan.push(pool(4, 12)); // 12 -> 6
+    plan.push(conv("conv1", 4, 8, 3, 6, 1));
+    if use_bn {
+        plan.push(bn("conv1", 8, 6));
+    }
+    plan.push(act(8, 6));
+    plan.push(LayerDesc::Flatten { c: 8, d: 6, h: 6, w: 6 });
+    let fin = 8 * 6 * 6 * 6;
+    plan.push(fc("fc0", fin, 16, true));
+    plan.push(fc("fc1", 16, 4, false));
+    plan.push(LayerDesc::Mse { n: 4, fwd_bwd: None });
+
+    let mut params = vec![("conv0.w".to_string(), vec![4, 1, 3, 3, 3])];
+    if use_bn {
+        params.push(("conv0.gamma".to_string(), vec![4]));
+        params.push(("conv0.beta".to_string(), vec![4]));
+    }
+    params.push(("conv1.w".to_string(), vec![8, 4, 3, 3, 3]));
+    if use_bn {
+        params.push(("conv1.gamma".to_string(), vec![8]));
+        params.push(("conv1.beta".to_string(), vec![8]));
+    }
+    params.push(("fc0.w".to_string(), vec![16, fin]));
+    params.push(("fc0.b".to_string(), vec![16]));
+    params.push(("fc1.w".to_string(), vec![4, 16]));
+    params.push(("fc1.b".to_string(), vec![4]));
+
+    ModelSpec {
+        name: if use_bn { "cf-sim-bn" } else { "cf-sim" }.to_string(),
+        input_size: 12,
+        in_channels: 1,
+        plan,
+        params,
+        target_len: 4,
+        label_channels: 0,
+    }
+}
+
+/// One-level UNet-shaped encoder–decoder: skip save at full resolution,
+/// pooled bottom convs, a 2× deconv back up, skip concat, 1×1 head conv
+/// and per-voxel cross-entropy (label mode).
+fn unet_sim() -> ModelSpec {
+    let plan = vec![
+        conv("down0", 1, 4, 3, 12, 1),
+        act(4, 12),
+        LayerDesc::SaveSkip { slot: 0, c: 4, d: 12, h: 12, w: 12 },
+        pool(4, 12), // 12 -> 6
+        conv("bottom", 4, 8, 3, 6, 1),
+        act(8, 6),
+        LayerDesc::Deconv {
+            tag: "up0".to_string(),
+            cin: 8,
+            cout: 4,
+            d: 6, // input extent; deconv doubles it back to 12
+            h: 6,
+            w: 6,
+            fwd: None,
+            bwd_data: None,
+            bwd_filter: None,
+        },
+        LayerDesc::ConcatSkip { slot: 0, c_skip: 4, c_up: 4, d: 12, h: 12, w: 12 },
+        conv("head", 8, 3, 1, 12, 0),
+        LayerDesc::Xent { n_classes: 3, d: 12, h: 12, w: 12, fwd_bwd: None },
+    ];
+    let params = vec![
+        ("down0.w".to_string(), vec![4, 1, 3, 3, 3]),
+        ("bottom.w".to_string(), vec![8, 4, 3, 3, 3]),
+        ("up0.w".to_string(), vec![4, 8, 2, 2, 2]),
+        ("head.w".to_string(), vec![3, 8, 1, 1, 1]),
+    ];
+    ModelSpec {
+        name: "unet-sim".to_string(),
+        input_size: 12,
+        in_channels: 1,
+        plan,
+        params,
+        target_len: 0,
+        label_channels: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_are_consistent() {
+        for name in ModelSpec::builtin_names() {
+            let spec = ModelSpec::builtin(name).unwrap();
+            assert_eq!(spec.name, name);
+            assert!(!spec.plan.is_empty());
+            assert!(!spec.params.is_empty());
+            assert!(spec.param_elems() > 0);
+            // every 12-extent layer dim is divisible by grids up to 3
+            assert_eq!(spec.input_size % 3, 0);
+            assert_eq!(spec.input_size % 2, 0);
+        }
+        assert!(ModelSpec::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn bn_and_label_flags() {
+        assert!(!ModelSpec::builtin("cf-sim").unwrap().has_bn());
+        assert!(ModelSpec::builtin("cf-sim-bn").unwrap().has_bn());
+        assert!(!ModelSpec::builtin("cf-sim").unwrap().label_mode());
+        assert!(ModelSpec::builtin("unet-sim").unwrap().label_mode());
+    }
+
+    #[test]
+    fn param_names_match_plan_tags() {
+        // layer_param_indices keys params by "<tag>.w" etc. — the specs
+        // must keep the two tables consistent or overlap marking silently
+        // degrades to flush-at-finish.
+        let spec = ModelSpec::builtin("cf-sim-bn").unwrap();
+        for layer in &spec.plan {
+            let idx = crate::engine::hybrid::layer_param_indices(&spec.params, layer);
+            match layer {
+                LayerDesc::Conv { .. } => assert_eq!(idx.len(), 1),
+                LayerDesc::Bn { .. } => assert_eq!(idx.len(), 2),
+                LayerDesc::Fc { .. } => assert_eq!(idx.len(), 2),
+                _ => assert!(idx.is_empty()),
+            }
+        }
+    }
+}

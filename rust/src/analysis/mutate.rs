@@ -1,0 +1,340 @@
+//! Seeded schedule mutations: deliberate wire-protocol defects used to
+//! prove the checker enforces what it claims.
+//!
+//! Each [`MutationKind`] perturbs an extracted [`Schedule`] the way a
+//! real engine bug would — a receive that was never posted, a tag typo'd
+//! across subsystems, a rank that reorders its collectives, a buffer
+//! returned twice — and maps to the [`DefectKind`] the checker must
+//! report for it. `hydra3d verify --mutations` and the negative test
+//! suite assert every class is caught with rank/tag/op context.
+
+use super::checks::{Defect, DefectKind};
+use super::Schedule;
+use crate::comm::{MsgTag, ScheduleOp};
+use crate::tensor::pool::PoolEvent;
+use crate::util::rng::Pcg;
+use anyhow::{bail, Result};
+
+/// One class of seeded schedule defect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MutationKind {
+    /// Delete a receive: its sender's message is never consumed.
+    DropRecv,
+    /// Delete a send: its receiver waits for a message nobody sends.
+    DropSend,
+    /// Retag a halo send to a *different axis* (same traffic class).
+    SwapTag,
+    /// Retag a halo send as redistribution traffic (class aliasing).
+    AliasTag,
+    /// Grow a send's element count so it no longer matches the receive.
+    SkewBytes,
+    /// Swap two same-group, different-op collectives on one rank.
+    ReorderCollectives,
+    /// Bump one rank's reduce size for one collective.
+    SkewCollectiveElems,
+    /// Move one channel pair's first receives ahead of their first sends
+    /// on both endpoints — the classic mutual-wait protocol inversion.
+    RecvBeforeSend,
+    /// Duplicate a pool return.
+    PoolDoubleReturn,
+    /// Touch a buffer right after returning it to the pool.
+    PoolUseAfterReturn,
+}
+
+impl MutationKind {
+    pub const ALL: [MutationKind; 10] = [
+        MutationKind::DropRecv,
+        MutationKind::DropSend,
+        MutationKind::SwapTag,
+        MutationKind::AliasTag,
+        MutationKind::SkewBytes,
+        MutationKind::ReorderCollectives,
+        MutationKind::SkewCollectiveElems,
+        MutationKind::RecvBeforeSend,
+        MutationKind::PoolDoubleReturn,
+        MutationKind::PoolUseAfterReturn,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MutationKind::DropRecv => "drop-recv",
+            MutationKind::DropSend => "drop-send",
+            MutationKind::SwapTag => "swap-tag",
+            MutationKind::AliasTag => "alias-tag",
+            MutationKind::SkewBytes => "skew-bytes",
+            MutationKind::ReorderCollectives => "reorder-collectives",
+            MutationKind::SkewCollectiveElems => "skew-collective-elems",
+            MutationKind::RecvBeforeSend => "recv-before-send",
+            MutationKind::PoolDoubleReturn => "pool-double-return",
+            MutationKind::PoolUseAfterReturn => "pool-use-after-return",
+        }
+    }
+
+    /// The defect class the checker must report for this mutation.
+    pub fn expected(&self) -> DefectKind {
+        match self {
+            MutationKind::DropRecv => DefectKind::UnmatchedSend,
+            MutationKind::DropSend => DefectKind::UnmatchedRecv,
+            MutationKind::SwapTag => DefectKind::TagMismatch,
+            MutationKind::AliasTag => DefectKind::TagAliasing,
+            MutationKind::SkewBytes => DefectKind::ByteMismatch,
+            MutationKind::ReorderCollectives => DefectKind::CollectiveOrder,
+            MutationKind::SkewCollectiveElems => DefectKind::CollectiveSize,
+            MutationKind::RecvBeforeSend => DefectKind::Deadlock,
+            MutationKind::PoolDoubleReturn => DefectKind::PoolDoubleReturn,
+            MutationKind::PoolUseAfterReturn => DefectKind::PoolUseAfterReturn,
+        }
+    }
+}
+
+/// Outcome of one seeded mutation round.
+#[derive(Clone, Debug)]
+pub struct MutationOutcome {
+    pub kind: MutationKind,
+    pub seed: u64,
+    /// What was perturbed, for the report.
+    pub desc: String,
+    /// Whether a defect of the expected kind was reported.
+    pub caught: bool,
+    pub defect: Option<Defect>,
+}
+
+/// Ops matching `pred` across all worlds, as `(world, rank, index)`.
+fn op_sites(
+    sched: &Schedule,
+    pred: impl Fn(&ScheduleOp) -> bool,
+) -> Vec<(usize, usize, usize)> {
+    let mut sites = Vec::new();
+    for (wi, w) in sched.worlds.iter().enumerate() {
+        for (r, stream) in w.ranks.iter().enumerate() {
+            for (i, op) in stream.iter().enumerate() {
+                if pred(op) {
+                    sites.push((wi, r, i));
+                }
+            }
+        }
+    }
+    sites
+}
+
+fn pick<T: Copy>(rng: &mut Pcg, xs: &[T]) -> T {
+    xs[rng.below(xs.len())]
+}
+
+fn is_halo_send(op: &ScheduleOp) -> bool {
+    matches!(op, ScheduleOp::Send { tag: MsgTag::Halo(_), .. })
+}
+
+/// Apply one seeded mutation in place; returns a description of the
+/// perturbation. Fails if the schedule has no applicable site (the
+/// mutation baseline is chosen so every class has one).
+pub fn apply(sched: &mut Schedule, kind: MutationKind, seed: u64) -> Result<String> {
+    let mut rng = Pcg::new(seed, 0xa11a);
+    match kind {
+        MutationKind::DropRecv => {
+            let tagged = op_sites(sched, |op| {
+                matches!(op, ScheduleOp::Recv { tag, .. } if *tag != MsgTag::Generic)
+            });
+            let sites = if tagged.is_empty() {
+                op_sites(sched, |op| matches!(op, ScheduleOp::Recv { .. }))
+            } else {
+                tagged
+            };
+            if sites.is_empty() {
+                bail!("no receive to drop");
+            }
+            let (wi, r, i) = pick(&mut rng, &sites);
+            let op = sched.worlds[wi].ranks[r].remove(i);
+            Ok(format!(
+                "dropped {op:?} at rank {r} of world {}",
+                sched.worlds[wi].name
+            ))
+        }
+        MutationKind::DropSend => {
+            let tagged = op_sites(sched, |op| {
+                matches!(op, ScheduleOp::Send { tag, .. } if *tag != MsgTag::Generic)
+            });
+            let sites = if tagged.is_empty() {
+                op_sites(sched, |op| matches!(op, ScheduleOp::Send { .. }))
+            } else {
+                tagged
+            };
+            if sites.is_empty() {
+                bail!("no send to drop");
+            }
+            let (wi, r, i) = pick(&mut rng, &sites);
+            let op = sched.worlds[wi].ranks[r].remove(i);
+            Ok(format!(
+                "dropped {op:?} at rank {r} of world {}",
+                sched.worlds[wi].name
+            ))
+        }
+        MutationKind::SwapTag | MutationKind::AliasTag => {
+            let sites = op_sites(sched, is_halo_send);
+            if sites.is_empty() {
+                bail!("no halo send to retag");
+            }
+            let (wi, r, i) = pick(&mut rng, &sites);
+            let stream = &mut sched.worlds[wi].ranks[r];
+            let old = match &stream[i] {
+                ScheduleOp::Send { tag: MsgTag::Halo(a), .. } => MsgTag::Halo(*a),
+                _ => unreachable!("site filter"),
+            };
+            let new_tag = match (kind, old) {
+                (MutationKind::SwapTag, MsgTag::Halo(a)) => {
+                    MsgTag::Halo((a + 1) % 3)
+                }
+                _ => MsgTag::Redist,
+            };
+            if let ScheduleOp::Send { tag, .. } = &mut stream[i] {
+                *tag = new_tag;
+            }
+            Ok(format!(
+                "retagged send #{i} at rank {r} of world {} from {old} to \
+                 {new_tag}",
+                sched.worlds[wi].name
+            ))
+        }
+        MutationKind::SkewBytes => {
+            let sites =
+                op_sites(sched, |op| matches!(op, ScheduleOp::Send { .. }));
+            if sites.is_empty() {
+                bail!("no send to skew");
+            }
+            let (wi, r, i) = pick(&mut rng, &sites);
+            if let ScheduleOp::Send { elems, .. } =
+                &mut sched.worlds[wi].ranks[r][i]
+            {
+                *elems += 1;
+            }
+            Ok(format!(
+                "grew send #{i} at rank {r} of world {} by one element",
+                sched.worlds[wi].name
+            ))
+        }
+        MutationKind::ReorderCollectives => {
+            // two consecutive markers of the *same group* with *different
+            // ops* on one rank — swapping same-op markers would show up as
+            // a size divergence instead of an order divergence
+            let mut pairs = Vec::new();
+            for (wi, w) in sched.worlds.iter().enumerate() {
+                for (r, stream) in w.ranks.iter().enumerate() {
+                    let marks: Vec<usize> = (0..stream.len())
+                        .filter(|&i| {
+                            matches!(stream[i], ScheduleOp::Collective { .. })
+                        })
+                        .collect();
+                    for k in 1..marks.len() {
+                        let (i, j) = (marks[k - 1], marks[k]);
+                        if let (
+                            ScheduleOp::Collective { op: a, group: ga, .. },
+                            ScheduleOp::Collective { op: b, group: gb, .. },
+                        ) = (&stream[i], &stream[j])
+                        {
+                            if ga == gb && a != b {
+                                pairs.push((wi, r, i, j));
+                            }
+                        }
+                    }
+                }
+            }
+            if pairs.is_empty() {
+                bail!("no adjacent same-group different-op collectives");
+            }
+            let (wi, r, i, j) = pick(&mut rng, &pairs);
+            sched.worlds[wi].ranks[r].swap(i, j);
+            Ok(format!(
+                "swapped collectives #{i} and #{j} at rank {r} of world {}",
+                sched.worlds[wi].name
+            ))
+        }
+        MutationKind::SkewCollectiveElems => {
+            let sites = op_sites(sched, |op| {
+                matches!(op, ScheduleOp::Collective { group, .. } if group.len() > 1)
+            });
+            if sites.is_empty() {
+                bail!("no multi-rank collective to skew");
+            }
+            let (wi, r, i) = pick(&mut rng, &sites);
+            if let ScheduleOp::Collective { elems, .. } =
+                &mut sched.worlds[wi].ranks[r][i]
+            {
+                *elems += 1;
+            }
+            Ok(format!(
+                "grew collective #{i} reduce size at rank {r} of world {}",
+                sched.worlds[wi].name
+            ))
+        }
+        MutationKind::RecvBeforeSend => {
+            // channel pairs (a, b) where both endpoints send before they
+            // receive — invert both so each blocks on the other first
+            let mut cands = Vec::new();
+            for (wi, w) in sched.worlds.iter().enumerate() {
+                let n = w.ranks.len();
+                let pos_send = |r: usize, peer: usize| {
+                    w.ranks[r].iter().position(|op| {
+                        matches!(op, ScheduleOp::Send { to, .. } if *to == peer)
+                    })
+                };
+                let pos_recv = |r: usize, peer: usize| {
+                    w.ranks[r].iter().position(|op| {
+                        matches!(op, ScheduleOp::Recv { from, .. } if *from == peer)
+                    })
+                };
+                for a in 0..n {
+                    for b in (a + 1)..n {
+                        if let (Some(sa), Some(ra), Some(sb), Some(rb)) = (
+                            pos_send(a, b),
+                            pos_recv(a, b),
+                            pos_send(b, a),
+                            pos_recv(b, a),
+                        ) {
+                            if ra > sa && rb > sb {
+                                cands.push((wi, a, b, sa, ra, sb, rb));
+                            }
+                        }
+                    }
+                }
+            }
+            if cands.is_empty() {
+                bail!("no send-then-recv channel pair to invert");
+            }
+            let (wi, a, b, sa, ra, sb, rb) = pick(&mut rng, &cands);
+            let name = sched.worlds[wi].name.clone();
+            let sa_stream = &mut sched.worlds[wi].ranks[a];
+            let op = sa_stream.remove(ra);
+            sa_stream.insert(sa, op);
+            let sb_stream = &mut sched.worlds[wi].ranks[b];
+            let op = sb_stream.remove(rb);
+            sb_stream.insert(sb, op);
+            Ok(format!(
+                "moved first receives of channel pair ({a}, {b}) ahead of \
+                 their first sends on world {name}"
+            ))
+        }
+        MutationKind::PoolDoubleReturn | MutationKind::PoolUseAfterReturn => {
+            let mut sites = Vec::new();
+            for (r, log) in sched.pool_logs.iter().enumerate() {
+                for (i, ev) in log.iter().enumerate() {
+                    if let PoolEvent::Put { ptr, len } = *ev {
+                        sites.push((r, i, ptr, len));
+                    }
+                }
+            }
+            if sites.is_empty() {
+                bail!("no pool return to perturb");
+            }
+            let (r, i, ptr, len) = pick(&mut rng, &sites);
+            let ev = if kind == MutationKind::PoolDoubleReturn {
+                PoolEvent::Put { ptr, len }
+            } else {
+                PoolEvent::Use { ptr, len }
+            };
+            sched.pool_logs[r].insert(i + 1, ev);
+            Ok(format!(
+                "inserted {ev:?} after return #{i} in rank {r}'s pool log"
+            ))
+        }
+    }
+}

@@ -103,11 +103,11 @@ pub fn exchange_forward_axis(
     }
     let mut padded = shard.pad_ax(axis, halo, halo);
     if let Some(u) = lo {
-        let buf = ep.recv(u)?;
+        let buf = ep.recv_tagged(u, MsgTag::Halo(ax))?;
         padded.set_slice_ax_from(axis, 0, halo, &buf);
     }
     if let Some(d) = hi {
-        let buf = ep.recv(d)?;
+        let buf = ep.recv_tagged(d, MsgTag::Halo(ax))?;
         padded.set_slice_ax_from(axis, halo + len, halo, &buf);
     }
     Ok(padded)
@@ -148,11 +148,11 @@ pub fn exchange_backward_axis(
     // … and the neighbours' padding grads accumulate into my boundary.
     if let Some(u) = lo {
         // lo neighbour's *far* padding overlaps my first `halo` faces
-        let buf = ep.recv(u)?;
+        let buf = ep.recv_tagged(u, MsgTag::Halo(ax))?;
         dx.add_slice_ax_from(axis, 0, halo, &buf);
     }
     if let Some(d) = hi {
-        let buf = ep.recv(d)?;
+        let buf = ep.recv_tagged(d, MsgTag::Halo(ax))?;
         dx.add_slice_ax_from(axis, len - halo, halo, &buf);
     }
     Ok(dx)
@@ -251,14 +251,14 @@ pub fn exchange_forward_grid(
         }
         // … then unpack the neighbours' faces straight into my halo slots.
         if let Some(u) = nbrs.lo[a] {
-            let buf = ep.recv(u)?;
+            let buf = ep.recv_tagged(u, MsgTag::Halo(a as u8))?;
             let mut off = base;
             off[a] = 0;
             padded.set_block3_from(off, len, &buf);
             put_buf(pool, buf);
         }
         if let Some(d) = nbrs.hi[a] {
-            let buf = ep.recv(d)?;
+            let buf = ep.recv_tagged(d, MsgTag::Halo(a as u8))?;
             let mut off = base;
             off[a] = h + sa;
             padded.set_block3_from(off, len, &buf);
@@ -319,14 +319,14 @@ pub fn exchange_backward_grid(
         }
         // … and the neighbours' padding grads accumulate into my boundary.
         if let Some(u) = nbrs.lo[a] {
-            let buf = ep.recv(u)?;
+            let buf = ep.recv_tagged(u, MsgTag::Halo(a as u8))?;
             let mut off = base;
             off[a] = h;
             g.add_block3_from(off, len, &buf);
             put_buf(pool, buf);
         }
         if let Some(d) = nbrs.hi[a] {
-            let buf = ep.recv(d)?;
+            let buf = ep.recv_tagged(d, MsgTag::Halo(a as u8))?;
             let mut off = base;
             off[a] = sa;
             g.add_block3_from(off, len, &buf);

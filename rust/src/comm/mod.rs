@@ -106,6 +106,10 @@ impl Counters {
 
 /// Traffic class of a point-to-point message, for per-class accounting
 /// ([`Communicator::send_tagged`]; the traced backend records the tag).
+///
+/// Receivers declare the tag they expect via
+/// [`Communicator::recv_tagged`]; `analysis::checks` pairs each send with
+/// its receive and flags tag mismatches and cross-class aliasing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MsgTag {
     Generic,
@@ -113,6 +117,52 @@ pub enum MsgTag {
     Halo(u8),
     /// Data-store shard redistribution (§III-B group-to-group staging).
     Redist,
+    /// Flatten-boundary scatter of the root's backward activation shards.
+    Scatter,
+}
+
+impl MsgTag {
+    /// Coarse traffic class, for aliasing checks: two tags of different
+    /// classes must never meet on the same (sender, receiver) pairing.
+    /// `Generic` covers collective-internal and control traffic.
+    pub fn class(&self) -> &'static str {
+        match self {
+            MsgTag::Generic => "generic",
+            MsgTag::Halo(_) => "halo",
+            MsgTag::Redist => "redist",
+            MsgTag::Scatter => "scatter",
+        }
+    }
+}
+
+impl std::fmt::Display for MsgTag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MsgTag::Generic => write!(f, "generic"),
+            MsgTag::Halo(a) => write!(f, "halo({a})"),
+            MsgTag::Redist => write!(f, "redist"),
+            MsgTag::Scatter => write!(f, "scatter"),
+        }
+    }
+}
+
+/// One intended communication operation of one rank, in program order —
+/// the unit of the schedule that `hydra3d verify` analyzes. Recorded by
+/// the traced backend into per-endpoint streams: `Send`/`Recv` capture the
+/// actual wire traffic (collectives decompose into them), while
+/// `Collective` is a non-blocking marker recorded on *every* participant
+/// when a logical collective starts, so rank-order agreement can be
+/// checked without reverse-engineering the p2p pattern.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleOp {
+    /// Point-to-point send of `elems` f32s to `to`.
+    Send { to: usize, elems: usize, tag: MsgTag },
+    /// Blocking receive from `from`; `tag` is the tag the receiver
+    /// *expects* (`Generic` for untagged/collective-internal receives),
+    /// `elems` the length actually delivered.
+    Recv { from: usize, elems: usize, tag: MsgTag },
+    /// Logical collective entry on this rank (marker, not wire traffic).
+    Collective { op: Collective, elems: usize, group: Vec<usize> },
 }
 
 /// Collective operations, for the [`Communicator::on_collective`] hook and
@@ -161,6 +211,15 @@ pub trait Communicator: Send {
 
     /// Blocking receive of the next message from `from` (program order).
     fn recv(&self, from: usize) -> Result<Vec<f32>>;
+
+    /// [`Communicator::recv`] declaring the traffic class the caller
+    /// expects. Channels are FIFO per sender and carry no tag on the wire,
+    /// so the default ignores `tag`; the traced backend overrides this to
+    /// record the expectation so `analysis::checks` can pair it against
+    /// the sender's [`MsgTag`].
+    fn recv_tagged(&self, from: usize, _tag: MsgTag) -> Result<Vec<f32>> {
+        self.recv(from)
+    }
 
     /// Shared traffic counters of this rank's world.
     fn counters(&self) -> &Arc<Counters>;

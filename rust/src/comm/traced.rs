@@ -14,7 +14,7 @@
 //! it is sized for diagnostic runs of bounded step count; for long traced
 //! runs, drain with [`TraceCollector::clear`] between steps or phases.
 
-use super::{Collective, Communicator, Counters, MsgTag};
+use super::{Collective, Communicator, Counters, MsgTag, ScheduleOp};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -45,11 +45,20 @@ pub struct CollectiveEvent {
 }
 
 /// Shared trace sink for a (pair of) traced world(s).
+///
+/// Besides the flat [`MessageEvent`]/[`CollectiveEvent`] records (the
+/// §III-C replay input), the collector keeps one ordered [`ScheduleOp`]
+/// stream *per wrapped endpoint* — the per-rank program-order schedule
+/// that `analysis::checks` verifies. Endpoints register at construction
+/// ([`Traced::new`]), so stream index = construction order; when one
+/// collector traces several worlds (compute, then grad), each world's
+/// ranks occupy a contiguous id range.
 #[derive(Default)]
 pub struct TraceCollector {
     seq: AtomicU64,
     messages: Mutex<Vec<MessageEvent>>,
     collectives: Mutex<Vec<CollectiveEvent>>,
+    ops: Mutex<Vec<Vec<ScheduleOp>>>,
 }
 
 impl TraceCollector {
@@ -59,6 +68,23 @@ impl TraceCollector {
 
     fn next_seq(&self) -> u64 {
         self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Allocate a per-endpoint [`ScheduleOp`] stream; returns its index.
+    fn register_endpoint(&self) -> usize {
+        let mut ops = self.ops.lock().expect("trace poisoned");
+        ops.push(Vec::new());
+        ops.len() - 1
+    }
+
+    fn record_op(&self, ep_id: usize, op: ScheduleOp) {
+        self.ops.lock().expect("trace poisoned")[ep_id].push(op);
+    }
+
+    /// Per-endpoint schedules, indexed by endpoint construction order
+    /// (rank order within each `build_world` call).
+    pub fn op_streams(&self) -> Vec<Vec<ScheduleOp>> {
+        self.ops.lock().expect("trace poisoned").clone()
     }
 
     fn record_message(&self, from: usize, to: usize, bytes: u64, tag: MsgTag) {
@@ -129,9 +155,13 @@ impl TraceCollector {
     }
 
     /// Forget everything recorded so far (between steps/phases).
+    /// Endpoint streams keep their slots (ids stay valid) but are emptied.
     pub fn clear(&self) {
         self.messages.lock().expect("trace poisoned").clear();
         self.collectives.lock().expect("trace poisoned").clear();
+        for s in self.ops.lock().expect("trace poisoned").iter_mut() {
+            s.clear();
+        }
     }
 }
 
@@ -139,11 +169,14 @@ impl TraceCollector {
 pub struct Traced<C: Communicator> {
     inner: C,
     trace: Arc<TraceCollector>,
+    /// Index of this endpoint's [`ScheduleOp`] stream in the collector.
+    ep_id: usize,
 }
 
 impl<C: Communicator> Traced<C> {
     pub fn new(inner: C, trace: Arc<TraceCollector>) -> Traced<C> {
-        Traced { inner, trace }
+        let ep_id = trace.register_endpoint();
+        Traced { inner, trace, ep_id }
     }
 
     pub fn trace(&self) -> &Arc<TraceCollector> {
@@ -164,17 +197,38 @@ impl<C: Communicator> Communicator for Traced<C> {
         self.trace
             .record_message(self.inner.rank(), to, (data.len() * 4) as u64,
                             MsgTag::Generic);
+        self.trace.record_op(
+            self.ep_id,
+            ScheduleOp::Send { to, elems: data.len(), tag: MsgTag::Generic },
+        );
         self.inner.send(to, data);
     }
 
     fn send_tagged(&self, to: usize, data: Vec<f32>, tag: MsgTag) {
         self.trace
             .record_message(self.inner.rank(), to, (data.len() * 4) as u64, tag);
+        self.trace
+            .record_op(self.ep_id, ScheduleOp::Send { to, elems: data.len(), tag });
         self.inner.send(to, data);
     }
 
     fn recv(&self, from: usize) -> Result<Vec<f32>> {
-        self.inner.recv(from)
+        // Recorded after completion (the length isn't known before), which
+        // preserves per-stream program order: the thread can't issue its
+        // next op until this blocking receive returns.
+        let data = self.inner.recv(from)?;
+        self.trace.record_op(
+            self.ep_id,
+            ScheduleOp::Recv { from, elems: data.len(), tag: MsgTag::Generic },
+        );
+        Ok(data)
+    }
+
+    fn recv_tagged(&self, from: usize, tag: MsgTag) -> Result<Vec<f32>> {
+        let data = self.inner.recv(from)?;
+        self.trace
+            .record_op(self.ep_id, ScheduleOp::Recv { from, elems: data.len(), tag });
+        Ok(data)
     }
 
     fn counters(&self) -> &Arc<Counters> {
@@ -190,6 +244,13 @@ impl<C: Communicator> Communicator for Traced<C> {
             self.trace
                 .record_collective(self.inner.rank(), op, elems, group.len());
         }
+        // Every participant also gets a marker in its own schedule stream:
+        // check (b) compares these per-group marker subsequences across
+        // member ranks for order/size agreement.
+        self.trace.record_op(
+            self.ep_id,
+            ScheduleOp::Collective { op, elems, group: group.to_vec() },
+        );
         self.inner.on_collective(op, elems, group);
     }
 }

@@ -246,6 +246,120 @@ fn run_group(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Dry-run schedule extraction (`hydra3d verify`)
+// ---------------------------------------------------------------------------
+
+/// Extract the fused data-parallel engine's communication schedule: one
+/// rank per group, gradients allreduced via the configured strategy, the
+/// scalar loss on its own ring. The fused engine has no spatial
+/// partitioning and no store, so the config must be in-memory with a
+/// trivial grid.
+pub fn dry_run_fused(
+    spec: &crate::analysis::ModelSpec,
+    cfg: &crate::analysis::VerifyCfg,
+) -> Result<crate::analysis::Schedule> {
+    use crate::analysis::{Schedule, WorldOps};
+    use crate::comm::TraceCollector;
+    use crate::engine::hybrid::IoMode;
+
+    if cfg.io != IoMode::InMem {
+        bail!("verify: the fused engine is in-memory only (got {:?})", cfg.io);
+    }
+    if cfg.grid.ways() != 1 {
+        bail!("verify: the fused engine has no spatial grid (got {})", cfg.grid);
+    }
+    if cfg.groups == 0 || cfg.batch_global % cfg.groups != 0 {
+        bail!(
+            "verify: global batch {} not divisible by {} group(s)",
+            cfg.batch_global,
+            cfg.groups
+        );
+    }
+    if cfg.steps == 0 || cfg.samples == 0 {
+        bail!("verify: steps and samples must be positive");
+    }
+    let n = cfg.groups;
+
+    let tc_compute = Arc::new(TraceCollector::new());
+    let eps = CommBackend::Traced(tc_compute.clone()).build_world(n)?;
+    let tc_grad = Arc::new(TraceCollector::new());
+    let grad_eps =
+        cfg.reduce.build_grad_world(&CommBackend::Traced(tc_grad.clone()), n)?;
+
+    let sizes: Vec<usize> =
+        spec.params.iter().map(|(_, s)| s.iter().product()).collect();
+    let world_group: Vec<usize> = (0..n).collect();
+
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(grad_eps)
+            .map(|(ep, grad_ep)| {
+                let sizes = &sizes;
+                let world_group = &world_group;
+                s.spawn(move || -> Result<()> {
+                    let mut overlap = OverlapAllreduce::for_rank(
+                        cfg.reduce,
+                        grad_ep,
+                        world_group.clone(),
+                        sizes,
+                    );
+                    let mut grads: Vec<Tensor> = spec
+                        .params
+                        .iter()
+                        .map(|(_, sh)| Tensor::zeros(sh))
+                        .collect();
+                    let mut flat_scratch: Vec<f32> = Vec::new();
+                    let mut phases = PhaseTimes::default();
+                    for _step in 0..cfg.steps {
+                        // gradients become final per-parameter as the last
+                        // micro-batch's outputs are extracted, in forward
+                        // (output) order — mirror run_group's drain loop
+                        if let Some(ov) = overlap.as_mut() {
+                            for (gi, g) in grads.iter().enumerate() {
+                                ov.param_ready(gi, g.data());
+                            }
+                        }
+                        super::reduce_grads(
+                            ep.as_ref(),
+                            overlap.as_mut(),
+                            &mut grads,
+                            world_group,
+                            &mut phases,
+                            &mut flat_scratch,
+                        )?;
+                        let mut lbuf = vec![0.0f32];
+                        ep.allreduce_sum(&mut lbuf, world_group)?;
+                    }
+                    if let Some(ov) = overlap.take() {
+                        ov.shutdown()?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("dry-run rank panicked"))??;
+        }
+        Ok(())
+    })?;
+
+    let mut worlds = vec![WorldOps {
+        name: "compute".to_string(),
+        size: n,
+        ranks: tc_compute.op_streams(),
+    }];
+    if matches!(cfg.reduce, GradReduce::Bucketed { .. }) {
+        worlds.push(WorldOps {
+            name: "grad".to_string(),
+            size: n,
+            ranks: tc_grad.op_streams(),
+        });
+    }
+    Ok(Schedule { worlds, pool_logs: Vec::new() })
+}
+
 /// Stack single-sample tensors (leading dim 1) into a batch.
 pub fn stack_batch(parts: &[&Tensor]) -> Tensor {
     assert!(!parts.is_empty());

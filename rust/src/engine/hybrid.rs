@@ -34,7 +34,7 @@ use super::{
     dropout_mask, init_params, sample_schedule_epochs, LrSchedule, PhaseTimes,
     StepRecord, TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
 };
-use crate::comm::{halo, CommBackend, Communicator, GradReduce, OverlapAllreduce};
+use crate::comm::{halo, CommBackend, Communicator, GradReduce, MsgTag, OverlapAllreduce};
 use crate::data::container::Container;
 use crate::iosim::store::{AsyncStaging, DataStore, StoreSource};
 use crate::partition::{GridNeighbors, GridTopology, SpatialGrid};
@@ -429,8 +429,13 @@ struct RankCtx {
 
 /// Parameter indices owned by one plan layer (gradients become final on a
 /// rank as soon as this layer's backward pass for the last local sample
-/// completes — the bucket-overlap readiness signal).
-fn layer_param_indices(info: &ModelInfo, layer: &LayerDesc) -> Vec<usize> {
+/// completes — the bucket-overlap readiness signal). Takes the bare
+/// `(name, shape)` parameter table so the dry-run schedule walkers share
+/// the exact readiness order the live engine uses.
+pub(crate) fn layer_param_indices(
+    params: &[(String, Vec<usize>)],
+    layer: &LayerDesc,
+) -> Vec<usize> {
     let names: Vec<String> = match layer {
         LayerDesc::Conv { tag, .. } | LayerDesc::Deconv { tag, .. } => {
             vec![format!("{tag}.w")]
@@ -441,7 +446,10 @@ fn layer_param_indices(info: &ModelInfo, layer: &LayerDesc) -> Vec<usize> {
         LayerDesc::Fc { tag, .. } => vec![format!("{tag}.w"), format!("{tag}.b")],
         _ => Vec::new(),
     };
-    names.iter().filter_map(|n| info.param_index(n)).collect()
+    names
+        .iter()
+        .filter_map(|n| params.iter().position(|(p, _)| p == n))
+        .collect()
 }
 
 /// Per-layer saved forward state for the backward pass.
@@ -796,7 +804,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                                 dfull.block3_into(
                                     [pc[0] * sd, pc[1] * sh, pc[2] * sw],
                                     [sd, sh, sw], &mut buf);
-                                cx.ep.send(group_ranks[p], buf);
+                                cx.ep.send_tagged(group_ranks[p], buf,
+                                                  MsgTag::Scatter);
                             }
                             let mut mine = pool.take_tensor(&shard_shape);
                             dfull.block3_into([0, 0, 0], [sd, sh, sw],
@@ -804,7 +813,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                             pool.recycle(dfull);
                             dy = Some(mine);
                         } else {
-                            let buf = cx.ep.recv(group_ranks[0])?;
+                            let buf =
+                                cx.ep.recv_tagged(group_ranks[0], MsgTag::Scatter)?;
                             dy = Some(Tensor::from_vec(&shard_shape, buf));
                         }
                         phases.halo += t.elapsed().as_secs_f64();
@@ -920,7 +930,7 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                 // final — stage them and launch full buckets.
                 if j + 1 == bpg {
                     if let Some(ov) = overlap.as_mut() {
-                        for pi in layer_param_indices(&cx.info, layer) {
+                        for pi in layer_param_indices(&cx.info.params, layer) {
                             ov.param_ready(pi, grads[pi].data());
                         }
                     }
@@ -1003,3 +1013,348 @@ pub use super::dataparallel::predict_batch;
 const _: () = {
     assert!(BN_EPS == 1e-5);
 };
+
+// ---------------------------------------------------------------------------
+// Dry-run schedule extraction (`hydra3d verify`)
+// ---------------------------------------------------------------------------
+
+use crate::analysis::{ModelSpec, Schedule, VerifyCfg, WorldOps};
+use crate::comm::TraceCollector;
+use crate::iosim::store::assignments_of;
+use crate::tensor::pool::PoolEvent;
+
+/// Reject configurations [`run_rank`] itself would reject (assertion or
+/// bail), with a message naming the offending geometry — the dry run
+/// spawns a whole world of threads, and a mid-flight failure on one rank
+/// would leave its peers blocked in a receive.
+fn dry_validate(spec: &ModelSpec, cfg: &VerifyCfg) -> Result<()> {
+    if cfg.groups == 0 {
+        bail!("verify: groups must be positive");
+    }
+    if cfg.batch_global == 0 || cfg.batch_global % cfg.groups != 0 {
+        bail!(
+            "verify: global batch {} not divisible by {} group(s)",
+            cfg.batch_global,
+            cfg.groups
+        );
+    }
+    if cfg.steps == 0 {
+        bail!("verify: steps must be positive");
+    }
+    if cfg.samples == 0 {
+        bail!("verify: samples must be positive");
+    }
+    let world = cfg.groups * cfg.grid.ways();
+    if spec.has_bn() && world > 1 && !world.is_power_of_two() {
+        bail!(
+            "verify: BN statistics allreduce (recursive doubling) needs a \
+             power-of-two world, got {world}"
+        );
+    }
+    let gd = cfg.grid.dims();
+    let pad_axes = if cfg.grid.is_depth_only() {
+        [true, false, false]
+    } else {
+        [true, true, true]
+    };
+    for (a, &g) in gd.iter().enumerate() {
+        if spec.input_size % g != 0 {
+            bail!(
+                "verify: input extent {} not divisible by grid dim {} on \
+                 axis {a}",
+                spec.input_size,
+                g
+            );
+        }
+    }
+    for layer in &spec.plan {
+        let (dims, halo) = match layer {
+            LayerDesc::Conv { d, h, w, halo, .. } => ([*d, *h, *w], *halo),
+            LayerDesc::Flatten { d, h, w, .. } => ([*d, *h, *w], 0),
+            _ => continue,
+        };
+        for a in 0..3 {
+            if dims[a] % gd[a] != 0 {
+                bail!(
+                    "verify: layer extent {} not divisible by grid dim {} \
+                     on axis {a}",
+                    dims[a],
+                    gd[a]
+                );
+            }
+            if pad_axes[a] && dims[a] / gd[a] < halo {
+                bail!(
+                    "verify: shard extent {} < halo {halo} on axis {a}",
+                    dims[a] / gd[a]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extract the hybrid engine's communication schedule for one
+/// configuration by dry-running its comm path: real traced channel
+/// worlds, real halo/collective/store code, zero-filled buffers of the
+/// true shapes — no runtime, no artifacts, no dataset.
+///
+/// Three worlds may be built, mirroring production exactly: the compute
+/// world (halo, BN statistics, flatten gather/scatter, loss, blocking
+/// store redistribution), the gradient world (bucketed-overlap
+/// allreduces; absent under `GradReduce::Monolithic`, whose single ring
+/// runs on the compute world), and the staging world (`StoreAsync`
+/// redistribution; the prefetch worker's traffic, run inline here — each
+/// schedule row is redistributed exactly once either way, and the checks
+/// compare per-endpoint streams, not cross-rank interleavings).
+pub fn dry_run_hybrid(spec: &ModelSpec, cfg: &VerifyCfg) -> Result<Schedule> {
+    dry_validate(spec, cfg)?;
+    let topo = GridTopology::new(cfg.groups, cfg.grid);
+    let n = topo.world_size();
+    let sched =
+        sample_schedule_epochs(cfg.seed, cfg.samples, cfg.batch_global, cfg.steps);
+
+    let tc_compute = Arc::new(TraceCollector::new());
+    let eps = CommBackend::Traced(tc_compute.clone()).build_world(n)?;
+    let tc_grad = Arc::new(TraceCollector::new());
+    let grad_eps =
+        cfg.reduce.build_grad_world(&CommBackend::Traced(tc_grad.clone()), n)?;
+    let tc_staging = Arc::new(TraceCollector::new());
+    let staging_eps: Vec<Option<Box<dyn Communicator>>> =
+        if cfg.io == IoMode::StoreAsync {
+            CommBackend::Traced(tc_staging.clone())
+                .build_world(n)?
+                .into_iter()
+                .map(Some)
+                .collect()
+        } else {
+            (0..n).map(|_| None).collect()
+        };
+
+    let pool_logs = std::thread::scope(|s| -> Result<Vec<Vec<PoolEvent>>> {
+        let sched = &sched;
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(grad_eps)
+            .zip(staging_eps)
+            .map(|((ep, gep), sep)| {
+                s.spawn(move || dry_rank(spec, cfg, topo, ep, gep, sep, sched))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("dry-run rank panicked"))?)
+            .collect()
+    })?;
+
+    let mut worlds = vec![WorldOps {
+        name: "compute".to_string(),
+        size: n,
+        ranks: tc_compute.op_streams(),
+    }];
+    if matches!(cfg.reduce, GradReduce::Bucketed { .. }) {
+        worlds.push(WorldOps {
+            name: "grad".to_string(),
+            size: n,
+            ranks: tc_grad.op_streams(),
+        });
+    }
+    if cfg.io == IoMode::StoreAsync {
+        worlds.push(WorldOps {
+            name: "staging".to_string(),
+            size: n,
+            ranks: tc_staging.op_streams(),
+        });
+    }
+    Ok(Schedule { worlds, pool_logs })
+}
+
+/// One rank of the dry run: every communication op of [`run_rank`], in
+/// program order, with the compute elided. Any drift between this walker
+/// and `run_rank`'s comm sequence is caught by the artifact-gated parity
+/// test in `tests/verify_suite.rs`, which diffs the two traced streams.
+fn dry_rank(
+    spec: &ModelSpec,
+    cfg: &VerifyCfg,
+    topo: GridTopology,
+    ep: Box<dyn Communicator>,
+    grad_ep: Option<Box<dyn Communicator>>,
+    staging_ep: Option<Box<dyn Communicator>>,
+    sched: &[Vec<usize>],
+) -> Result<Vec<PoolEvent>> {
+    let rank = ep.rank();
+    let n = topo.world_size();
+    let (group, pos) = topo.coords_of(rank);
+    let world_group: Vec<usize> = (0..n).collect();
+    let group_ranks = topo.group_ranks(group);
+    let nbrs = topo.neighbors(rank);
+    let gd = topo.grid.dims();
+    let ways = topo.grid.ways();
+    let is_root = pos == 0;
+    let bpg = cfg.batch_global / topo.groups;
+    let pad_axes = if topo.grid.is_depth_only() {
+        [true, false, false]
+    } else {
+        [true, true, true]
+    };
+
+    let sizes: Vec<usize> =
+        spec.params.iter().map(|(_, s)| s.iter().product()).collect();
+    let mut overlap = OverlapAllreduce::for_rank(
+        cfg.reduce,
+        grad_ep,
+        world_group.clone(),
+        &sizes,
+    );
+    let mut grads: Vec<Tensor> =
+        spec.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+    let mut flat_scratch: Vec<f32> = Vec::new();
+    let mut phases = PhaseTimes::default();
+    let pool = BufferPool::new();
+    pool.enable_log();
+
+    let mut store = match cfg.io {
+        IoMode::InMem => None,
+        IoMode::Store | IoMode::StoreAsync => Some(DataStore::synthetic(
+            topo,
+            rank,
+            cfg.samples,
+            spec.input_size,
+            spec.in_channels,
+            spec.target_len,
+            spec.label_channels,
+            spec.label_mode(),
+        )?),
+    };
+
+    for row in sched.iter() {
+        // ---- I/O staging: the store modes' per-step redistribution ------
+        if let Some(st) = store.as_mut() {
+            let assigns = assignments_of(row, topo.groups);
+            match cfg.io {
+                IoMode::Store => st.redistribute(ep.as_ref(), &assigns)?,
+                IoMode::StoreAsync => {
+                    // the async worker's traffic, on its dedicated world
+                    let sep = staging_ep.as_ref().expect("staging endpoint");
+                    st.redistribute(sep.as_ref(), &assigns)?;
+                    let _ = st.take_staged();
+                }
+                IoMode::InMem => unreachable!(),
+            }
+        }
+
+        for j in 0..bpg {
+            // ---- forward ------------------------------------------------
+            for layer in &spec.plan {
+                match layer {
+                    LayerDesc::Conv { cin, d, h, w, halo, .. } => {
+                        let s = [d / gd[0], h / gd[1], w / gd[2]];
+                        let x = pool
+                            .take_tensor_zeroed(&[1, *cin, s[0], s[1], s[2]]);
+                        let padded = halo::exchange_forward_grid(
+                            ep.as_ref(),
+                            &x,
+                            *halo,
+                            &nbrs,
+                            pad_axes,
+                            Some(&pool),
+                        )?;
+                        pool.recycle(x);
+                        pool.recycle(padded);
+                    }
+                    LayerDesc::Bn { c, .. } => {
+                        // (sum, sumsq, count) partials
+                        let mut buf = vec![0.0f32; 2 * c + 1];
+                        ep.allreduce_sum_rd(&mut buf, &world_group)?;
+                    }
+                    LayerDesc::Flatten { c, d, h, w } => {
+                        let elems =
+                            c * (d / gd[0]) * (h / gd[1]) * (w / gd[2]);
+                        let mine = pool.take_zeroed(elems);
+                        if let Some(parts) =
+                            ep.gather_to_root_vec(mine, &group_ranks)?
+                        {
+                            for part in parts {
+                                pool.put(part);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+
+            // ---- backward -----------------------------------------------
+            for layer in spec.plan.iter().rev() {
+                match layer {
+                    LayerDesc::Flatten { c, d, h, w } => {
+                        let blk =
+                            c * (d / gd[0]) * (h / gd[1]) * (w / gd[2]);
+                        if is_root {
+                            for p in (1..ways).rev() {
+                                let buf = pool.take(blk);
+                                ep.send_tagged(
+                                    group_ranks[p],
+                                    buf,
+                                    MsgTag::Scatter,
+                                );
+                            }
+                        } else {
+                            let buf = ep
+                                .recv_tagged(group_ranks[0], MsgTag::Scatter)?;
+                            pool.put(buf);
+                        }
+                    }
+                    LayerDesc::Bn { c, .. } => {
+                        // (dgamma, dbeta) partials
+                        let mut buf = vec![0.0f32; 2 * c];
+                        ep.allreduce_sum_rd(&mut buf, &world_group)?;
+                    }
+                    LayerDesc::Conv { cin, d, h, w, halo, .. } => {
+                        let mut pshape =
+                            vec![1, *cin, d / gd[0], h / gd[1], w / gd[2]];
+                        for a in 0..3 {
+                            if pad_axes[a] {
+                                pshape[2 + a] += 2 * halo;
+                            }
+                        }
+                        let dxp = pool.take_tensor_zeroed(&pshape);
+                        let dx = halo::exchange_backward_grid(
+                            ep.as_ref(),
+                            dxp,
+                            *halo,
+                            &nbrs,
+                            pad_axes,
+                            Some(&pool),
+                        )?;
+                        pool.recycle(dx);
+                    }
+                    _ => {}
+                }
+                // bucket-overlap readiness, exactly as in run_rank
+                if j + 1 == bpg {
+                    if let Some(ov) = overlap.as_mut() {
+                        for pi in layer_param_indices(&spec.params, layer) {
+                            ov.param_ready(pi, grads[pi].data());
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- gradient allreduce + loss report ---------------------------
+        super::reduce_grads(
+            ep.as_ref(),
+            overlap.as_mut(),
+            &mut grads,
+            &world_group,
+            &mut phases,
+            &mut flat_scratch,
+        )?;
+        let mut lbuf = vec![0.0f32];
+        ep.allreduce_sum(&mut lbuf, &world_group)?;
+    }
+
+    if let Some(ov) = overlap.take() {
+        ov.shutdown()?;
+    }
+    Ok(pool.take_log())
+}

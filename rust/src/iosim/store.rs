@@ -159,6 +159,55 @@ impl DataStore {
         })
     }
 
+    /// Container-free construction for `hydra3d verify`'s dry runs: the
+    /// cache holds zero-filled shard tensors of the exact shapes an
+    /// ingested container of this geometry would produce, so
+    /// [`DataStore::redistribute`] issues a byte-identical communication
+    /// schedule without a dataset (or a filesystem) in the loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic(
+        topo: GridTopology,
+        rank: usize,
+        n_samples: usize,
+        size: usize,
+        channels: usize,
+        target_len: usize,
+        label_channels: usize,
+        label_mode: bool,
+    ) -> Result<DataStore> {
+        let (group, pos) = topo.coords_of(rank);
+        let (shard_off, shard_len) = topo.grid.shard_of(size, pos);
+        let owner = OwnerMap { n_samples, groups: topo.groups };
+        let x_shape = vec![1, channels, shard_len[0], shard_len[1], shard_len[2]];
+        let t_shape = if label_mode {
+            if label_channels == 0 {
+                bail!("label-mode synthetic store needs label_channels > 0");
+            }
+            vec![1, label_channels, shard_len[0], shard_len[1], shard_len[2]]
+        } else {
+            vec![1, target_len]
+        };
+        let mut cache = HashMap::new();
+        for s in owner.samples_of(group) {
+            cache.insert(s, (Tensor::zeros(&x_shape), Tensor::zeros(&t_shape)));
+        }
+        Ok(DataStore {
+            topo,
+            rank,
+            owner,
+            shard_off,
+            shard_len,
+            cache,
+            staged: HashMap::new(),
+            pool: BufferPool::new(),
+            x_shape,
+            t_shape,
+            ingest_bytes: 0,
+            redist_bytes: 0,
+            label_mode,
+        })
+    }
+
     /// Number of cached samples (diagnostics).
     pub fn cached(&self) -> usize {
         self.cache.len()
@@ -220,8 +269,8 @@ impl DataStore {
                                        self.pool.take_clone(t)));
             } else {
                 let src = self.topo.rank_of(og, pos);
-                let xbuf = ep.recv(src)?;
-                let tbuf = ep.recv(src)?;
+                let xbuf = ep.recv_tagged(src, MsgTag::Redist)?;
+                let tbuf = ep.recv_tagged(src, MsgTag::Redist)?;
                 self.staged.insert(
                     s,
                     (Tensor::from_vec(&self.x_shape, xbuf),

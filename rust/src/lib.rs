@@ -17,11 +17,16 @@
 //!   simulator used to regenerate the paper-scale figures ([`perfmodel`],
 //!   [`sim`]),
 //! * the PJRT runtime that loads and executes the AOT-compiled JAX/Pallas
-//!   artifacts ([`runtime`]); Python never runs at training time.
+//!   artifacts ([`runtime`]); Python never runs at training time,
+//! * the `hydra3d verify` static analysis: dry-run extraction of any
+//!   configuration's communication schedule and checks for send/recv
+//!   matching, collective agreement, tag discipline, deadlock freedom and
+//!   buffer-pool discipline ([`analysis`]).
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod util;
 pub mod tensor;
 pub mod partition;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   table1 | table2 | fig --id N   regenerate the paper's tables/figures
 //!   train                          functional training (fused or hybrid)
+//!   verify                         static communication-schedule checks
 //!   info                           artifact/manifest summary
 //!
 //! Examples:
@@ -13,6 +14,7 @@
 //!   hydra3d train --model unet16 --ways 2 --task ct
 
 use anyhow::{bail, Result};
+use hydra3d::analysis::{self, EngineKind, ModelSpec, VerifyCfg};
 use hydra3d::comm::{CommBackend, GradReduce, TraceCollector, DEFAULT_BUCKET_ELEMS};
 use hydra3d::config::ClusterConfig;
 use hydra3d::coordinator;
@@ -78,6 +80,7 @@ fn run(args: &[String]) -> Result<()> {
             print!("{out}");
         }
         "train" => train_cmd(rest)?,
+        "verify" => verify_cmd(rest)?,
         "info" => info_cmd()?,
         "--help" | "-h" | "help" => println!("{}", usage()),
         other => bail!("unknown command {other:?}\n{}", usage()),
@@ -93,6 +96,9 @@ fn usage() -> String {
        table2            Table II achieved-vs-peak conv performance\n\
        fig --id <4..8>   regenerate a performance figure\n\
        train [...]       functional hybrid/fused training on synthetic data\n\
+       verify [...]      static communication-schedule checks (deadlock, tag,\n\
+                         byte matching); --matrix for the CI sweep,\n\
+                         --mutations K for the seeded-defect harness\n\
        info              artifact manifest summary\n"
         .into()
 }
@@ -268,6 +274,135 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn verify_cmd(rest: &[String]) -> Result<()> {
+    let c = Command::new(
+        "verify",
+        "statically check a configuration's communication schedule",
+    )
+    .opt("model",
+         "built-in spec (cf-sim | cf-sim-bn | unet-sim) or a manifest model \
+          name when artifacts are present",
+         Some("cf-sim"))
+    .opt("grid", "spatial process grid `dxhxw`", Some("1x1x1"))
+    .opt("groups", "data-parallel groups", Some("1"))
+    .opt("batch", "global mini-batch (default: 2 per group)", None)
+    .opt("steps", "steps to extract", Some("2"))
+    .opt("samples", "dataset size for the store schedule (default: 4 per \
+                     group)", None)
+    .opt("seed", "schedule seed", Some("11"))
+    .opt("io", "inmem | store | store-async", Some("inmem"))
+    .opt("reduce", "bucketed | mono", Some("bucketed"))
+    .opt("engine", "hybrid | fused", Some("hybrid"))
+    .flag("matrix", "check every CI matrix configuration instead of one")
+    .opt("mutations",
+         "run the seeded-mutation harness with this many rounds per defect \
+          class and require every seeded defect to be caught",
+         None);
+    let a = c.parse(rest)?;
+
+    if let Some(rounds) = a.get_usize("mutations")? {
+        let seed = a.get_usize("seed")?.unwrap() as u64;
+        let outcomes = analysis::run_mutation_suite(seed, rounds)?;
+        let mut missed = 0usize;
+        for o in &outcomes {
+            if o.caught {
+                let d = o.defect.as_ref().unwrap();
+                println!("caught  {:<22} seed {:>3}: {d}", o.kind.name(), o.seed);
+            } else {
+                missed += 1;
+                println!("MISSED  {:<22} seed {:>3}: {}", o.kind.name(), o.seed,
+                         o.desc);
+            }
+        }
+        println!(
+            "mutation harness: {}/{} seeded defects caught across {} classes",
+            outcomes.len() - missed,
+            outcomes.len(),
+            hydra3d::analysis::MutationKind::ALL.len(),
+        );
+        if missed > 0 {
+            bail!("{missed} seeded schedule defect(s) escaped the checker");
+        }
+        return Ok(());
+    }
+
+    if a.flag("matrix") {
+        let mut bad = 0usize;
+        let mut total = 0usize;
+        for (spec, cfg) in analysis::matrix() {
+            total += 1;
+            let sched = analysis::extract(&spec, &cfg)?;
+            let defects = analysis::check_schedule(&sched);
+            if defects.is_empty() {
+                println!("ok   {:<10} {} ({} ops)", spec.name, cfg.describe(),
+                         sched.total_ops());
+            } else {
+                bad += 1;
+                println!("FAIL {:<10} {}", spec.name, cfg.describe());
+                for d in &defects {
+                    println!("     {d}");
+                }
+            }
+        }
+        println!("verify matrix: {}/{total} configurations clean", total - bad);
+        if bad > 0 {
+            bail!("{bad} configuration(s) have schedule defects");
+        }
+        return Ok(());
+    }
+
+    let name = a.req("model")?;
+    let spec = match ModelSpec::builtin(name) {
+        Ok(spec) => spec,
+        // fall back to the AOT manifest so real production plans can be
+        // checked when artifacts are present
+        Err(builtin_err) => match RuntimeHandle::start(&artifacts_dir()) {
+            Ok(rt) => ModelSpec::from_model_info(rt.manifest().model(name)?),
+            Err(_) => return Err(builtin_err),
+        },
+    };
+    let groups = a.get_usize("groups")?.unwrap();
+    let cfg = VerifyCfg {
+        grid: SpatialGrid::parse(a.req("grid")?)?,
+        groups,
+        batch_global: a.get_usize("batch")?.unwrap_or(2 * groups),
+        steps: a.get_usize("steps")?.unwrap(),
+        samples: a.get_usize("samples")?.unwrap_or(4 * groups),
+        seed: a.get_usize("seed")?.unwrap() as u64,
+        io: IoMode::parse(a.req("io")?)?,
+        reduce: match a.req("reduce")? {
+            "bucketed" => GradReduce::default(),
+            "mono" => GradReduce::Monolithic,
+            other => bail!("unknown --reduce {other:?} (bucketed | mono)"),
+        },
+        engine: match a.req("engine")? {
+            "hybrid" => EngineKind::Hybrid,
+            "fused" => EngineKind::Fused,
+            other => bail!("unknown --engine {other:?} (hybrid | fused)"),
+        },
+    };
+    let sched = analysis::extract(&spec, &cfg)?;
+    let defects = analysis::check_schedule(&sched);
+    for w in &sched.worlds {
+        println!(
+            "world {:<8} {} rank(s), {} ops",
+            w.name,
+            w.size,
+            w.ranks.iter().map(Vec::len).sum::<usize>()
+        );
+    }
+    if defects.is_empty() {
+        println!("verify {}: {} — clean ({} ops)", spec.name, cfg.describe(),
+                 sched.total_ops());
+        Ok(())
+    } else {
+        for d in &defects {
+            println!("{d}");
+        }
+        bail!("verify {}: {} defect(s) found", spec.name, defects.len());
+    }
 }
 
 fn info_cmd() -> Result<()> {

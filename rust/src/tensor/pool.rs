@@ -24,12 +24,36 @@ use std::collections::HashMap;
 /// bound; steady-state cycles need only a handful of buffers per class.
 const MAX_PER_CLASS: usize = 8;
 
+/// One pool-discipline event, recorded (behind the opt-in runtime flag
+/// [`BufferPool::enable_log`]) for `analysis::checks`' use-after-return /
+/// double-return verification. `ptr` is the buffer's storage address —
+/// stable while a live allocation sits in the free list, which is exactly
+/// the window the checks care about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// Buffer checked out (free-list pop or fresh allocation).
+    Take { ptr: usize, len: usize },
+    /// Buffer returned to the free list.
+    Put { ptr: usize, len: usize },
+    /// Buffer dropped on return (size class full): its address may be
+    /// reused by a later unrelated allocation, so the checker must retire
+    /// the pointer state here.
+    Evict { ptr: usize, len: usize },
+    /// Caller touched the buffer (hook for callers / the mutation
+    /// harness; a `Use` of a pointer currently in the free list is a
+    /// use-after-return).
+    Use { ptr: usize, len: usize },
+}
+
 /// Exact-size free lists of `f32` buffers plus hit/miss counters.
 #[derive(Default)]
 pub struct BufferPool {
     free: RefCell<HashMap<usize, Vec<Vec<f32>>>>,
     hits: Cell<u64>,
     misses: Cell<u64>,
+    /// `Some` once [`BufferPool::enable_log`] is called; `None` (the
+    /// default) keeps the hot path to a single branch.
+    log: RefCell<Option<Vec<PoolEvent>>>,
 }
 
 /// A [`Tensor`] checked out of a [`BufferPool`]. Thin alias used at API
@@ -42,17 +66,51 @@ impl BufferPool {
         Self::default()
     }
 
+    /// Start recording [`PoolEvent`]s (idempotent; off by default).
+    pub fn enable_log(&self) {
+        let mut log = self.log.borrow_mut();
+        if log.is_none() {
+            *log = Some(Vec::new());
+        }
+    }
+
+    /// Drain the recorded events (empty when logging was never enabled).
+    pub fn take_log(&self) -> Vec<PoolEvent> {
+        self.log.borrow_mut().as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    fn record(&self, ev: PoolEvent) {
+        if let Some(log) = self.log.borrow_mut().as_mut() {
+            log.push(ev);
+        }
+    }
+
+    /// Whether a live buffer with this storage address is currently in a
+    /// free list. Because the free lists own their buffers, a `true` here
+    /// during [`BufferPool::put`] can only mean the same logical buffer is
+    /// being returned twice — the double-return guard's predicate.
+    pub fn contains(&self, ptr: *const f32) -> bool {
+        self.free
+            .borrow()
+            .values()
+            .any(|list| list.iter().any(|b| b.as_ptr() == ptr))
+    }
+
     /// Check out a buffer of exactly `len` elements. Contents are
     /// *unspecified* on a pool hit (stale data from the previous user);
     /// a miss allocates zeroed storage.
     pub fn take(&self, len: usize) -> Vec<f32> {
-        if let Some(buf) = self.free.borrow_mut().get_mut(&len).and_then(|l| l.pop()) {
+        let buf = if let Some(buf) =
+            self.free.borrow_mut().get_mut(&len).and_then(|l| l.pop())
+        {
             self.hits.set(self.hits.get() + 1);
             buf
         } else {
             self.misses.set(self.misses.get() + 1);
             vec![0.0; len]
-        }
+        };
+        self.record(PoolEvent::Take { ptr: buf.as_ptr() as usize, len });
+        buf
     }
 
     /// Check out a buffer of `len` elements, zero-filled.
@@ -64,15 +122,39 @@ impl BufferPool {
 
     /// Return a buffer to the free list for its exact size (dropped if the
     /// size class is already full — see [`MAX_PER_CLASS`]).
+    ///
+    /// Debug builds assert the buffer isn't already in a free list: free
+    /// lists hold live allocations, so an address match means the same
+    /// buffer returned twice, which would hand the storage out to two
+    /// users and corrupt both silently.
     pub fn put(&self, buf: Vec<f32>) {
         if buf.capacity() == 0 {
             return;
         }
+        debug_assert!(
+            !self.contains(buf.as_ptr()),
+            "BufferPool::put: double return of a {}-element buffer",
+            buf.len()
+        );
+        let ptr = buf.as_ptr() as usize;
+        let len = buf.len();
         let mut free = self.free.borrow_mut();
-        let list = free.entry(buf.len()).or_default();
+        let list = free.entry(len).or_default();
         if list.len() < MAX_PER_CLASS {
             list.push(buf);
+            drop(free);
+            self.record(PoolEvent::Put { ptr, len });
+        } else {
+            drop(free);
+            self.record(PoolEvent::Evict { ptr, len });
         }
+    }
+
+    /// Note a read/write of `buf` in the event log (no-op unless logging
+    /// is enabled). Call sites are opt-in — the discipline check flags a
+    /// `Use` whose pointer currently sits in a free list.
+    pub fn note_use(&self, buf: &[f32]) {
+        self.record(PoolEvent::Use { ptr: buf.as_ptr() as usize, len: buf.len() });
     }
 
     /// Check out a tensor of `shape` with *unspecified* contents.
@@ -143,6 +225,52 @@ mod tests {
         let b = pool.take_zeroed(8);
         assert!(b.iter().all(|&x| x == 0.0));
         assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn double_return_guard_predicate() {
+        // `contains` is the predicate behind the debug_assert in `put`: a
+        // buffer's address is in a free list exactly between its return
+        // and its next checkout, so a second `put` of the same buffer in
+        // that window is what the guard fires on.
+        let pool = BufferPool::new();
+        let buf = pool.take(8);
+        let ptr = buf.as_ptr();
+        assert!(!pool.contains(ptr), "checked-out buffer is not pooled");
+        pool.put(buf);
+        assert!(pool.contains(ptr), "returned buffer sits in the free list");
+        let again = pool.take(8);
+        assert_eq!(again.as_ptr(), ptr, "free lists are LIFO per class");
+        assert!(!pool.contains(ptr));
+        pool.put(again);
+    }
+
+    #[test]
+    fn event_log_records_discipline() {
+        let pool = BufferPool::new();
+        pool.enable_log();
+        let buf = pool.take(4);
+        let ptr = buf.as_ptr() as usize;
+        pool.note_use(&buf);
+        pool.put(buf);
+        assert_eq!(
+            pool.take_log(),
+            vec![
+                PoolEvent::Take { ptr, len: 4 },
+                PoolEvent::Use { ptr, len: 4 },
+                PoolEvent::Put { ptr, len: 4 },
+            ]
+        );
+        // overflow beyond MAX_PER_CLASS logs an Evict (the checker retires
+        // the address there — it may be reused by a later allocation)
+        let bufs: Vec<_> = (0..MAX_PER_CLASS + 1).map(|_| pool.take(2)).collect();
+        for b in bufs {
+            pool.put(b);
+        }
+        let log = pool.take_log();
+        let evicts =
+            log.iter().filter(|e| matches!(e, PoolEvent::Evict { .. })).count();
+        assert_eq!(evicts, 1);
     }
 
     #[test]
