@@ -10,7 +10,10 @@
 //! `{"schema": 1, "kind": "micro", "metrics": {...}}` for the CI
 //! bench-artifact gate (`ci/bench_gate.py`).
 
-use hydra3d::comm::{halo, world, BucketPlan, Communicator, OverlapAllreduce};
+use hydra3d::comm::{
+    allreduce_sum_hier, halo, socket_world, world, BucketPlan, Communicator,
+    OverlapAllreduce,
+};
 use hydra3d::data::container::{write_dataset, Container};
 use hydra3d::iosim::store::{assignments_of, AsyncStaging, DataStore};
 use hydra3d::partition::{GridTopology, SpatialGrid};
@@ -43,6 +46,7 @@ fn main() {
     let stp = step_throughput(&mut b, quick);
     allreduce(&mut b, quick);
     let (mono_us, buck_us) = overlap(&mut b, quick);
+    let (ring_frame_bytes, hier_frame_bytes) = socket_frames(&mut b, quick);
     let stg = staging(&mut b, quick);
     container_reads(&mut b);
     pjrt_overhead(&mut b);
@@ -77,6 +81,10 @@ fn main() {
                       stg.redist_step_bytes as f64));
         metrics.push(("micro.store_ingest_bytes".into(),
                       stg.ingest_bytes as f64));
+        metrics.push(("micro.socket_ring_frame_bytes".into(),
+                      ring_frame_bytes as f64));
+        metrics.push(("micro.socket_hier_frame_bytes".into(),
+                      hier_frame_bytes as f64));
         write_bench_json(&path, "micro", &metrics).expect("write bench json");
         println!("\nwrote {path}");
     }
@@ -438,6 +446,67 @@ fn overlap(b: &mut Bench, quick: bool) -> (f64, f64) {
         per_layer,
     );
     (mono_us, buck_us)
+}
+
+/// Socket transport: flat ring vs hierarchical allreduce over the same
+/// 1024-f32 payload on a 4-rank world packed 2 ranks per simulated node.
+/// Only inter-node hops travel the framed socket link (12 B header +
+/// payload per frame), so the two `_frame_bytes` returns are the wire
+/// totals the two algorithms put on the slow links — deterministic, and
+/// gated exactly by `ci/bench_gate.py`: flat ring 12 frames x 256 f32
+/// (12432 B), hierarchical 4 frames x 512 f32 (8240 B).
+fn socket_frames(b: &mut Bench, quick: bool) -> (u64, u64) {
+    banner("socket transport framing: flat ring vs hier (4 ranks, 2/node)");
+    let len = 1024usize;
+    let iters = if quick { 3 } else { 10 };
+    let group: Vec<usize> = (0..4).collect();
+
+    // separate worlds for the two lanes so the frame counters don't mix
+    let eps_ring = socket_world(4, 2).expect("socket world");
+    let ring_counters = eps_ring[0].counters().clone();
+    let group_r = group.clone();
+    let m = b.run_once("socket flat ring allreduce 1024 f32 x4 ranks", || {
+        std::thread::scope(|s| {
+            for ep in eps_ring {
+                let group = group_r.clone();
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    for _ in 0..iters {
+                        ep.allreduce_sum(&mut buf, &group).unwrap();
+                    }
+                });
+            }
+        });
+    });
+    let ring_frame_bytes = ring_counters.socket_frame_bytes() / iters as u64;
+    println!(
+        "   -> {:.1} us/allreduce, {} inter-node frame B/allreduce",
+        m.median / iters as f64 * 1e6,
+        ring_frame_bytes,
+    );
+
+    let eps_hier = socket_world(4, 2).expect("socket world");
+    let hier_counters = eps_hier[0].counters().clone();
+    let m = b.run_once("socket hier allreduce 1024 f32 x4 ranks (2/node)", || {
+        std::thread::scope(|s| {
+            for ep in eps_hier {
+                let group = group.clone();
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    for _ in 0..iters {
+                        allreduce_sum_hier(&ep, &mut buf, &group, 2).unwrap();
+                    }
+                });
+            }
+        });
+    });
+    let hier_frame_bytes = hier_counters.socket_frame_bytes() / iters as u64;
+    println!(
+        "   -> {:.1} us/allreduce, {} inter-node frame B/allreduce",
+        m.median / iters as f64 * 1e6,
+        hier_frame_bytes,
+    );
+    (ring_frame_bytes, hier_frame_bytes)
 }
 
 struct StagingNumbers {

@@ -33,7 +33,7 @@ pub use checks::{check_schedule, Defect, DefectKind};
 pub use model::ModelSpec;
 pub use mutate::{MutationKind, MutationOutcome};
 
-use crate::comm::{GradReduce, ScheduleOp};
+use crate::comm::{GradReduce, ScheduleOp, DEFAULT_BUCKET_ELEMS};
 use crate::engine::hybrid::IoMode;
 use crate::partition::SpatialGrid;
 use crate::tensor::pool::PoolEvent;
@@ -180,6 +180,17 @@ pub fn matrix() -> Vec<(ModelSpec, VerifyCfg)> {
                     // and io axes don't interact with
                     if grid.ways() == 2 && io == IoMode::Store {
                         reduces.push(GradReduce::Monolithic);
+                    }
+                    // hierarchical variant wherever a 2-rank node grouping
+                    // is non-degenerate (world >= 4 members span >= 2 nodes
+                    // with at least one multi-member node), so the checker
+                    // covers the Hier(0)/Hier(1) tag classes and the
+                    // leader-subgroup ring
+                    if world >= 4 && io == IoMode::InMem {
+                        reduces.push(GradReduce::Hier {
+                            bucket_elems: DEFAULT_BUCKET_ELEMS,
+                            ranks_per_node: 2,
+                        });
                     }
                     for reduce in reduces {
                         out.push((

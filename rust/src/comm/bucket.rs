@@ -39,6 +39,13 @@ pub enum GradReduce {
     Monolithic,
     /// Bucketed allreduce overlapped with backward on a worker thread.
     Bucketed { bucket_elems: usize },
+    /// Bucketed overlap whose per-bucket allreduce is the two-level
+    /// intra-node/inter-node [`allreduce_sum_hier`](super::hier::allreduce_sum_hier)
+    /// (`--ranks-per-node` > 1 on the socket backend). Deterministic and
+    /// rank-identical like [`GradReduce::Bucketed`], but with a different
+    /// reduction *order*, so trajectories are not bitwise comparable to
+    /// the flat-ring strategies — which is why it is opt-in.
+    Hier { bucket_elems: usize, ranks_per_node: usize },
 }
 
 impl Default for GradReduce {
@@ -58,7 +65,7 @@ impl GradReduce {
         n: usize,
     ) -> Result<Vec<Option<Box<dyn Communicator>>>> {
         match self {
-            GradReduce::Bucketed { .. } => {
+            GradReduce::Bucketed { .. } | GradReduce::Hier { .. } => {
                 Ok(backend.build_world(n)?.into_iter().map(Some).collect())
             }
             GradReduce::Monolithic => Ok((0..n).map(|_| None).collect()),
@@ -177,6 +184,27 @@ impl OverlapAllreduce {
     /// together (every member must build the same `plan`).
     pub fn start(comm: Box<dyn Communicator>, group: Vec<usize>, plan: BucketPlan)
                  -> OverlapAllreduce {
+        OverlapAllreduce::start_with(comm, group, plan, 1)
+    }
+
+    /// [`OverlapAllreduce::start`] whose worker reduces each bucket with
+    /// the two-level [`allreduce_sum_hier`](super::hier::allreduce_sum_hier)
+    /// instead of the flat ring — the [`GradReduce::Hier`] path.
+    pub fn start_hier(
+        comm: Box<dyn Communicator>,
+        group: Vec<usize>,
+        plan: BucketPlan,
+        ranks_per_node: usize,
+    ) -> OverlapAllreduce {
+        OverlapAllreduce::start_with(comm, group, plan, ranks_per_node)
+    }
+
+    fn start_with(
+        comm: Box<dyn Communicator>,
+        group: Vec<usize>,
+        plan: BucketPlan,
+        ranks_per_node: usize,
+    ) -> OverlapAllreduce {
         let counters = comm.counters().clone();
         let (to_worker, work_rx) = channel::<(usize, Vec<f32>)>();
         let (res_tx, from_worker) = channel::<BucketResult>();
@@ -185,7 +213,16 @@ impl OverlapAllreduce {
             .spawn(move || {
                 while let Ok((b, mut buf)) = work_rx.recv() {
                     let t0 = Instant::now();
-                    let res = comm.allreduce_sum(&mut buf, &group);
+                    let res = if ranks_per_node > 1 {
+                        crate::comm::hier::allreduce_sum_hier(
+                            comm.as_ref(),
+                            &mut buf,
+                            &group,
+                            ranks_per_node,
+                        )
+                    } else {
+                        comm.allreduce_sum(&mut buf, &group)
+                    };
                     let dt = t0.elapsed().as_secs_f64();
                     let msg = match res {
                         Ok(()) => (b, Ok(buf), dt),
@@ -225,6 +262,10 @@ impl OverlapAllreduce {
             (GradReduce::Bucketed { bucket_elems }, Some(ep)) => {
                 let plan = BucketPlan::new(param_sizes, bucket_elems);
                 Some(OverlapAllreduce::start(ep, group, plan))
+            }
+            (GradReduce::Hier { bucket_elems, ranks_per_node }, Some(ep)) => {
+                let plan = BucketPlan::new(param_sizes, bucket_elems);
+                Some(OverlapAllreduce::start_hier(ep, group, plan, ranks_per_node))
             }
             _ => None,
         }

@@ -81,7 +81,10 @@ impl Communicator for Endpoint {
     }
 
     fn on_collective(&self, op: Collective, _elems: usize, _group: &[usize]) {
-        if matches!(op, Collective::AllreduceRing | Collective::AllreduceRd) {
+        if matches!(
+            op,
+            Collective::AllreduceRing | Collective::AllreduceRd | Collective::AllreduceHier
+        ) {
             self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
         }
     }

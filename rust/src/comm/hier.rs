@@ -1,0 +1,191 @@
+//! Hierarchical (two-level) collectives — the HyPar-Flow pattern
+//! (arXiv:1911.05146) for node-grouped worlds.
+//!
+//! A flat ring allreduce sends every byte `2(g-1)/g` times over whichever
+//! link happens to be next in the ring — including the slow inter-node
+//! links. [`allreduce_sum_hier`] instead reduces within each node onto a
+//! **node leader** (cheap intra-node channel hops, [`MsgTag::Hier`]\(0\)),
+//! runs the ring only over the leaders (the inter-node socket hops, with
+//! full payload but `nodes` instead of `g` participants), then broadcasts
+//! the result back within each node ([`MsgTag::Hier`]\(1\)).
+//!
+//! Determinism: intra-node accumulation follows group order, the leader
+//! ring is the shared trait ring, and members copy their leader's buffer
+//! verbatim — so all group members finish with **bit-identical** results,
+//! on every backend. The reduction *order* differs from the flat ring,
+//! though, so hier results are not bitwise comparable to flat ones; that
+//! is why the engines only use this under the opt-in
+//! [`GradReduce::Hier`](super::GradReduce::Hier) and never silently.
+//!
+//! Schedule shape (what `hydra3d verify` sees): one
+//! [`Collective::AllreduceHier`] marker on every participant with the full
+//! group, the member/leader legs as `Hier(0)`/`Hier(1)` tagged p2p
+//! messages, and the leader ring's own [`Collective::AllreduceRing`]
+//! marker on the leader subgroup.
+
+use super::{socket, Collective, Communicator, MsgTag};
+use anyhow::Result;
+
+/// In-place two-level sum-allreduce over `group`, with node membership
+/// derived from `ranks_per_node` (the launcher's consecutive packing,
+/// [`socket::node_of`]). Every member must call with an equal-length
+/// buffer. Falls back to the flat ring when the hierarchy is degenerate
+/// (`ranks_per_node <= 1`, or every member alone on its node).
+pub fn allreduce_sum_hier<C: Communicator + ?Sized>(
+    ep: &C,
+    buf: &mut [f32],
+    group: &[usize],
+    ranks_per_node: usize,
+) -> Result<()> {
+    let g = group.len();
+    if g == 1 {
+        return Ok(());
+    }
+    if ranks_per_node <= 1 {
+        return ep.allreduce_sum(buf, group);
+    }
+    // bucket members by hosting node, preserving group order (all ranks
+    // derive the identical bucketing, so the schedule cannot diverge)
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    for &r in group {
+        let nd = socket::node_of(r, ranks_per_node);
+        match nodes.iter_mut().find(|(n, _)| *n == nd) {
+            Some((_, members)) => members.push(r),
+            None => nodes.push((nd, vec![r])),
+        }
+    }
+    if nodes.len() == g {
+        // every member alone on its node: the hierarchy adds nothing
+        return ep.allreduce_sum(buf, group);
+    }
+    ep.on_collective(Collective::AllreduceHier, buf.len(), group);
+    let leaders: Vec<usize> = nodes.iter().map(|(_, m)| m[0]).collect();
+    let me = ep.rank();
+    let bucket = nodes
+        .iter()
+        .map(|(_, m)| m)
+        .find(|m| m.contains(&me))
+        .expect("rank not in group");
+    let leader = bucket[0];
+    if me == leader {
+        // level 1: reduce the node's members onto the leader, group order
+        for &m in &bucket[1..] {
+            let incoming = ep.recv_tagged(m, MsgTag::Hier(0))?;
+            assert_eq!(incoming.len(), buf.len(), "hier schedule out of sync");
+            crate::util::par::zip_mut(buf, &incoming, |d, s| {
+                for (dst, src) in d.iter_mut().zip(s) {
+                    *dst += src;
+                }
+            });
+        }
+        // level 2: ring over the leaders (the only inter-node traffic)
+        ep.allreduce_sum(buf, &leaders)?;
+        // level 3: broadcast the reduced buffer back within the node
+        for &m in &bucket[1..] {
+            ep.send_tagged(m, buf.to_vec(), MsgTag::Hier(1));
+        }
+    } else {
+        ep.send_tagged(leader, buf.to_vec(), MsgTag::Hier(0));
+        let reduced = ep.recv_tagged(leader, MsgTag::Hier(1))?;
+        assert_eq!(reduced.len(), buf.len(), "hier schedule out of sync");
+        buf.copy_from_slice(&reduced);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{socket_world, world, Communicator};
+    use super::*;
+    use std::thread;
+
+    fn mk_buf(rank: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| ((rank + 1) as f32 * 1e-3).powi((i % 5) as i32 + 1))
+            .collect()
+    }
+
+    fn run_hier<E: Communicator + Send>(
+        eps: Vec<E>,
+        rpn: usize,
+        len: usize,
+    ) -> Vec<Vec<f32>> {
+        let n = eps.len();
+        thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    let group: Vec<usize> = (0..n).collect();
+                    s.spawn(move || {
+                        let mut buf = mk_buf(ep.rank(), len);
+                        allreduce_sum_hier(&ep, &mut buf, &group, rpn).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn hier_sums_and_is_rank_identical() {
+        for (n, rpn) in [(4, 2), (6, 2), (8, 4), (5, 2), (4, 4)] {
+            let out = run_hier(world(n), rpn, 17);
+            let expect: Vec<f32> = (0..17)
+                .map(|i| (0..n).map(|r| mk_buf(r, 17)[i]).sum::<f32>())
+                .collect();
+            for (r, o) in out.iter().enumerate() {
+                assert_eq!(o, &out[0], "rank {r} diverged (n={n} rpn={rpn})");
+                for i in 0..17 {
+                    assert!(
+                        (o[i] - expect[i]).abs() <= 1e-5 * expect[i].abs().max(1.0),
+                        "n={n} rpn={rpn} rank {r} elt {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_bitwise_identical_channel_vs_socket() {
+        let chan = run_hier(world(4), 2, 33);
+        let sock = run_hier(socket_world(4, 2).unwrap(), 2, 33);
+        assert_eq!(chan, sock);
+    }
+
+    #[test]
+    fn degenerate_hierarchy_falls_back_to_ring() {
+        // rpn 1: flat ring, bitwise equal to allreduce_sum
+        let hier = run_hier(world(3), 1, 9);
+        let eps = world(3);
+        let flat: Vec<Vec<f32>> = thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    s.spawn(move || {
+                        let mut buf = mk_buf(ep.rank(), 9);
+                        ep.allreduce_sum(&mut buf, &[0, 1, 2]).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(hier, flat);
+    }
+
+    #[test]
+    fn hier_inter_node_frame_bytes() {
+        // world 4, rpn 2, 1024 f32: only the leader ring (ranks 0 and 2,
+        // one 512-elem reduce-scatter step + one allgather step each)
+        // crosses nodes -> 4 frames of 512 elems
+        let eps = socket_world(4, 2).unwrap();
+        let counters = eps[0].counters().clone();
+        let out = run_hier(eps, 2, 1024);
+        assert_eq!(out.len(), 4);
+        assert_eq!(
+            counters.socket_frame_bytes(),
+            4 * socket::frame_wire_bytes(512)
+        );
+    }
+}

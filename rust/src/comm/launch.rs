@@ -1,0 +1,268 @@
+//! Rank bootstrap for the multi-process socket backend.
+//!
+//! `hydra3d train --backend socket` does not run ranks itself: it writes a
+//! **rendezvous manifest**, fork/execs one `hydra3d worker` process per
+//! node ([`launch`]), and supervises them. Each worker reads the manifest
+//! ([`read_manifest`]), connects its node into the world
+//! ([`socket::connect_node`](super::socket::connect_node) — which includes
+//! the barrier-on-connect handshake), runs the task document, writes its
+//! result to `<results_dir>/node-<i>.json` and exits 0.
+//!
+//! Supervision is fail-fast: the launcher polls all children, and the
+//! first non-zero exit (or launch timeout, `HYDRA3D_LAUNCH_TIMEOUT_MS`,
+//! default 300000) kills the remaining workers and surfaces a clean error
+//! instead of hanging on a world that can never complete its collectives —
+//! the property `tests/socket_backend.rs` exercises by killing a worker.
+//!
+//! The manifest is a single JSON file:
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "world": 4,
+//!   "ranks_per_node": 2,
+//!   "label": "w1234",
+//!   "sock_dir": "/tmp/hydra3d-launch-1234/sock",
+//!   "results_dir": "/tmp/hydra3d-launch-1234/results",
+//!   "hosts": [],
+//!   "task": { "...": "opaque to this module" }
+//! }
+//! ```
+//!
+//! `hosts` non-empty switches rendezvous from Unix-domain sockets to TCP
+//! (one `host:port` per node) — the multi-host path, where the same
+//! manifest file is distributed to every host and each runs its own
+//! `hydra3d worker --manifest ... --node <i>`.
+
+use super::socket::{node_count, Rendezvous};
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Manifest file name inside the launch scratch directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Everything needed to start one multi-process world.
+#[derive(Clone, Debug)]
+pub struct LaunchSpec {
+    pub world: usize,
+    pub ranks_per_node: usize,
+    /// `host:port` per node for TCP rendezvous; empty = Unix-domain
+    /// sockets under the scratch directory.
+    pub hosts: Vec<String>,
+    /// Opaque task document passed through to every worker.
+    pub task: Json,
+}
+
+/// Worker-side view of the manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub rendezvous: Rendezvous,
+    pub results_dir: PathBuf,
+    pub task: Json,
+}
+
+/// Where node `node` writes its result document.
+pub fn result_path(results_dir: &Path, node: usize) -> PathBuf {
+    results_dir.join(format!("node-{node}.json"))
+}
+
+/// Create the scratch layout (`sock/`, `results/`) and write the manifest;
+/// returns the manifest path.
+pub fn write_manifest(scratch: &Path, spec: &LaunchSpec) -> Result<PathBuf> {
+    if spec.world == 0 {
+        bail!("socket world needs at least one rank");
+    }
+    if spec.ranks_per_node == 0 {
+        bail!("ranks-per-node must be >= 1");
+    }
+    let nodes = node_count(spec.world, spec.ranks_per_node);
+    if !spec.hosts.is_empty() && spec.hosts.len() != nodes {
+        bail!("{} host(s) listed for {nodes} node(s)", spec.hosts.len());
+    }
+    let sock_dir = scratch.join("sock");
+    let results_dir = scratch.join("results");
+    std::fs::create_dir_all(&sock_dir)
+        .with_context(|| format!("create {}", sock_dir.display()))?;
+    std::fs::create_dir_all(&results_dir)
+        .with_context(|| format!("create {}", results_dir.display()))?;
+    let doc = obj(vec![
+        ("schema", 1usize.into()),
+        ("world", spec.world.into()),
+        ("ranks_per_node", spec.ranks_per_node.into()),
+        ("label", format!("w{}", std::process::id()).into()),
+        ("sock_dir", sock_dir.to_string_lossy().into_owned().into()),
+        ("results_dir", results_dir.to_string_lossy().into_owned().into()),
+        ("hosts", spec.hosts.clone().into()),
+        ("task", spec.task.clone()),
+    ]);
+    let path = scratch.join(MANIFEST_FILE);
+    std::fs::write(&path, doc.to_string())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// Parse a manifest file into the worker's view.
+pub fn read_manifest(path: &Path) -> Result<Manifest> {
+    let doc = Json::parse_file(path)?;
+    let hosts = doc
+        .req("hosts")?
+        .as_arr()?
+        .iter()
+        .map(|h| Ok(h.as_str()?.to_string()))
+        .collect::<Result<Vec<String>>>()?;
+    Ok(Manifest {
+        rendezvous: Rendezvous {
+            world: doc.req("world")?.as_usize()?,
+            ranks_per_node: doc.req("ranks_per_node")?.as_usize()?,
+            sock_dir: PathBuf::from(doc.req("sock_dir")?.as_str()?),
+            label: doc.req("label")?.as_str()?.to_string(),
+            hosts,
+        },
+        results_dir: PathBuf::from(doc.req("results_dir")?.as_str()?),
+        task: doc.req("task")?.clone(),
+    })
+}
+
+/// Overall supervision timeout: `HYDRA3D_LAUNCH_TIMEOUT_MS`, default
+/// 300000 (5 minutes — must cover the whole worker run, not just the
+/// rendezvous, which has its own `HYDRA3D_CONNECT_TIMEOUT_MS`).
+fn launch_timeout() -> Duration {
+    let ms = std::env::var("HYDRA3D_LAUNCH_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(300_000);
+    Duration::from_millis(ms)
+}
+
+/// Fork/exec one `exe worker --manifest M --node I` per node, supervise
+/// them fail-fast, and return the per-node result documents (node order).
+pub fn launch(exe: &Path, spec: &LaunchSpec, scratch: &Path) -> Result<Vec<Json>> {
+    let manifest = write_manifest(scratch, spec)?;
+    let results_dir = scratch.join("results");
+    let nodes = node_count(spec.world, spec.ranks_per_node);
+    let mut children: Vec<(usize, Child)> = Vec::with_capacity(nodes);
+    for node in 0..nodes {
+        let child = Command::new(exe)
+            .arg("worker")
+            .arg("--manifest")
+            .arg(&manifest)
+            .arg("--node")
+            .arg(node.to_string())
+            .stdin(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawn worker for node {node}"))?;
+        children.push((node, child));
+    }
+
+    let deadline = Instant::now() + launch_timeout();
+    let mut exited = vec![false; nodes];
+    let mut failure: Option<String> = None;
+    loop {
+        let mut all_done = true;
+        for (node, child) in children.iter_mut() {
+            if exited[*node] {
+                continue;
+            }
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    exited[*node] = true;
+                    if !status.success() && failure.is_none() {
+                        failure =
+                            Some(format!("worker for node {node} failed: {status}"));
+                    }
+                }
+                Ok(None) => all_done = false,
+                Err(e) => {
+                    exited[*node] = true;
+                    if failure.is_none() {
+                        failure = Some(format!("worker for node {node}: {e}"));
+                    }
+                }
+            }
+        }
+        if failure.is_some() || all_done {
+            break;
+        }
+        if Instant::now() >= deadline {
+            failure = Some(format!(
+                "launch timeout after {}ms (HYDRA3D_LAUNCH_TIMEOUT_MS)",
+                launch_timeout().as_millis()
+            ));
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    if let Some(msg) = failure {
+        // fail-fast: a dead node means the world's collectives can never
+        // complete, so kill the survivors instead of hanging on them
+        for (node, child) in children.iter_mut() {
+            if !exited[*node] {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+        bail!("{msg}");
+    }
+
+    (0..nodes)
+        .map(|node| {
+            let p = result_path(&results_dir, node);
+            Json::parse_file(&p).with_context(|| {
+                format!("worker for node {node} exited 0 but wrote no result")
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("hydra3d-manifest-test-{}", std::process::id()));
+        let spec = LaunchSpec {
+            world: 5,
+            ranks_per_node: 2,
+            hosts: vec![],
+            task: obj(vec![("model", "cf-nano".into()), ("steps", 3usize.into())]),
+        };
+        let path = write_manifest(&dir, &spec).unwrap();
+        let m = read_manifest(&path).unwrap();
+        assert_eq!(m.rendezvous.world, 5);
+        assert_eq!(m.rendezvous.ranks_per_node, 2);
+        assert_eq!(m.rendezvous.nodes(), 3);
+        assert!(m.rendezvous.hosts.is_empty());
+        assert_eq!(m.task.req("model").unwrap().as_str().unwrap(), "cf-nano");
+        assert_eq!(result_path(&m.results_dir, 2).file_name().unwrap(),
+                   "node-2.json");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_bad_specs() {
+        let dir = std::env::temp_dir()
+            .join(format!("hydra3d-manifest-bad-{}", std::process::id()));
+        let bad_rpn = LaunchSpec {
+            world: 4,
+            ranks_per_node: 0,
+            hosts: vec![],
+            task: Json::Null,
+        };
+        assert!(write_manifest(&dir, &bad_rpn).is_err());
+        let bad_hosts = LaunchSpec {
+            world: 4,
+            ranks_per_node: 2,
+            hosts: vec!["127.0.0.1:4440".into()],
+            task: Json::Null,
+        };
+        let err = write_manifest(&dir, &bad_hosts).unwrap_err().to_string();
+        assert!(err.contains("1 host(s) listed for 2 node(s)"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -32,9 +32,28 @@
 //!   `perfmodel::trace` replays it against the §III-C link model to
 //!   predict communication time for a measured run. Use it to validate
 //!   the performance model or to audit communication volume.
+//! * [`SocketEndpoint`] (module [`socket`], built with [`socket_world`] or
+//!   [`socket::connect_node`]) — the multi-process backend: ranks are
+//!   grouped onto *nodes* (`--ranks-per-node`), intra-node links stay
+//!   lock-free channels, inter-node links are length-prefixed frames over
+//!   Unix-domain or TCP sockets. [`socket_world`] builds the whole world in
+//!   one process over socketpairs (every inter-node byte crosses a real
+//!   socket — the CI smoke path); [`socket::connect_node`] is the
+//!   per-process entry used by `hydra3d worker` after [`launch`] forks the
+//!   node processes and performs the barrier-on-connect handshake.
 //!
 //! Backends are selected with [`CommBackend`]; the engines accept any of
 //! them and must produce identical training trajectories.
+//!
+//! # Hierarchical collectives
+//!
+//! [`hier::allreduce_sum_hier`] is the HyPar-Flow-style two-level
+//! allreduce: intra-node reduce onto a node leader ([`MsgTag::Hier`]\(0\)
+//! traffic), flat ring over the leaders (inter-node), intra-node broadcast
+//! back ([`MsgTag::Hier`]\(1\)). It is deterministic and rank-identical
+//! like every other collective here, but its reduction *order* differs
+//! from the flat ring, so it is opt-in via [`GradReduce::Hier`] rather
+//! than silently swapped in.
 //!
 //! # Overlap
 //!
@@ -47,12 +66,17 @@
 pub mod bucket;
 mod channel;
 pub mod halo;
+pub mod hier;
+pub mod launch;
 pub mod loopback;
+pub mod socket;
 pub mod traced;
 
 pub use bucket::{BucketPlan, GradReduce, OverlapAllreduce, OverlapReport, DEFAULT_BUCKET_ELEMS};
 pub use channel::{world, Endpoint};
+pub use hier::allreduce_sum_hier;
 pub use loopback::Loopback;
+pub use socket::{socket_world, SocketEndpoint};
 pub use traced::{CollectiveEvent, MessageEvent, TraceCollector, Traced};
 
 use anyhow::{bail, Result};
@@ -72,6 +96,11 @@ pub struct Counters {
     /// Data-store redistribution payload bytes (the §III-B group-to-group
     /// shard staging), recorded by `iosim::store` on the sending side.
     pub redist_bytes: AtomicU64,
+    /// Wire bytes of inter-node socket frames (12-byte header + payload),
+    /// recorded by the socket backend at enqueue time on the sending side.
+    /// Zero on every other backend and for intra-node traffic; fully
+    /// deterministic for a fixed config, so CI gates it exactly.
+    pub socket_frame_bytes: AtomicU64,
 }
 
 impl Counters {
@@ -102,6 +131,13 @@ impl Counters {
     pub(crate) fn add_redist_bytes(&self, bytes: u64) {
         self.redist_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
+    /// Inter-node socket frame bytes (header + payload) sent so far.
+    pub fn socket_frame_bytes(&self) -> u64 {
+        self.socket_frame_bytes.load(Ordering::Relaxed)
+    }
+    pub(crate) fn add_socket_frame_bytes(&self, bytes: u64) {
+        self.socket_frame_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
 }
 
 /// Traffic class of a point-to-point message, for per-class accounting
@@ -119,6 +155,9 @@ pub enum MsgTag {
     Redist,
     /// Flatten-boundary scatter of the root's backward activation shards.
     Scatter,
+    /// Hierarchical-allreduce leg: 0 = member-to-leader reduce,
+    /// 1 = leader-to-member broadcast (`comm::hier`).
+    Hier(u8),
 }
 
 impl MsgTag {
@@ -131,6 +170,7 @@ impl MsgTag {
             MsgTag::Halo(_) => "halo",
             MsgTag::Redist => "redist",
             MsgTag::Scatter => "scatter",
+            MsgTag::Hier(_) => "hier",
         }
     }
 }
@@ -142,6 +182,7 @@ impl std::fmt::Display for MsgTag {
             MsgTag::Halo(a) => write!(f, "halo({a})"),
             MsgTag::Redist => write!(f, "redist"),
             MsgTag::Scatter => write!(f, "scatter"),
+            MsgTag::Hier(leg) => write!(f, "hier({leg})"),
         }
     }
 }
@@ -171,6 +212,11 @@ pub enum ScheduleOp {
 pub enum Collective {
     AllreduceRing,
     AllreduceRd,
+    /// Two-level intra-node/inter-node allreduce (`comm::hier`); recorded
+    /// on every participant with the *full* group. The inter-node leg
+    /// additionally records its own [`Collective::AllreduceRing`] on the
+    /// leader subgroup.
+    AllreduceHier,
     ReduceScatter,
     Allgather,
     GatherToRoot,
@@ -192,6 +238,30 @@ fn index_in(group: &[usize], rank: usize) -> usize {
 /// Backends implement the five required methods; every collective is a
 /// provided method layered over `send`/`recv`, so all backends share one
 /// (deterministic, rank-identical) collective implementation.
+///
+/// Endpoints are owned values, moved into their rank's thread (or
+/// process); the usual driving pattern is a scoped thread per rank:
+///
+/// ```
+/// use hydra3d::comm::{world, Communicator};
+///
+/// let eps = world(2); // fully-connected channel world of 2 ranks
+/// let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+///     let hs: Vec<_> = eps
+///         .into_iter()
+///         .map(|ep| {
+///             s.spawn(move || {
+///                 let mut buf = vec![ep.rank() as f32 + 1.0];
+///                 ep.allreduce_sum(&mut buf, &[0, 1]).unwrap();
+///                 buf
+///             })
+///         })
+///         .collect();
+///     hs.into_iter().map(|h| h.join().unwrap()).collect()
+/// });
+/// // 1.0 + 2.0, bit-identical on every rank
+/// assert_eq!(outs, vec![vec![3.0], vec![3.0]]);
+/// ```
 pub trait Communicator: Send {
     /// This rank's id in the world.
     fn rank(&self) -> usize;
@@ -402,6 +472,12 @@ pub enum CommBackend {
     Loopback,
     /// Channel world wrapped in message/collective tracing.
     Traced(Arc<TraceCollector>),
+    /// In-process socket world: ranks are packed onto simulated nodes of
+    /// `ranks_per_node` and every inter-node message crosses a real
+    /// Unix socketpair as a length-prefixed frame ([`socket_world`]).
+    /// Same collective semantics and counter totals as [`CommBackend::Channel`]
+    /// (plus [`Counters::socket_frame_bytes`]).
+    Socket { ranks_per_node: usize },
 }
 
 impl CommBackend {
@@ -422,6 +498,12 @@ impl CommBackend {
                 .into_iter()
                 .map(|e| Box::new(Traced::new(e, tc.clone())) as Box<dyn Communicator>)
                 .collect()),
+            CommBackend::Socket { ranks_per_node } => {
+                Ok(socket_world(n, *ranks_per_node)?
+                    .into_iter()
+                    .map(|e| Box::new(e) as Box<dyn Communicator>)
+                    .collect())
+            }
         }
     }
 
@@ -431,6 +513,7 @@ impl CommBackend {
             CommBackend::Channel => "channel",
             CommBackend::Loopback => "loopback",
             CommBackend::Traced(_) => "traced",
+            CommBackend::Socket { .. } => "socket",
         }
     }
 }

@@ -1,0 +1,731 @@
+//! The multi-process socket backend.
+//!
+//! Ranks are grouped onto **nodes** of `ranks_per_node` consecutive ranks
+//! (`node_of(r) = r / ranks_per_node`, the launcher's packing order).
+//! Intra-node links are the same unbounded `std::sync::mpsc` channels the
+//! channel backend uses; inter-node links are stream sockets carrying
+//! length-prefixed frames. Per inter-node link each process runs one
+//! **writer pump** (drains an unbounded frame queue into the socket — so
+//! [`Communicator::send`] never blocks, preserving the engine's
+//! send-then-receive halo protocol) and one **reader pump** (demultiplexes
+//! incoming frames to the destination rank's delivery channel).
+//!
+//! # Wire format
+//!
+//! One frame per message: a 12-byte little-endian header
+//! `[src: u32][dst: u32][elems: u32]` followed by `elems` f32 payload
+//! words, also little-endian. f32 payloads cross the wire bit-exactly
+//! (`to_le_bytes`/`from_le_bytes` round-trip every bit pattern), and the
+//! collectives are the shared trait defaults, so a socket world computes
+//! **bit-identical** results to a channel world of the same size — the
+//! property `tests/socket_backend.rs` gates. Frame wire volume
+//! (header + payload) is counted into [`Counters::socket_frame_bytes`] at
+//! enqueue time on the sending side, which makes it deterministic for a
+//! fixed configuration and exactly gateable in CI.
+//!
+//! # Entry points
+//!
+//! * [`socket_world`] — the whole world in one process, nodes simulated by
+//!   `UnixStream::pair` socketpairs. Every inter-node byte crosses a real
+//!   kernel socket; used by `CommBackend::Socket`, the equivalence tests
+//!   and the bench `socket_smoke` lane.
+//! * [`connect_node`] — one process per node: binds this node's listener,
+//!   dials every lower node (with retry until `HYDRA3D_CONNECT_TIMEOUT_MS`,
+//!   default 30000), accepts every higher node, then runs a
+//!   barrier-on-connect handshake through node 0 before any engine traffic
+//!   starts. Rendezvous is Unix-domain sockets under
+//!   [`Rendezvous::sock_dir`] or, when [`Rendezvous::hosts`] is set, TCP —
+//!   the multi-host path. `comm::launch` forks the node processes and
+//!   writes the manifest this consumes.
+//!
+//! # Teardown
+//!
+//! Dropping a node's endpoints disconnects its frame queues; each writer
+//! pump drains, shuts down its write half and exits; the peer's reader
+//! pump sees EOF and drops its delivery senders; pending receives fail
+//! with the same "peer disconnected" error the channel backend produces.
+//! No thread joins anything — teardown is a pure EOF cascade.
+
+use super::{Collective, Communicator, Counters};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+type Msg = Vec<f32>;
+/// (src, dst, payload) — one queued inter-node message.
+type Frame = (u32, u32, Vec<f32>);
+
+/// Frame header wire size: `[src: u32][dst: u32][elems: u32]`, LE.
+pub const FRAME_HEADER_BYTES: u64 = 12;
+
+/// Wire bytes of one inter-node frame carrying `elems` f32s.
+pub fn frame_wire_bytes(elems: usize) -> u64 {
+    FRAME_HEADER_BYTES + 4 * elems as u64
+}
+
+/// Node hosting rank `rank` under the launcher's consecutive packing.
+pub fn node_of(rank: usize, ranks_per_node: usize) -> usize {
+    rank / ranks_per_node.max(1)
+}
+
+/// Number of nodes hosting a world of `world` ranks.
+pub fn node_count(world: usize, ranks_per_node: usize) -> usize {
+    world.div_ceil(ranks_per_node.max(1))
+}
+
+/// The global rank range hosted by `node` (the last node takes the
+/// remainder when `world` is not divisible).
+pub fn node_ranks(node: usize, world: usize, ranks_per_node: usize) -> std::ops::Range<usize> {
+    let rpn = ranks_per_node.max(1);
+    (node * rpn).min(world)..((node + 1) * rpn).min(world)
+}
+
+/// An established inter-node stream: Unix-domain locally, TCP multi-host.
+enum NodeStream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl NodeStream {
+    fn try_clone(&self) -> std::io::Result<NodeStream> {
+        match self {
+            NodeStream::Unix(s) => s.try_clone().map(NodeStream::Unix),
+            NodeStream::Tcp(s) => s.try_clone().map(NodeStream::Tcp),
+        }
+    }
+
+    /// Close the write half only: the peer's reader sees EOF while our own
+    /// reader keeps draining whatever the peer still sends.
+    fn shutdown_write(&self) {
+        let _ = match self {
+            NodeStream::Unix(s) => s.shutdown(Shutdown::Write),
+            NodeStream::Tcp(s) => s.shutdown(Shutdown::Write),
+        };
+    }
+}
+
+impl Read for NodeStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NodeStream::Unix(s) => s.read(buf),
+            NodeStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NodeStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NodeStream::Unix(s) => s.write(buf),
+            NodeStream::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NodeStream::Unix(s) => s.flush(),
+            NodeStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Serialize one frame into `scratch` and write it out in a single call.
+fn write_frame<W: Write>(
+    w: &mut W,
+    src: u32,
+    dst: u32,
+    data: &[f32],
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    scratch.clear();
+    scratch.reserve(FRAME_HEADER_BYTES as usize + 4 * data.len());
+    scratch.extend_from_slice(&src.to_le_bytes());
+    scratch.extend_from_slice(&dst.to_le_bytes());
+    scratch.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for v in data {
+        scratch.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(scratch)
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<(usize, usize, Vec<f32>)>> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES as usize];
+    match r.read_exact(&mut hdr) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let src = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let dst = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let elems = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+    let mut raw = vec![0u8; 4 * elems];
+    r.read_exact(&mut raw)?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Some((src, dst, data)))
+}
+
+/// Writer pump for one inter-node link: drain the frame queue into the
+/// stream, then shut the write half so the peer's reader sees EOF. A write
+/// error (peer died) exits the pump; the sender-side error then surfaces
+/// as "peer node link closed" on the next enqueue.
+fn spawn_writer(stream: NodeStream, rx: Receiver<Frame>) {
+    std::thread::Builder::new()
+        .name("socket-writer".into())
+        .spawn(move || {
+            let Ok(inner) = stream.try_clone() else { return };
+            let mut w = BufWriter::new(inner);
+            let mut scratch = Vec::new();
+            while let Ok((src, dst, data)) = rx.recv() {
+                if write_frame(&mut w, src, dst, &data, &mut scratch).is_err()
+                    || w.flush().is_err()
+                {
+                    break;
+                }
+            }
+            drop(w);
+            stream.shutdown_write();
+        })
+        .expect("spawn socket writer");
+}
+
+/// Reader pump for one inter-node link: demultiplex incoming frames into
+/// the destination ranks' delivery channels until EOF. A frame for an
+/// already-dropped endpoint is discarded (teardown is EOF-driven).
+fn spawn_reader(stream: NodeStream, deliver: HashMap<(usize, usize), Sender<Msg>>) {
+    std::thread::Builder::new()
+        .name("socket-reader".into())
+        .spawn(move || {
+            let mut r = BufReader::new(stream);
+            while let Ok(Some((src, dst, data))) = read_frame(&mut r) {
+                if let Some(tx) = deliver.get(&(dst, src)) {
+                    let _ = tx.send(data);
+                }
+            }
+        })
+        .expect("spawn socket reader");
+}
+
+/// A rank's link to one destination rank.
+enum Link {
+    /// Same node: straight into the destination's delivery channel.
+    Local(Sender<Msg>),
+    /// Other node: enqueue a frame on the writer pump of that node's link.
+    Remote(Sender<Frame>),
+}
+
+/// One rank's endpoint into a socket world — same ordering and collective
+/// semantics as the channel backend's `Endpoint`.
+pub struct SocketEndpoint {
+    rank: usize,
+    world: usize,
+    node: usize,
+    /// Indexed by destination rank.
+    links: Vec<Link>,
+    /// Indexed by source rank (FIFO per sender, like the channel world).
+    rxs: Vec<Receiver<Msg>>,
+    counters: Arc<Counters>,
+}
+
+impl SocketEndpoint {
+    /// The node hosting this rank.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+}
+
+impl Communicator for SocketEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    /// Asynchronous send (never blocks): local messages go straight into
+    /// the peer's delivery channel, remote ones onto the unbounded frame
+    /// queue of the inter-node writer pump.
+    fn send(&self, to: usize, data: Vec<f32>) {
+        self.counters
+            .bytes
+            .fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        match &self.links[to] {
+            Link::Local(tx) => tx.send(data).expect("peer endpoint dropped"),
+            Link::Remote(tx) => {
+                self.counters.add_socket_frame_bytes(frame_wire_bytes(data.len()));
+                tx.send((self.rank as u32, to as u32, data))
+                    .expect("peer node link closed");
+            }
+        }
+    }
+
+    fn recv(&self, from: usize) -> Result<Vec<f32>> {
+        self.rxs[from]
+            .recv()
+            .map_err(|_| anyhow!("rank {}: peer {from} disconnected", self.rank))
+    }
+
+    fn counters(&self) -> &Arc<Counters> {
+        &self.counters
+    }
+
+    fn on_collective(&self, op: Collective, _elems: usize, _group: &[usize]) {
+        if matches!(
+            op,
+            Collective::AllreduceRing | Collective::AllreduceRd | Collective::AllreduceHier
+        ) {
+            self.counters.allreduces.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Build an `n`-rank socket world **in one process**, packing ranks onto
+/// simulated nodes of `ranks_per_node` connected by `UnixStream::pair`
+/// socketpairs. All endpoints share one [`Counters`], so world-total
+/// counters aggregate exactly as in a channel world (plus
+/// [`Counters::socket_frame_bytes`] for the inter-node wire volume).
+pub fn socket_world(n: usize, ranks_per_node: usize) -> Result<Vec<SocketEndpoint>> {
+    if n == 0 {
+        bail!("socket world needs at least one rank");
+    }
+    if ranks_per_node == 0 {
+        bail!("ranks-per-node must be >= 1");
+    }
+    let rpn = ranks_per_node;
+    let nodes = node_count(n, rpn);
+    let counters = Arc::new(Counters::default());
+
+    // delivery channels: deliver_tx[dst][src] feeds rxs[dst][src]
+    let mut deliver_tx: Vec<Vec<Sender<Msg>>> = Vec::with_capacity(n);
+    let mut deliver_rx: Vec<Vec<Receiver<Msg>>> = Vec::with_capacity(n);
+    for _dst in 0..n {
+        let (mut txs, mut rxs) = (Vec::with_capacity(n), Vec::with_capacity(n));
+        for _src in 0..n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        deliver_tx.push(txs);
+        deliver_rx.push(rxs);
+    }
+
+    // one socketpair per unordered node pair; one frame queue + writer +
+    // reader pump per direction
+    let mut queue_tx: HashMap<(usize, usize), Sender<Frame>> = HashMap::new();
+    for a in 0..nodes {
+        for b in a + 1..nodes {
+            let (sa, sb) = UnixStream::pair().context("node socketpair")?;
+            for (local, peer, s) in [(a, b, sa), (b, a, sb)] {
+                let stream = NodeStream::Unix(s);
+                let (tx, rx) = channel::<Frame>();
+                queue_tx.insert((local, peer), tx);
+                spawn_writer(stream.try_clone().context("clone node stream")?, rx);
+                let mut deliver = HashMap::new();
+                for dst in node_ranks(local, n, rpn) {
+                    for src in node_ranks(peer, n, rpn) {
+                        deliver.insert((dst, src), deliver_tx[dst][src].clone());
+                    }
+                }
+                spawn_reader(stream, deliver);
+            }
+        }
+    }
+
+    let mut eps = Vec::with_capacity(n);
+    for (rank, rx_row) in deliver_rx.into_iter().enumerate() {
+        let node = node_of(rank, rpn);
+        let links = (0..n)
+            .map(|dst| {
+                let dnode = node_of(dst, rpn);
+                if dnode == node {
+                    Link::Local(deliver_tx[dst][rank].clone())
+                } else {
+                    Link::Remote(queue_tx[&(node, dnode)].clone())
+                }
+            })
+            .collect();
+        eps.push(SocketEndpoint {
+            rank,
+            world: n,
+            node,
+            links,
+            rxs: rx_row,
+            counters: counters.clone(),
+        });
+    }
+    Ok(eps)
+}
+
+/// Rendezvous description for a multi-process world. `comm::launch` writes
+/// it as the manifest file the `hydra3d worker` subcommand reads.
+#[derive(Clone, Debug)]
+pub struct Rendezvous {
+    pub world: usize,
+    pub ranks_per_node: usize,
+    /// Directory of the per-node Unix-domain listener sockets
+    /// (`<sock_dir>/<label>-<node>.sock`); used when `hosts` is empty.
+    pub sock_dir: PathBuf,
+    /// Label distinguishing concurrent worlds in one `sock_dir`.
+    pub label: String,
+    /// `host:port` per node — when non-empty, rendezvous is TCP (the
+    /// multi-host path) and `sock_dir` is ignored.
+    pub hosts: Vec<String>,
+}
+
+impl Rendezvous {
+    pub fn nodes(&self) -> usize {
+        node_count(self.world, self.ranks_per_node)
+    }
+
+    fn sock_path(&self, node: usize) -> PathBuf {
+        self.sock_dir.join(format!("{}-{node}.sock", self.label))
+    }
+}
+
+/// Connect-phase timeout: `HYDRA3D_CONNECT_TIMEOUT_MS`, default 30000.
+fn connect_timeout() -> Duration {
+    let ms = std::env::var("HYDRA3D_CONNECT_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(30_000);
+    Duration::from_millis(ms)
+}
+
+/// The listener half of the rendezvous (higher nodes dial into it).
+enum NodeListener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl NodeListener {
+    fn set_nonblocking(&self) -> std::io::Result<()> {
+        match self {
+            NodeListener::Unix(l) => l.set_nonblocking(true),
+            NodeListener::Tcp(l) => l.set_nonblocking(true),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<NodeStream> {
+        match self {
+            NodeListener::Unix(l) => l.accept().map(|(s, _)| NodeStream::Unix(s)),
+            NodeListener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                NodeStream::Tcp(s)
+            }),
+        }
+    }
+}
+
+/// Dial node `peer`'s listener, retrying until the deadline (its process
+/// may not have bound yet).
+fn dial(rv: &Rendezvous, peer: usize, deadline: Instant) -> Result<NodeStream> {
+    loop {
+        let attempt = if rv.hosts.is_empty() {
+            UnixStream::connect(rv.sock_path(peer)).map(NodeStream::Unix)
+        } else {
+            TcpStream::connect(&rv.hosts[peer]).map(|s| {
+                let _ = s.set_nodelay(true);
+                NodeStream::Tcp(s)
+            })
+        };
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "rendezvous timeout dialing node {peer} \
+                         (HYDRA3D_CONNECT_TIMEOUT_MS): {e}"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Establish this node's links to every peer node and run the
+/// barrier-on-connect handshake; returns the endpoints of the ranks this
+/// node hosts ([`node_ranks`]). Connection topology: every node *dials*
+/// all lower-numbered nodes and *accepts* all higher-numbered ones, each
+/// dialer identifying itself with a 4-byte hello. After all links stand,
+/// every node reports readiness to node 0 and blocks until node 0 releases
+/// the world, so no engine traffic races the rendezvous.
+pub fn connect_node(rv: &Rendezvous, node: usize) -> Result<Vec<SocketEndpoint>> {
+    if rv.world == 0 {
+        bail!("socket world needs at least one rank");
+    }
+    if rv.ranks_per_node == 0 {
+        bail!("ranks-per-node must be >= 1");
+    }
+    let nodes = rv.nodes();
+    if node >= nodes {
+        bail!("node {node} out of range ({nodes} node(s) for world {})", rv.world);
+    }
+    if !rv.hosts.is_empty() && rv.hosts.len() != nodes {
+        bail!("rendezvous lists {} host(s) for {nodes} node(s)", rv.hosts.len());
+    }
+    let deadline = Instant::now() + connect_timeout();
+
+    // bind our listener first so lower-numbered dialers can retry into it
+    let listener = if nodes > 1 && node < nodes - 1 {
+        let l = if rv.hosts.is_empty() {
+            let path = rv.sock_path(node);
+            let _ = std::fs::remove_file(&path);
+            NodeListener::Unix(
+                UnixListener::bind(&path)
+                    .with_context(|| format!("bind {}", path.display()))?,
+            )
+        } else {
+            NodeListener::Tcp(
+                TcpListener::bind(&rv.hosts[node])
+                    .with_context(|| format!("bind {}", rv.hosts[node]))?,
+            )
+        };
+        l.set_nonblocking().context("listener nonblocking")?;
+        Some(l)
+    } else {
+        None
+    };
+
+    // dial every lower node, identifying ourselves with a hello frame
+    let mut streams: HashMap<usize, NodeStream> = HashMap::new();
+    for peer in 0..node {
+        let mut s = dial(rv, peer, deadline)?;
+        s.write_all(&(node as u32).to_le_bytes()).context("send hello")?;
+        s.flush().context("flush hello")?;
+        streams.insert(peer, s);
+    }
+
+    // accept every higher node (they may dial in any order)
+    if let Some(l) = &listener {
+        while streams.len() < nodes - 1 {
+            match l.accept() {
+                Ok(mut s) => {
+                    let peer = read_u32(&mut s).context("read hello")? as usize;
+                    if peer <= node || peer >= nodes {
+                        bail!("unexpected hello from node {peer}");
+                    }
+                    streams.insert(peer, s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        let missing: Vec<usize> = (node + 1..nodes)
+                            .filter(|p| !streams.contains_key(p))
+                            .collect();
+                        bail!(
+                            "rendezvous timeout waiting for node(s) {missing:?} \
+                             (HYDRA3D_CONNECT_TIMEOUT_MS)"
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+    }
+    if rv.hosts.is_empty() {
+        let _ = std::fs::remove_file(rv.sock_path(node));
+    }
+
+    // barrier-on-connect: everyone reports 'R'eady to node 0 and blocks on
+    // its 'G'o, so no frame traffic races a still-connecting node
+    if nodes > 1 {
+        if node == 0 {
+            for peer in 1..nodes {
+                let s = streams.get_mut(&peer).expect("link");
+                let mut b = [0u8; 1];
+                s.read_exact(&mut b).context("barrier ready")?;
+                if b != *b"R" {
+                    bail!("bad barrier byte from node {peer}");
+                }
+            }
+            for peer in 1..nodes {
+                let s = streams.get_mut(&peer).expect("link");
+                s.write_all(b"G").and_then(|_| s.flush()).context("barrier go")?;
+            }
+        } else {
+            let s = streams.get_mut(&0).expect("link to node 0");
+            s.write_all(b"R").and_then(|_| s.flush()).context("barrier ready")?;
+            let mut b = [0u8; 1];
+            s.read_exact(&mut b).context("barrier go")?;
+            if b != *b"G" {
+                bail!("bad barrier byte from node 0");
+            }
+        }
+    }
+
+    // local delivery channels: deliver[(dst, src)] for our hosted ranks
+    let counters = Arc::new(Counters::default());
+    let local = node_ranks(node, rv.world, rv.ranks_per_node);
+    let mut deliver_tx: HashMap<(usize, usize), Sender<Msg>> = HashMap::new();
+    let mut deliver_rx: HashMap<(usize, usize), Receiver<Msg>> = HashMap::new();
+    for dst in local.clone() {
+        for src in 0..rv.world {
+            let (tx, rx) = channel();
+            deliver_tx.insert((dst, src), tx);
+            deliver_rx.insert((dst, src), rx);
+        }
+    }
+
+    // frame queue + pumps per established link
+    let mut queue_tx: HashMap<usize, Sender<Frame>> = HashMap::new();
+    for (peer, stream) in streams {
+        let (tx, rx) = channel::<Frame>();
+        queue_tx.insert(peer, tx);
+        spawn_writer(stream.try_clone().context("clone node stream")?, rx);
+        let mut deliver = HashMap::new();
+        for dst in local.clone() {
+            for src in node_ranks(peer, rv.world, rv.ranks_per_node) {
+                deliver.insert((dst, src), deliver_tx[&(dst, src)].clone());
+            }
+        }
+        spawn_reader(stream, deliver);
+    }
+
+    let mut eps = Vec::with_capacity(local.len());
+    for rank in local.clone() {
+        let links = (0..rv.world)
+            .map(|dst| {
+                let dnode = node_of(dst, rv.ranks_per_node);
+                if dnode == node {
+                    Link::Local(deliver_tx[&(dst, rank)].clone())
+                } else {
+                    Link::Remote(queue_tx[&dnode].clone())
+                }
+            })
+            .collect();
+        let rxs = (0..rv.world)
+            .map(|src| deliver_rx.remove(&(rank, src)).expect("delivery channel"))
+            .collect();
+        eps.push(SocketEndpoint {
+            rank,
+            world: rv.world,
+            node,
+            links,
+            rxs,
+            counters: counters.clone(),
+        });
+    }
+    Ok(eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_world<F>(n: usize, rpn: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(&SocketEndpoint) -> Vec<f32> + Send + Sync + Copy,
+    {
+        let eps = socket_world(n, rpn).unwrap();
+        thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|ep| s.spawn(move || f(&ep)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn p2p_ordering_across_nodes() {
+        // ranks 0 and 1 live on different nodes: FIFO must hold over the wire
+        let out = run_world(2, 1, |ep| {
+            if ep.rank() == 0 {
+                ep.send(1, vec![1.0]);
+                ep.send(1, vec![2.0]);
+                vec![]
+            } else {
+                let a = ep.recv(0).unwrap();
+                let b = ep.recv(0).unwrap();
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn allreduce_matches_channel_bitwise() {
+        // adversarial floats over a 2-node split: socket collectives must be
+        // bit-identical to the channel world's (shared trait defaults +
+        // bit-exact LE framing)
+        let mk_buf = |rank: usize| -> Vec<f32> {
+            (0..33)
+                .map(|i| ((rank + 1) as f32 * 1e-3).powi((i % 7) as i32 + 1))
+                .collect()
+        };
+        let sock = run_world(4, 2, move |ep| {
+            let mut buf = mk_buf(ep.rank());
+            ep.allreduce_sum(&mut buf, &[0, 1, 2, 3]).unwrap();
+            buf
+        });
+        let eps = super::super::world(4);
+        let chan: Vec<Vec<f32>> = thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    s.spawn(move || {
+                        let mut buf = mk_buf(ep.rank());
+                        ep.allreduce_sum(&mut buf, &[0, 1, 2, 3]).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(sock, chan);
+    }
+
+    #[test]
+    fn frame_bytes_count_inter_node_only() {
+        let eps = socket_world(4, 2).unwrap();
+        let counters = eps[0].counters().clone();
+        thread::scope(|s| {
+            for ep in eps {
+                s.spawn(move || {
+                    let r = ep.rank();
+                    // intra-node pair exchange: 0<->1 and 2<->3
+                    let buddy = r ^ 1;
+                    ep.send(buddy, vec![0.0; 10]);
+                    ep.recv(buddy).unwrap();
+                    // inter-node pair exchange: 0<->2 and 1<->3
+                    let far = (r + 2) % 4;
+                    ep.send(far, vec![0.0; 10]);
+                    ep.recv(far).unwrap();
+                });
+            }
+        });
+        // 4 inter-node messages of 10 f32 -> 4 * (12 + 40) frame bytes;
+        // payload counters cover all 8 messages like the channel backend
+        assert_eq!(counters.socket_frame_bytes(), 4 * frame_wire_bytes(10));
+        assert_eq!(counters.bytes(), 8 * 40);
+        assert_eq!(counters.messages(), 8);
+    }
+
+    #[test]
+    fn node_math() {
+        assert_eq!(node_count(4, 2), 2);
+        assert_eq!(node_count(5, 2), 3);
+        assert_eq!(node_ranks(2, 5, 2), 4..5);
+        assert_eq!(node_of(3, 2), 1);
+        assert!(socket_world(2, 0).is_err());
+    }
+}

@@ -69,6 +69,11 @@ pub fn train_fused_with(
                                                 opts.batch_global, opts.steps));
     let endpoints = backend.build_world(opts.groups)?;
     let grad_eps = reduce.build_grad_world(backend, opts.groups)?;
+    // world-shared counters: read only after every rank joins (a rank
+    // reading them at its own finish races its peers' final sends)
+    let comm_counters = endpoints[0].counters().clone();
+    let grad_counters =
+        grad_eps.iter().flatten().next().map(|ep| ep.counters().clone());
 
     let reports: Vec<Result<TrainReport>> = std::thread::scope(|s| {
         endpoints
@@ -97,7 +102,12 @@ pub fn train_fused_with(
             out = Some(rep);
         }
     }
-    Ok(out.unwrap())
+    let mut out = out.unwrap();
+    out.comm_bytes = comm_counters.bytes()
+        + grad_counters.as_ref().map(|c| c.bytes()).unwrap_or(0);
+    out.socket_frame_bytes = comm_counters.socket_frame_bytes()
+        + grad_counters.map(|c| c.socket_frame_bytes()).unwrap_or(0);
+    Ok(out)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -227,9 +237,7 @@ fn run_group(
         records.push(StepRecord { step, loss: loss_global, lr, io_wait: 0.0 });
     }
 
-    let mut comm_bytes = ep.counters().bytes();
     if let Some(ov) = overlap.take() {
-        comm_bytes += ov.counters().bytes();
         ov.shutdown()?;
     }
     Ok(TrainReport {
@@ -237,12 +245,15 @@ fn run_group(
         params,
         running: (run_mean, run_var),
         phases,
-        comm_bytes,
+        // world totals are filled in by `train_fused_with` post-join — the
+        // counters are world-shared and racy to read per-rank
+        comm_bytes: 0,
         halo_bytes: [0; 3],
         io_exposed: 0.0,
         io_overlapped: 0.0,
         ingest_bytes: 0,
         redist_bytes: 0,
+        socket_frame_bytes: 0,
     })
 }
 
@@ -350,7 +361,7 @@ pub fn dry_run_fused(
         size: n,
         ranks: tc_compute.op_streams(),
     }];
-    if matches!(cfg.reduce, GradReduce::Bucketed { .. }) {
+    if !matches!(cfg.reduce, GradReduce::Monolithic) {
         worlds.push(WorldOps {
             name: "grad".to_string(),
             size: n,

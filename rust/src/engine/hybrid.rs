@@ -34,7 +34,9 @@ use super::{
     dropout_mask, init_params, sample_schedule_epochs, LrSchedule, PhaseTimes,
     StepRecord, TrainReport, BN_EPS, BN_MOMENTUM, LEAKY_SLOPE,
 };
-use crate::comm::{halo, CommBackend, Communicator, GradReduce, MsgTag, OverlapAllreduce};
+use crate::comm::{
+    halo, CommBackend, Communicator, Counters, GradReduce, MsgTag, OverlapAllreduce,
+};
 use crate::data::container::Container;
 use crate::iosim::store::{AsyncStaging, DataStore, StoreSource};
 use crate::partition::{GridNeighbors, GridTopology, SpatialGrid};
@@ -177,9 +179,6 @@ struct RankIoStats {
     ingest_bytes: u64,
     redist_bytes: u64,
     overlapped_secs: f64,
-    /// Staging-world traffic not visible in the compute world's counters
-    /// (the async prefetch worker's second world).
-    comm_bytes: u64,
 }
 
 impl RankIo {
@@ -231,20 +230,27 @@ impl RankIo {
                 ingest_bytes: s.store.ingest_bytes,
                 redist_bytes: s.store.redist_bytes,
                 overlapped_secs: 0.0,
-                // blocking staging runs on the compute world: its bytes are
-                // already in the compute counters
-                comm_bytes: 0,
             }),
             RankIo::StoreAsync(a) => {
-                let counters = a.counters().clone();
                 let st = a.shutdown()?;
                 Ok(RankIoStats {
                     ingest_bytes: st.ingest_bytes,
                     redist_bytes: st.redist_bytes,
                     overlapped_secs: st.redist_secs,
-                    comm_bytes: counters.bytes(),
                 })
             }
+        }
+    }
+
+    /// Counter handle of this driver's staging world, if it runs one (the
+    /// async prefetch worker's second world — its traffic is not visible
+    /// in the compute world's counters). The handle is world-shared:
+    /// totals are only deterministic once every rank has joined, which is
+    /// why [`run_world`] reads it, not the ranks themselves.
+    fn staging_counters(&self) -> Option<Arc<Counters>> {
+        match self {
+            RankIo::StoreAsync(a) => Some(a.counters().clone()),
+            _ => None,
         }
     }
 }
@@ -359,6 +365,14 @@ fn run_world(
     assert_eq!(ios.len(), topo.world_size());
     let endpoints = backend.build_world(topo.world_size())?;
     let grad_eps = reduce.build_grad_world(backend, topo.world_size())?;
+    // snapshot the world-shared counter handles now and read them only
+    // after every rank thread has joined — the one point where the totals
+    // are deterministic (a rank reading them during its own teardown races
+    // whatever its peers are still sending)
+    let comm_counters = endpoints[0].counters().clone();
+    let grad_counters =
+        grad_eps.iter().flatten().next().map(|ep| ep.counters().clone());
+    let staging_counters = ios.iter().find_map(RankIo::staging_counters);
 
     let reports: Vec<Result<TrainReport>> = std::thread::scope(|s| {
         let handles: Vec<_> = endpoints
@@ -408,7 +422,133 @@ fn run_world(
     out.redist_bytes = redist;
     out.io_exposed = exposed;
     out.io_overlapped = overlapped;
+    out.comm_bytes = comm_counters.bytes()
+        + grad_counters.as_ref().map(|c| c.bytes()).unwrap_or(0)
+        + staging_counters.as_ref().map(|c| c.bytes()).unwrap_or(0);
+    out.halo_bytes = comm_counters.halo_bytes_axes();
+    out.socket_frame_bytes = comm_counters.socket_frame_bytes()
+        + grad_counters.map(|c| c.socket_frame_bytes()).unwrap_or(0)
+        + staging_counters.map(|c| c.socket_frame_bytes()).unwrap_or(0);
     Ok(out)
+}
+
+/// One node's share of a multi-process `--backend socket` run — what
+/// `hydra3d worker` executes after
+/// [`connect_node`](crate::comm::socket::connect_node).
+///
+/// All counters are send-side, so the per-node totals are disjoint: the
+/// launcher sums them over nodes and recovers the single-process world
+/// totals bit-for-bit (the backend-equivalence gate in
+/// `tests/socket_backend.rs`).
+pub struct NodeReport {
+    /// Rank 0's training view — `Some` only on the node hosting rank 0.
+    /// Its byte counters stay zero (this process cannot see remote ranks'
+    /// counters); use the node totals below.
+    pub report: Option<TrainReport>,
+    /// Bytes sent by this node's ranks on the compute + gradient worlds.
+    pub comm_bytes: u64,
+    /// Halo bytes sent by this node's ranks, per spatial axis.
+    pub halo_bytes: [u64; 3],
+    /// Inter-node wire bytes framed by this node's ranks
+    /// ([`Counters::socket_frame_bytes`]).
+    pub socket_frame_bytes: u64,
+}
+
+/// Drive [`run_rank`] for one node's local ranks over pre-connected
+/// endpoints (multi-process analogue of [`run_world`], in-memory I/O only
+/// — every worker regenerates the dataset from the seed, so samples never
+/// cross process boundaries outside the engine's own schedule).
+///
+/// `endpoints` and `grad_eps` are this node's consecutive ranks in world
+/// order; `grad_eps[i]` must be `None` exactly when `reduce` is
+/// [`GradReduce::Monolithic`] (mirroring
+/// [`GradReduce::build_grad_world`]).
+pub fn train_hybrid_node(
+    rt: &RuntimeHandle,
+    opts: &HybridOpts,
+    source: Arc<dyn SampleSource>,
+    reduce: GradReduce,
+    endpoints: Vec<Box<dyn Communicator>>,
+    grad_eps: Vec<Option<Box<dyn Communicator>>>,
+) -> Result<NodeReport> {
+    let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
+    let (plan, pad_axes) = {
+        let (p, axes) = info.hybrid_plan(&opts.grid)?;
+        (Arc::new(p.clone()), axes)
+    };
+    if opts.batch_global % opts.groups != 0 {
+        bail!("batch {} not divisible by {} groups", opts.batch_global, opts.groups);
+    }
+    let topo = GridTopology::new(opts.groups, opts.grid);
+    if endpoints.is_empty() {
+        bail!("node hosts no ranks");
+    }
+    if endpoints.len() != grad_eps.len() {
+        bail!("{} endpoints but {} grad endpoints", endpoints.len(), grad_eps.len());
+    }
+    let sched = Arc::new(sample_schedule_epochs(opts.seed, source.len(),
+                                                opts.batch_global, opts.steps));
+    // per-process counters: they only ever see this node's ranks, so the
+    // post-join read is both deterministic and exactly this node's share
+    let comm_counters = endpoints[0].counters().clone();
+    let grad_counters =
+        grad_eps.iter().flatten().next().map(|ep| ep.counters().clone());
+
+    let reports: Vec<(usize, Result<TrainReport>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .zip(grad_eps)
+            .map(|(ep, grad_ep)| {
+                let rank = ep.rank();
+                let rt = rt.clone();
+                let info = info.clone();
+                let plan = plan.clone();
+                let sched = sched.clone();
+                let opts = opts.clone();
+                let io = RankIo::Shared(source.clone());
+                let h = s.spawn(move || {
+                    run_rank(RankCtx {
+                        ep,
+                        grad_ep,
+                        reduce,
+                        topo,
+                        pad_axes,
+                        rt,
+                        info,
+                        plan,
+                        io,
+                        sched,
+                        opts,
+                    })
+                });
+                (rank, h)
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|(rank, h)| (rank, h.join().expect("rank panicked")))
+            .collect()
+    });
+    let mut report = None;
+    for (rank, rep) in reports {
+        let rep = rep.with_context(|| format!("rank {rank}"))?;
+        if rank == 0 {
+            report = Some(rep);
+        }
+    }
+    let comm_bytes = comm_counters.bytes()
+        + grad_counters.as_ref().map(|c| c.bytes()).unwrap_or(0);
+    let socket_frame_bytes = comm_counters.socket_frame_bytes()
+        + grad_counters
+            .as_ref()
+            .map(|c| c.socket_frame_bytes())
+            .unwrap_or(0);
+    Ok(NodeReport {
+        report,
+        comm_bytes,
+        halo_bytes: comm_counters.halo_bytes_axes(),
+        socket_frame_bytes,
+    })
 }
 
 struct RankCtx {
@@ -965,25 +1105,25 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
         records.push(StepRecord { step, loss: lbuf[0], lr, io_wait });
     }
 
-    let mut comm_bytes = cx.ep.counters().bytes();
-    let halo_bytes = cx.ep.counters().halo_bytes_axes();
     if let Some(ov) = overlap.take() {
-        comm_bytes += ov.counters().bytes();
         ov.shutdown()?;
     }
     let iostats = cx.io.finish()?;
-    comm_bytes += iostats.comm_bytes;
+    // byte totals stay zero here: the counters are world-shared, so the
+    // caller ([`run_world`] / [`train_hybrid_node`]) fills them in after
+    // every rank has joined — the only deterministic read point
     Ok(TrainReport {
         records,
         params,
         running: (run_mean, run_var),
         phases,
-        comm_bytes,
-        halo_bytes,
+        comm_bytes: 0,
+        halo_bytes: [0; 3],
         io_exposed: io_exposed_total,
         io_overlapped: iostats.overlapped_secs,
         ingest_bytes: iostats.ingest_bytes,
         redist_bytes: iostats.redist_bytes,
+        socket_frame_bytes: 0,
     })
 }
 
@@ -1151,7 +1291,7 @@ pub fn dry_run_hybrid(spec: &ModelSpec, cfg: &VerifyCfg) -> Result<Schedule> {
         size: n,
         ranks: tc_compute.op_streams(),
     }];
-    if matches!(cfg.reduce, GradReduce::Bucketed { .. }) {
+    if !matches!(cfg.reduce, GradReduce::Monolithic) {
         worlds.push(WorldOps {
             name: "grad".to_string(),
             size: n,

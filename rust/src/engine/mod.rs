@@ -265,6 +265,10 @@ pub struct TrainReport {
     /// Store redistribution bytes, summed over all ranks — the §III-B
     /// group-to-group staging volume (deterministic given seed/topology).
     pub redist_bytes: u64,
+    /// Inter-node wire bytes framed by the socket transport (12-byte
+    /// header + payload per frame) — zero for every other backend, and
+    /// for socket worlds where all traffic stays intra-node.
+    pub socket_frame_bytes: u64,
 }
 
 impl TrainReport {

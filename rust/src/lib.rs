@@ -6,8 +6,10 @@
 //!
 //! This crate is **Layer 3**: the distributed coordinator. It owns
 //!
-//! * the process topology and the simulated multi-rank communicator
-//!   ([`comm`], [`partition`]),
+//! * the process topology and the multi-rank communicator — in-process
+//!   channel worlds for tests plus a real multi-process socket backend
+//!   (Unix-domain/TCP transport, rank launcher, hierarchical two-level
+//!   collectives) behind the same trait ([`comm`], [`partition`]),
 //! * the hybrid-parallel training engine — full D×H×W spatial partitioning
 //!   with per-axis face halo exchange, distributed batch-norm,
 //!   data-parallel gradient allreduce ([`engine`]),

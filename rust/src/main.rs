@@ -4,6 +4,8 @@
 //!   table1 | table2 | fig --id N   regenerate the paper's tables/figures
 //!   train                          functional training (fused or hybrid)
 //!   verify                         static communication-schedule checks
+//!   comm-smoke                     multi-process socket-backend smoke run
+//!   worker                         one node of a multi-process launch
 //!   info                           artifact/manifest summary
 //!
 //! Examples:
@@ -12,26 +14,34 @@
 //!   hydra3d train --model cf16 --ways 2 --groups 2 --batch 4 --steps 20
 //!   hydra3d train --model cf16 --grid 2x2x2 --batch 2 --steps 10
 //!   hydra3d train --model unet16 --ways 2 --task ct
+//!   hydra3d train --model cf16 --ways 4 --backend socket --ranks-per-node 2
+//!   hydra3d comm-smoke --world 4 --ranks-per-node 2
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use hydra3d::analysis::{self, EngineKind, ModelSpec, VerifyCfg};
-use hydra3d::comm::{CommBackend, GradReduce, TraceCollector, DEFAULT_BUCKET_ELEMS};
+use hydra3d::comm::launch::{self, LaunchSpec, Manifest};
+use hydra3d::comm::{
+    allreduce_sum_hier, socket, CommBackend, Communicator, GradReduce, SocketEndpoint,
+    TraceCollector, DEFAULT_BUCKET_ELEMS,
+};
 use hydra3d::config::ClusterConfig;
 use hydra3d::coordinator;
 use hydra3d::data::container::{write_dataset, write_label_dataset, Container};
 use hydra3d::data::ct::ct_dataset;
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
-use hydra3d::engine::hybrid::{train_hybrid_store, train_hybrid_with, HybridOpts,
-                              InMemorySource, IoMode};
-use hydra3d::engine::LrSchedule;
+use hydra3d::engine::hybrid::{train_hybrid_node, train_hybrid_store,
+                              train_hybrid_with, HybridOpts, InMemorySource,
+                              IoMode, SampleSource};
+use hydra3d::engine::{LrSchedule, TrainReport};
 use hydra3d::iosim::pipeline::io_time_from_redist_trace;
 use hydra3d::partition::SpatialGrid;
 use hydra3d::perfmodel::trace::replay;
 use hydra3d::perfmodel::{Link, SrModel};
 use hydra3d::runtime::RuntimeHandle;
 use hydra3d::tensor::Tensor;
-use hydra3d::util::cli::Command;
-use std::path::PathBuf;
+use hydra3d::util::cli::{Args, Command};
+use hydra3d::util::json::{obj, Json};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 fn main() {
@@ -81,6 +91,8 @@ fn run(args: &[String]) -> Result<()> {
         }
         "train" => train_cmd(rest)?,
         "verify" => verify_cmd(rest)?,
+        "worker" => worker_cmd(rest)?,
+        "comm-smoke" => comm_smoke_cmd(rest)?,
         "info" => info_cmd()?,
         "--help" | "-h" | "help" => println!("{}", usage()),
         other => bail!("unknown command {other:?}\n{}", usage()),
@@ -99,6 +111,11 @@ fn usage() -> String {
        verify [...]      static communication-schedule checks (deadlock, tag,\n\
                          byte matching); --matrix for the CI sweep,\n\
                          --mutations K for the seeded-defect harness\n\
+       comm-smoke [...]  launch a real multi-process socket world and run\n\
+                         flat-ring + hierarchical allreduces (no artifacts\n\
+                         needed; prints deterministic wire-byte counters)\n\
+       worker [...]      one node of a multi-process launch (internal; spawned\n\
+                         by `train --backend socket` and `comm-smoke`)\n\
        info              artifact manifest summary\n"
         .into()
 }
@@ -124,25 +141,48 @@ fn train_cmd(rest: &[String]) -> Result<()> {
               through the §III-B ingestion/redistribution pipeline)",
              Some("inmem"))
         .opt("comm",
-             "communicator backend: channel | loopback | traced (traced is \
-              diagnostic: it records every message in memory)",
+             "communicator backend: channel | loopback | traced | socket \
+              (traced is diagnostic: it records every message in memory; \
+              socket is the in-process socket transport — see --backend for \
+              the multi-process launcher)",
              Some("channel"))
+        .opt("backend",
+             "process backend: channel (ranks are threads of this process) | \
+              socket (fork/exec one worker per simulated node and train over \
+              Unix-domain sockets; in-memory I/O only)",
+             Some("channel"))
+        .opt("ranks-per-node",
+             "simulated node size: ranks r share node r/N; N > 1 switches \
+              the gradient allreduce to the hierarchical two-level schedule",
+             Some("1"))
+        .opt("report",
+             "write a bit-exact run report (losses as f32 bit patterns plus \
+              all byte counters) to this JSON path",
+             None)
         .opt("bucket",
              "allreduce bucket size in f32 elems (0 = monolithic; default \
               comm::DEFAULT_BUCKET_ELEMS)",
              None);
     let a = c.parse(rest)?;
     let model = a.req("model")?.to_string();
+    let rpn = a.get_usize("ranks-per-node")?.unwrap();
+    if rpn == 0 {
+        bail!("--ranks-per-node must be >= 1");
+    }
+    let reduce = grad_reduce_of(a.get_usize("bucket")?.unwrap_or(DEFAULT_BUCKET_ELEMS),
+                                rpn)?;
+    match a.req("backend")? {
+        "channel" => {}
+        "socket" => return train_socket_cmd(&a, reduce, rpn),
+        other => bail!("unknown --backend {other:?} (channel | socket)"),
+    }
     let trace = Arc::new(TraceCollector::new());
     let backend = match a.req("comm")? {
         "channel" => CommBackend::Channel,
         "loopback" => CommBackend::Loopback,
         "traced" => CommBackend::Traced(trace.clone()),
+        "socket" => CommBackend::Socket { ranks_per_node: rpn },
         other => bail!("unknown --comm backend {other:?}"),
-    };
-    let reduce = match a.get_usize("bucket")?.unwrap_or(DEFAULT_BUCKET_ELEMS) {
-        0 => GradReduce::Monolithic,
-        elems => GradReduce::Bucketed { bucket_elems: elems },
     };
     let rt = RuntimeHandle::start(&artifacts_dir())?;
     let info = rt.manifest().model(&model)?.clone();
@@ -240,6 +280,11 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         rep.phases.allreduce,
         rep.phases.allreduce_overlapped,
     );
+    if let Some(path) = a.get("report") {
+        RunFingerprint::from_report(backend.name(),
+                                    opts.groups * opts.grid.ways(), &rep)
+            .write(Path::new(path))?;
+    }
     if let CommBackend::Traced(tc) = &backend {
         let world = opts.groups * opts.grid.ways();
         let cluster = ClusterConfig::default();
@@ -276,6 +321,430 @@ fn train_cmd(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Map `--bucket` / `--ranks-per-node` to the gradient-reduction strategy.
+fn grad_reduce_of(bucket: usize, ranks_per_node: usize) -> Result<GradReduce> {
+    Ok(match (bucket, ranks_per_node) {
+        (0, 1) => GradReduce::Monolithic,
+        (0, _) => bail!("--bucket 0 (monolithic) has no hierarchical \
+                         variant; use a bucketed reduce with --ranks-per-node"),
+        (elems, 1) => GradReduce::Bucketed { bucket_elems: elems },
+        (elems, rpn) => GradReduce::Hier { bucket_elems: elems, ranks_per_node: rpn },
+    })
+}
+
+/// Bit-exact run fingerprint: losses as f32 bit patterns plus every byte
+/// counter. `tests/socket_backend.rs` diffs these across backends — all
+/// fields except `backend` and `socket_frame_bytes` must match exactly
+/// between a channel run and the equivalent socket run.
+struct RunFingerprint {
+    backend: &'static str,
+    world: usize,
+    losses_bits: Vec<u32>,
+    comm_bytes: u64,
+    halo_bytes: [u64; 3],
+    ingest_bytes: u64,
+    redist_bytes: u64,
+    socket_frame_bytes: u64,
+}
+
+impl RunFingerprint {
+    fn from_report(backend: &'static str, world: usize, rep: &TrainReport) -> Self {
+        RunFingerprint {
+            backend,
+            world,
+            losses_bits: rep.records.iter().map(|r| r.loss.to_bits()).collect(),
+            comm_bytes: rep.comm_bytes,
+            halo_bytes: rep.halo_bytes,
+            ingest_bytes: rep.ingest_bytes,
+            redist_bytes: rep.redist_bytes,
+            socket_frame_bytes: rep.socket_frame_bytes,
+        }
+    }
+
+    fn write(&self, path: &Path) -> Result<()> {
+        let losses: Vec<Json> = self
+            .losses_bits
+            .iter()
+            .map(|&b| Json::from(b as usize))
+            .collect();
+        let halo: Vec<Json> =
+            self.halo_bytes.iter().map(|&b| Json::from(b as usize)).collect();
+        let doc = obj(vec![
+            ("schema", 1usize.into()),
+            ("backend", self.backend.into()),
+            ("world", self.world.into()),
+            ("losses_bits", losses.into()),
+            ("comm_bytes", (self.comm_bytes as usize).into()),
+            ("halo_bytes", halo.into()),
+            ("ingest_bytes", (self.ingest_bytes as usize).into()),
+            ("redist_bytes", (self.redist_bytes as usize).into()),
+            ("socket_frame_bytes", (self.socket_frame_bytes as usize).into()),
+        ]);
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("write report {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// `train --backend socket`: write a rendezvous manifest, fork/exec one
+/// `hydra3d worker` per simulated node, and aggregate their node reports
+/// (node 0 carries the loss trajectory; byte counters are summed — they
+/// are send-side and therefore disjoint across nodes).
+fn train_socket_cmd(a: &Args, reduce: GradReduce, rpn: usize) -> Result<()> {
+    if a.req("io")? != "inmem" {
+        bail!("--backend socket supports --io inmem only (every worker \
+               regenerates the dataset from the seed; the store pipeline is \
+               single-process)");
+    }
+    if a.req("comm")? != "channel" {
+        bail!("--backend socket chooses its own transport; drop --comm");
+    }
+    let grid = match a.get("grid") {
+        Some(g) => SpatialGrid::parse(g)?,
+        None => SpatialGrid::depth(a.get_usize("ways")?.unwrap()),
+    };
+    let groups = a.get_usize("groups")?.unwrap();
+    let steps = a.get_usize("steps")?.unwrap();
+    let world = groups * grid.ways();
+    let task = obj(vec![
+        ("cmd", "train".into()),
+        ("model", a.req("model")?.into()),
+        ("grid", grid.to_string().into()),
+        ("groups", groups.into()),
+        ("batch", a.get_usize("batch")?.unwrap().into()),
+        ("steps", steps.into()),
+        ("lr", a.get_f64("lr")?.unwrap().into()),
+        ("seed", a.get_usize("seed")?.unwrap().into()),
+        ("samples", a.get_usize("samples")?.unwrap().into()),
+        ("dataset", a.req("task")?.into()),
+        ("bucket",
+         a.get_usize("bucket")?.unwrap_or(DEFAULT_BUCKET_ELEMS).into()),
+        ("artifacts",
+         artifacts_dir().to_string_lossy().into_owned().into()),
+    ]);
+    let spec = LaunchSpec { world, ranks_per_node: rpn, hosts: vec![], task };
+    let scratch = std::env::temp_dir()
+        .join(format!("hydra3d-launch-{}", std::process::id()));
+    let t0 = std::time::Instant::now();
+    let results = launch::launch(&std::env::current_exe()?, &spec, &scratch)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut fp = RunFingerprint {
+        backend: "socket",
+        world,
+        losses_bits: Vec::new(),
+        comm_bytes: 0,
+        halo_bytes: [0; 3],
+        ingest_bytes: 0,
+        redist_bytes: 0,
+        socket_frame_bytes: 0,
+    };
+    for r in &results {
+        fp.comm_bytes += r.req("comm_bytes")?.as_usize()? as u64;
+        let hb = r.req("halo_bytes")?.as_arr()?;
+        for (axis, b) in hb.iter().enumerate().take(3) {
+            fp.halo_bytes[axis] += b.as_usize()? as u64;
+        }
+        fp.socket_frame_bytes += r.req("socket_frame_bytes")?.as_usize()? as u64;
+        let lb = r.req("losses_bits")?.as_arr()?;
+        if !lb.is_empty() {
+            fp.losses_bits = lb
+                .iter()
+                .map(|v| Ok(v.as_usize()? as u32))
+                .collect::<Result<Vec<u32>>>()?;
+        }
+    }
+    if fp.losses_bits.is_empty() {
+        bail!("no worker reported a loss trajectory (rank 0 missing?)");
+    }
+    let first = f32::from_bits(fp.losses_bits[0]);
+    let last = f32::from_bits(*fp.losses_bits.last().unwrap());
+    println!(
+        "trained {} (grid {}) for {} steps over {} worker processes \
+         ({} node(s) x {} rank(s), {:?} reduce): loss {:.6} -> {:.6} in \
+         {:.1}s ({:.0} KiB comm, {:.0} KiB inter-node frames, halo KiB \
+         D/H/W {:.0}/{:.0}/{:.0})",
+        a.req("model")?,
+        grid,
+        steps,
+        results.len(),
+        results.len(),
+        rpn,
+        reduce,
+        first,
+        last,
+        dt,
+        fp.comm_bytes as f64 / 1024.0,
+        fp.socket_frame_bytes as f64 / 1024.0,
+        fp.halo_bytes[0] as f64 / 1024.0,
+        fp.halo_bytes[1] as f64 / 1024.0,
+        fp.halo_bytes[2] as f64 / 1024.0,
+    );
+    if let Some(path) = a.get("report") {
+        fp.write(Path::new(path))?;
+    }
+    std::fs::remove_dir_all(&scratch).ok();
+    Ok(())
+}
+
+/// The gradient world's rendezvous: same topology as the compute world,
+/// distinct socket label — and for TCP rendezvous each node's port
+/// shifted by +1, so the two listeners never collide.
+fn grad_rendezvous(rv: &socket::Rendezvous) -> Result<socket::Rendezvous> {
+    let mut g = rv.clone();
+    g.label = format!("{}-grad", rv.label);
+    g.hosts = rv
+        .hosts
+        .iter()
+        .map(|h| {
+            let (host, port) = h
+                .rsplit_once(':')
+                .ok_or_else(|| anyhow!("bad host:port {h:?}"))?;
+            let port: u32 = port.parse()?;
+            Ok(format!("{host}:{}", port + 1))
+        })
+        .collect::<Result<Vec<String>>>()?;
+    Ok(g)
+}
+
+/// `hydra3d worker --manifest M --node I` — one node of a multi-process
+/// launch. Internal: spawned by [`launch::launch`]; reads the manifest,
+/// runs the task, writes `results_dir/node-I.json`, exits 0.
+fn worker_cmd(rest: &[String]) -> Result<()> {
+    let c = Command::new("worker",
+                         "one node of a --backend socket launch (internal)")
+        .opt("manifest", "rendezvous manifest path", None)
+        .opt("node", "this worker's node index", None);
+    let a = c.parse(rest)?;
+    let node: usize = a.req("node")?.parse()?;
+    // test hook: die before rendezvous so the launcher's fail-fast
+    // supervision (not a hang) is what the kill-the-child test observes
+    if let Ok(v) = std::env::var("HYDRA3D_TEST_DIE_NODE") {
+        if v.parse::<usize>().ok() == Some(node) {
+            eprintln!("worker node {node}: HYDRA3D_TEST_DIE_NODE set, exiting");
+            std::process::exit(101);
+        }
+    }
+    let m = launch::read_manifest(Path::new(a.req("manifest")?))?;
+    let out = match m.task.req("cmd")?.as_str()? {
+        "train" => worker_train(&m, node)?,
+        "smoke" => worker_smoke(&m, node)?,
+        other => bail!("unknown worker task {other:?}"),
+    };
+    let path = launch::result_path(&m.results_dir, node);
+    std::fs::write(&path, out.to_string())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Worker half of `train --backend socket`: regenerate the dataset from
+/// the seed, connect this node's ranks into the compute (and, unless
+/// monolithic, gradient) socket worlds, and run
+/// [`train_hybrid_node`] over them.
+fn worker_train(m: &Manifest, node: usize) -> Result<Json> {
+    let t = &m.task;
+    let model = t.req("model")?.as_str()?.to_string();
+    let grid = SpatialGrid::parse(t.req("grid")?.as_str()?)?;
+    let steps = t.req("steps")?.as_usize()?;
+    let seed = t.req("seed")?.as_usize()? as u64;
+    let n = t.req("samples")?.as_usize()?;
+    let reduce =
+        grad_reduce_of(t.req("bucket")?.as_usize()?, m.rendezvous.ranks_per_node)?;
+    let rt = RuntimeHandle::start(Path::new(t.req("artifacts")?.as_str()?))?;
+    let info = rt.manifest().model(&model)?.clone();
+    let size = info.input_size;
+    let (inputs, targets) = if t.req("dataset")?.as_str()? == "ct" {
+        ct_dataset(size, info.n_classes.max(2), n, seed)
+    } else {
+        let ds = GrfDataset::generate(&GrfConfig { size, seed }, n);
+        (ds.inputs, ds.targets)
+    };
+    let source: Arc<dyn SampleSource> = Arc::new(InMemorySource { inputs, targets });
+    let opts = HybridOpts {
+        model,
+        grid,
+        groups: t.req("groups")?.as_usize()?,
+        batch_global: t.req("batch")?.as_usize()?,
+        steps,
+        seed,
+        schedule: LrSchedule {
+            lr0: t.req("lr")?.as_f64()?,
+            floor_frac: 0.01,
+            total_steps: steps,
+        },
+        log_every: 0, // workers stay quiet; the launcher prints the summary
+    };
+    let eps: Vec<Box<dyn Communicator>> = socket::connect_node(&m.rendezvous, node)?
+        .into_iter()
+        .map(|e| Box::new(e) as Box<dyn Communicator>)
+        .collect();
+    let grad_eps: Vec<Option<Box<dyn Communicator>>> =
+        if matches!(reduce, GradReduce::Monolithic) {
+            eps.iter().map(|_| None).collect()
+        } else {
+            socket::connect_node(&grad_rendezvous(&m.rendezvous)?, node)?
+                .into_iter()
+                .map(|e| Some(Box::new(e) as Box<dyn Communicator>))
+                .collect()
+        };
+    let nr = train_hybrid_node(&rt, &opts, source, reduce, eps, grad_eps)?;
+    let losses: Vec<Json> = nr
+        .report
+        .as_ref()
+        .map(|r| {
+            r.records
+                .iter()
+                .map(|rec| Json::from(rec.loss.to_bits() as usize))
+                .collect()
+        })
+        .unwrap_or_default();
+    let halo: Vec<Json> =
+        nr.halo_bytes.iter().map(|&b| Json::from(b as usize)).collect();
+    Ok(obj(vec![
+        ("node", node.into()),
+        ("losses_bits", losses.into()),
+        ("comm_bytes", (nr.comm_bytes as usize).into()),
+        ("halo_bytes", halo.into()),
+        ("socket_frame_bytes", (nr.socket_frame_bytes as usize).into()),
+    ]))
+}
+
+/// Deterministic adversarial buffer for the smoke allreduces: mixed
+/// signs and magnitudes so reduction-order drift cannot cancel out.
+fn smoke_val(rank: usize, i: usize) -> f32 {
+    let sign = if (rank + i) % 2 == 0 { 1.0f32 } else { -1.0 };
+    sign * ((rank + 2) as f32).powi((i % 7) as i32 - 3)
+}
+
+/// Order-sensitive FNV-1a fold over the exact bit patterns.
+fn bits_checksum(buf: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in buf {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run one collective phase on every local rank (own thread each), assert
+/// the ranks agree bitwise, and hand the endpoints back for the next
+/// phase. Reading the node's counters between phases is exact: counting
+/// is send-side and the local senders have all joined.
+fn smoke_phase<F>(
+    eps: Vec<SocketEndpoint>,
+    elems: usize,
+    f: F,
+) -> Result<(Vec<SocketEndpoint>, u64)>
+where
+    F: Fn(&SocketEndpoint, &mut [f32]) -> Result<()> + Sync,
+{
+    let outs: Vec<Result<(SocketEndpoint, u64)>> = std::thread::scope(|s| {
+        eps.into_iter()
+            .map(|ep| {
+                let f = &f;
+                s.spawn(move || -> Result<(SocketEndpoint, u64)> {
+                    let mut buf: Vec<f32> =
+                        (0..elems).map(|i| smoke_val(ep.rank(), i)).collect();
+                    f(&ep, &mut buf)?;
+                    let cs = bits_checksum(&buf);
+                    Ok((ep, cs))
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("smoke rank panicked"))
+            .collect()
+    });
+    let mut eps = Vec::with_capacity(outs.len());
+    let mut checksum = None;
+    for out in outs {
+        let (ep, cs) = out?;
+        match checksum {
+            None => checksum = Some(cs),
+            Some(c0) if c0 != cs => {
+                bail!("smoke: local ranks disagree ({c0:016x} vs {cs:016x})")
+            }
+            Some(_) => {}
+        }
+        eps.push(ep);
+    }
+    Ok((eps, checksum.unwrap()))
+}
+
+/// Worker half of `comm-smoke`: flat ring allreduce, then the
+/// hierarchical two-level allreduce, reporting bitwise result checksums
+/// and this node's inter-node frame bytes per phase.
+fn worker_smoke(m: &Manifest, node: usize) -> Result<Json> {
+    let elems = m.task.req("elems")?.as_usize()?;
+    let rpn = m.rendezvous.ranks_per_node;
+    let world = m.rendezvous.world;
+    let group: Vec<usize> = (0..world).collect();
+    let eps = socket::connect_node(&m.rendezvous, node)?;
+    let counters = eps[0].counters().clone();
+    let (eps, ring_bits) =
+        smoke_phase(eps, elems, |ep, buf| ep.allreduce_sum(buf, &group))?;
+    let ring_frames = counters.socket_frame_bytes();
+    let (eps, hier_bits) = smoke_phase(eps, elems, |ep, buf| {
+        allreduce_sum_hier(ep, buf, &group, rpn)
+    })?;
+    let hier_frames = counters.socket_frame_bytes() - ring_frames;
+    drop(eps);
+    Ok(obj(vec![
+        ("node", node.into()),
+        ("ring_bits", format!("{ring_bits:016x}").into()),
+        ("hier_bits", format!("{hier_bits:016x}").into()),
+        ("ring_frame_bytes", (ring_frames as usize).into()),
+        ("hier_frame_bytes", (hier_frames as usize).into()),
+    ]))
+}
+
+/// `hydra3d comm-smoke` — launch a real multi-process socket world (no
+/// artifacts needed) and run one flat-ring and one hierarchical allreduce
+/// over it. Every node must land on bitwise-identical results; the summed
+/// per-node frame counters are deterministic and printed for CI.
+fn comm_smoke_cmd(rest: &[String]) -> Result<()> {
+    let c = Command::new(
+        "comm-smoke",
+        "multi-process socket smoke: ring + hierarchical allreduce",
+    )
+    .opt("world", "total ranks", Some("4"))
+    .opt("ranks-per-node", "ranks per simulated node", Some("2"))
+    .opt("elems", "f32 elements per rank buffer", Some("1024"));
+    let a = c.parse(rest)?;
+    let world = a.get_usize("world")?.unwrap();
+    let rpn = a.get_usize("ranks-per-node")?.unwrap();
+    let elems = a.get_usize("elems")?.unwrap();
+    if rpn == 0 {
+        bail!("--ranks-per-node must be >= 1");
+    }
+    let task = obj(vec![("cmd", "smoke".into()), ("elems", elems.into())]);
+    let spec = LaunchSpec { world, ranks_per_node: rpn, hosts: vec![], task };
+    let scratch = std::env::temp_dir()
+        .join(format!("hydra3d-smoke-{}", std::process::id()));
+    let results = launch::launch(&std::env::current_exe()?, &spec, &scratch)?;
+    let ring0 = results[0].req("ring_bits")?.as_str()?.to_string();
+    let hier0 = results[0].req("hier_bits")?.as_str()?.to_string();
+    let (mut ring_frames, mut hier_frames) = (0usize, 0usize);
+    for r in &results {
+        if r.req("ring_bits")?.as_str()? != ring0
+            || r.req("hier_bits")?.as_str()? != hier0
+        {
+            bail!("comm-smoke: nodes disagree on allreduce results");
+        }
+        ring_frames += r.req("ring_frame_bytes")?.as_usize()?;
+        hier_frames += r.req("hier_frame_bytes")?.as_usize()?;
+    }
+    std::fs::remove_dir_all(&scratch).ok();
+    println!(
+        "comm-smoke ok: world {world} x rpn {rpn} ({} process(es)), {elems} \
+         f32/rank; ring {ring0} hier {hier0}; \
+         socket_ring_frame_bytes={ring_frames} \
+         socket_hier_frame_bytes={hier_frames}",
+        results.len(),
+    );
+    Ok(())
+}
+
 fn verify_cmd(rest: &[String]) -> Result<()> {
     let c = Command::new(
         "verify",
@@ -293,7 +762,9 @@ fn verify_cmd(rest: &[String]) -> Result<()> {
                      group)", None)
     .opt("seed", "schedule seed", Some("11"))
     .opt("io", "inmem | store | store-async", Some("inmem"))
-    .opt("reduce", "bucketed | mono", Some("bucketed"))
+    .opt("reduce", "bucketed | mono | hier (hier: two-level node-grouped \
+                    allreduce, see --ranks-per-node)", Some("bucketed"))
+    .opt("ranks-per-node", "node size for --reduce hier", Some("2"))
     .opt("engine", "hybrid | fused", Some("hybrid"))
     .flag("matrix", "check every CI matrix configuration instead of one")
     .opt("mutations",
@@ -375,7 +846,11 @@ fn verify_cmd(rest: &[String]) -> Result<()> {
         reduce: match a.req("reduce")? {
             "bucketed" => GradReduce::default(),
             "mono" => GradReduce::Monolithic,
-            other => bail!("unknown --reduce {other:?} (bucketed | mono)"),
+            "hier" => GradReduce::Hier {
+                bucket_elems: DEFAULT_BUCKET_ELEMS,
+                ranks_per_node: a.get_usize("ranks-per-node")?.unwrap(),
+            },
+            other => bail!("unknown --reduce {other:?} (bucketed | mono | hier)"),
         },
         engine: match a.req("engine")? {
             "hybrid" => EngineKind::Hybrid,

@@ -76,6 +76,70 @@ pub fn replay(trace: &TraceCollector, world: usize, link: &SrModel) -> TraceRepl
     }
 }
 
+/// Node-aware priced replay: the same p2p recording, split into intra-node
+/// and inter-node hops and priced with **two** link models.
+///
+/// This is the multi-process view of the §III-C validation: under the
+/// socket backend a world of `world` ranks packs `ranks_per_node`
+/// consecutive ranks per node ([`node_of`](crate::comm::socket::node_of)),
+/// so a message is an intra-node hop (shared memory / Unix socket —
+/// `intra` link) exactly when sender and receiver share a node, and an
+/// inter-node hop (TCP — `inter` link) otherwise. Pricing the two classes
+/// separately is what makes the hierarchical allreduce
+/// ([`allreduce_sum_hier`](crate::comm::allreduce_sum_hier)) show its
+/// advantage: it moves the same payload but shifts hops from the `inter`
+/// column into the `intra` column.
+#[derive(Clone, Debug, Default)]
+pub struct HierReplay {
+    /// Messages whose endpoints share a node.
+    pub intra_messages: usize,
+    /// Messages crossing a node boundary.
+    pub inter_messages: usize,
+    /// Payload bytes on intra-node hops.
+    pub intra_bytes: u64,
+    /// Payload bytes on inter-node hops.
+    pub inter_bytes: u64,
+    /// Per-rank serialized send time (seconds) under the two-link model.
+    pub per_rank_secs: Vec<f64>,
+    /// Busiest-rank send time — the node-aware critical-path estimate.
+    pub p2p_critical_secs: f64,
+}
+
+/// Replay `trace` (from a world of `world` ranks, `ranks_per_node` ranks
+/// packed per node) pricing intra-node hops with `intra` and inter-node
+/// hops with `inter`. With `ranks_per_node == 1` every hop is inter-node
+/// and this degenerates to [`replay`] over the `inter` link.
+pub fn replay_hier(
+    trace: &TraceCollector,
+    world: usize,
+    ranks_per_node: usize,
+    intra: &SrModel,
+    inter: &SrModel,
+) -> HierReplay {
+    use crate::comm::socket::node_of;
+    let mut out = HierReplay {
+        per_rank_secs: vec![0.0f64; world],
+        ..HierReplay::default()
+    };
+    for m in &trace.messages() {
+        let same_node =
+            node_of(m.from, ranks_per_node) == node_of(m.to, ranks_per_node);
+        let link = if same_node { intra } else { inter };
+        if same_node {
+            out.intra_messages += 1;
+            out.intra_bytes += m.bytes;
+        } else {
+            out.inter_messages += 1;
+            out.inter_bytes += m.bytes;
+        }
+        if m.from < world {
+            out.per_rank_secs[m.from] += link.time(m.bytes as f64);
+        }
+    }
+    out.p2p_critical_secs = out.per_rank_secs.iter().copied().fold(0.0, f64::max);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +260,85 @@ mod tests {
         assert_eq!(rep.redist_bytes, 2 * 50 * 4);
         assert_eq!(rep.bytes, (2 * 50 * 4 + 2 * 7 * 4) as u64);
         assert_eq!(rep.halo_bytes_axis, [0; 3]);
+    }
+
+    fn run_traced_hier(n: usize, rpn: usize, len: usize) -> Arc<TraceCollector> {
+        let tc = Arc::new(TraceCollector::new());
+        let eps: Vec<_> = world(n)
+            .into_iter()
+            .map(|e| Traced::new(e, tc.clone()))
+            .collect();
+        thread::scope(|s| {
+            for ep in eps {
+                s.spawn(move || {
+                    let group: Vec<usize> = (0..n).collect();
+                    let mut buf = vec![1.0f32; len];
+                    crate::comm::allreduce_sum_hier(&ep, &mut buf, &group, rpn)
+                        .unwrap();
+                });
+            }
+        });
+        tc
+    }
+
+    /// The hierarchical allreduce's hop split: the member legs stay
+    /// on-node, only the leader ring crosses nodes.
+    #[test]
+    fn hier_replay_splits_hops() {
+        let (n, rpn, len) = (4usize, 2usize, 1000usize);
+        let tc = run_traced_hier(n, rpn, len);
+        let intra = SrModel { alpha_s: 1e-7, bytes_per_s: 200e9 };
+        let inter = SrModel { alpha_s: 2e-6, bytes_per_s: 12e9 };
+        let rep = replay_hier(&tc, n, rpn, &intra, &inter);
+        // member -> leader (Hier(0)) and leader -> member (Hier(1)), one
+        // full buffer each way on both nodes
+        assert_eq!(rep.intra_messages, 4);
+        assert_eq!(rep.intra_bytes, 4 * (len * 4) as u64);
+        // leader ring over 2 leaders: each sends one reduce-scatter chunk
+        // and one allgather chunk of len/2 elements
+        assert_eq!(rep.inter_messages, 4);
+        assert_eq!(rep.inter_bytes, (2 * len * 4) as u64);
+        // only the leaders (ranks 0 and 2) touch the slow link, so the
+        // critical path is a leader's and members are strictly cheaper
+        assert!(rep.per_rank_secs[0] > rep.per_rank_secs[1]);
+        let leader_max = rep.per_rank_secs[0].max(rep.per_rank_secs[2]);
+        assert_eq!(rep.p2p_critical_secs, leader_max);
+    }
+
+    /// ranks_per_node 1 puts every hop on the inter link: identical to the
+    /// flat replay over that link.
+    #[test]
+    fn hier_replay_degenerates_to_flat() {
+        let tc = run_traced_allreduce(4, 512);
+        let intra = SrModel { alpha_s: 1e-7, bytes_per_s: 200e9 };
+        let inter = SrModel { alpha_s: 2e-6, bytes_per_s: 12e9 };
+        let flat = replay(&tc, 4, &inter);
+        let hier = replay_hier(&tc, 4, 1, &intra, &inter);
+        assert_eq!(hier.intra_messages, 0);
+        assert_eq!(hier.intra_bytes, 0);
+        assert_eq!(hier.inter_bytes, flat.bytes);
+        assert_eq!(hier.per_rank_secs, flat.per_rank_secs);
+    }
+
+    /// The two-level allreduce moves fewer inter-node bytes than the flat
+    /// ring for the same payload — the HyPar-Flow argument, in bytes. With
+    /// 4 ranks at 2 per node the flat ring crosses nodes on 2 of its 4
+    /// directed edges (3072 B/sender here), the hier leader ring on all of
+    /// its 2 edges but only len/2-chunks (2048 B/sender).
+    #[test]
+    fn hier_moves_fewer_inter_node_bytes_than_flat() {
+        let (n, rpn, len) = (4usize, 2usize, 1024usize);
+        let link = SrModel { alpha_s: 1e-6, bytes_per_s: 10e9 };
+        let flat = replay_hier(&run_traced_allreduce(n, len), n, rpn, &link, &link);
+        let hier = replay_hier(&run_traced_hier(n, rpn, len), n, rpn, &link, &link);
+        assert!(
+            hier.inter_bytes < flat.inter_bytes,
+            "hier {} vs flat {} inter-node bytes",
+            hier.inter_bytes,
+            flat.inter_bytes
+        );
+        assert_eq!(flat.inter_bytes, (2 * 6 * (len / 4) * 4) as u64);
+        assert_eq!(hier.inter_bytes, (2 * len * 4) as u64);
     }
 
     /// Per-rank send loads in a ring are balanced.

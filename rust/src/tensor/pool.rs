@@ -46,6 +46,27 @@ pub enum PoolEvent {
 }
 
 /// Exact-size free lists of `f32` buffers plus hit/miss counters.
+///
+/// The steady-state contract — after warm-up, every `take` is a free-list
+/// hit:
+///
+/// ```
+/// use hydra3d::tensor::pool::BufferPool;
+///
+/// let pool = BufferPool::new();
+/// let buf = pool.take(1024);          // cold: allocates (a miss)
+/// assert_eq!(pool.misses(), 1);
+/// pool.put(buf);
+///
+/// pool.reset_counters();              // warm-up over
+/// let buf = pool.take(1024);          // same size class: free-list pop
+/// assert_eq!((pool.hits(), pool.misses()), (1, 0));
+/// pool.put(buf);
+///
+/// // tensors check out of the same per-size free lists
+/// let t = pool.take_tensor_zeroed(&[2, 8, 8, 8]);
+/// pool.recycle(t);
+/// ```
 #[derive(Default)]
 pub struct BufferPool {
     free: RefCell<HashMap<usize, Vec<Vec<f32>>>>,

@@ -1,0 +1,348 @@
+//! The multi-process socket backend's core contract: engines run
+//! **unchanged** over it, and a socket-world run is *bit-identical* to the
+//! channel-world run of the same configuration — same loss bit patterns,
+//! same `comm_bytes`/`halo_bytes`/`ingest_bytes`/`redist_bytes` counters.
+//! The transport round-trips every f32 through `to_le_bytes`/`from_le_bytes`
+//! exactly and the trait-default collectives are shared between backends,
+//! so any divergence is a transport bug, not float noise.
+//!
+//! Also under test here: the launcher's fail-fast supervision (a killed
+//! worker must surface a clean error, never a hang on collectives that can
+//! no longer complete) and the `comm-smoke` CLI's real 4-process run with
+//! its deterministic inter-node frame counters.
+
+use hydra3d::comm::{
+    socket_world, world, CommBackend, Communicator, GradReduce,
+    DEFAULT_BUCKET_ELEMS,
+};
+use hydra3d::engine::hybrid::{train_hybrid_with, HybridOpts, InMemorySource};
+use hydra3d::engine::{LrSchedule, TrainReport};
+use hydra3d::partition::SpatialGrid;
+use hydra3d::runtime::RuntimeHandle;
+use hydra3d::tensor::Tensor;
+use hydra3d::util::json::Json;
+use hydra3d::util::prop;
+use hydra3d::util::rng::Pcg;
+use std::io::Read;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn make_cf_data(n: usize, size: usize, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    let mut rng = Pcg::new(seed, 77);
+    let mut inputs = Vec::new();
+    let mut targets = Vec::new();
+    for _ in 0..n {
+        let mut x = Tensor::zeros(&[1, 1, size, size, size]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let m: f32 = x.data().iter().sum::<f32>() / x.numel() as f32;
+        let s: f32 = x.data().iter().map(|v| v * v).sum::<f32>() / x.numel() as f32;
+        inputs.push(x);
+        targets.push(Tensor::from_vec(&[1, 4], vec![m, s, -m, 0.3]));
+    }
+    (inputs, targets)
+}
+
+fn opts(grid: SpatialGrid, groups: usize, batch: usize, steps: usize,
+        seed: u64) -> HybridOpts {
+    HybridOpts {
+        model: "cf-nano".into(),
+        grid,
+        groups,
+        batch_global: batch,
+        steps,
+        seed,
+        schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
+        log_every: 0,
+    }
+}
+
+/// Bit-for-bit report comparison: loss bit patterns, every parameter bit
+/// pattern, and every byte counter except `socket_frame_bytes` (the only
+/// field the transport is *allowed* to change).
+fn bit_identical(a: &TrainReport, b: &TrainReport) -> Result<(), String> {
+    if a.records.len() != b.records.len() {
+        return Err(format!("{} vs {} steps", a.records.len(), b.records.len()));
+    }
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        if ra.loss.to_bits() != rb.loss.to_bits() {
+            return Err(format!("step {} loss {:.9} vs {:.9} (bits {:08x} vs \
+                                {:08x})", ra.step, ra.loss, rb.loss,
+                               ra.loss.to_bits(), rb.loss.to_bits()));
+        }
+    }
+    for (i, (pa, pb)) in a.params.iter().zip(&b.params).enumerate() {
+        let same = pa.data().len() == pb.data().len()
+            && pa.data().iter().zip(pb.data())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+        if !same {
+            return Err(format!("param {i} bit patterns differ"));
+        }
+    }
+    if a.comm_bytes != b.comm_bytes {
+        return Err(format!("comm_bytes {} vs {}", a.comm_bytes, b.comm_bytes));
+    }
+    if a.halo_bytes != b.halo_bytes {
+        return Err(format!("halo_bytes {:?} vs {:?}", a.halo_bytes, b.halo_bytes));
+    }
+    if a.ingest_bytes != b.ingest_bytes || a.redist_bytes != b.redist_bytes {
+        return Err("io byte counters differ".into());
+    }
+    Ok(())
+}
+
+/// In-process transport equality, no artifacts needed: the same collective
+/// sequence over a channel world and a socket world (2 ranks per node)
+/// must produce bitwise-identical buffers on every rank — the backends
+/// share the trait-default algorithms and only move bytes.
+#[test]
+fn socket_collectives_bitwise_match_channel() {
+    fn run<E: Communicator + Send>(eps: Vec<E>, len: usize) -> Vec<Vec<f32>> {
+        let n = eps.len();
+        std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    let group: Vec<usize> = (0..n).collect();
+                    s.spawn(move || {
+                        let mut buf: Vec<f32> = (0..len)
+                            .map(|i| {
+                                let sign = if (ep.rank() + i) % 2 == 0 { 1.0 }
+                                           else { -1.0f32 };
+                                sign * ((ep.rank() + 2) as f32)
+                                    .powi((i % 7) as i32 - 3)
+                            })
+                            .collect();
+                        ep.allreduce_sum(&mut buf, &group).unwrap();
+                        let bc = ep
+                            .broadcast(vec![ep.rank() as f32 + 0.25; 5], &group)
+                            .unwrap();
+                        buf.extend_from_slice(&bc);
+                        let ag = ep
+                            .allgather(&[ep.rank() as f32 * 0.5; 3], &group)
+                            .unwrap();
+                        for part in ag {
+                            buf.extend_from_slice(&part);
+                        }
+                        ep.barrier(&group).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+    for len in [1usize, 7, 1024] {
+        let chan = run(world(4), len);
+        let sock = run(socket_world(4, 2).unwrap(), len);
+        for (r, (c, s)) in chan.iter().zip(&sock).enumerate() {
+            assert!(
+                c.iter().zip(s).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "rank {r} diverged at len {len}"
+            );
+        }
+    }
+}
+
+/// Training over the in-process socket transport is bit-identical to the
+/// channel backend — flat bucketed reduce on both (rpn only changes the
+/// wire, not the schedule), then the hierarchical reduce on both.
+#[test]
+fn socket_train_bit_identical_to_channel() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let (inputs, targets) = make_cf_data(6, 8, 31);
+    let src = Arc::new(InMemorySource { inputs, targets });
+    let o = opts(SpatialGrid::depth(2), 2, 2, 4, 21);
+
+    for reduce in [
+        GradReduce::default(),
+        GradReduce::Hier { bucket_elems: DEFAULT_BUCKET_ELEMS, ranks_per_node: 2 },
+    ] {
+        let chan = train_hybrid_with(&rt, &o, src.clone(), &CommBackend::Channel,
+                                     reduce)
+            .unwrap();
+        let sock = train_hybrid_with(&rt, &o, src.clone(),
+                                     &CommBackend::Socket { ranks_per_node: 2 },
+                                     reduce)
+            .unwrap();
+        if let Err(e) = bit_identical(&chan, &sock) {
+            panic!("channel vs socket ({reduce:?}): {e}");
+        }
+        assert_eq!(chan.socket_frame_bytes, 0);
+        assert!(sock.socket_frame_bytes > 0,
+                "socket run framed no inter-node traffic ({reduce:?})");
+    }
+}
+
+/// Property: for random small configurations (grid up to 2x2x2, 1-2 data
+/// groups, random seeds) the socket world reproduces the channel world
+/// bit for bit — losses, parameters and byte counters.
+#[test]
+fn prop_socket_backend_equivalence() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let grids = [
+        SpatialGrid::new(1, 1, 1),
+        SpatialGrid::new(2, 1, 1),
+        SpatialGrid::new(1, 2, 1),
+        SpatialGrid::new(2, 2, 1),
+        SpatialGrid::new(2, 2, 2),
+    ];
+    let usable: Vec<SpatialGrid> = grids
+        .into_iter()
+        .filter(|g| {
+            rt.manifest()
+                .model("cf-nano")
+                .map(|m| m.hybrid_plan(g).is_ok())
+                .unwrap_or(false)
+        })
+        .collect();
+    assert!(!usable.is_empty(), "no cf-nano grid plans in artifacts");
+    prop::check("socket-backend-equivalence", 4, |g| {
+        let grid = *g.pick(&usable);
+        let groups = g.usize_in(1, 2);
+        let steps = g.usize_in(2, 3);
+        let seed = g.usize_in(1, 1 << 20) as u64;
+        let (inputs, targets) = make_cf_data(2 * groups + 2, 8, seed);
+        let src = Arc::new(InMemorySource { inputs, targets });
+        let o = opts(grid, groups, groups * g.usize_in(1, 2), steps, seed);
+        let chan = train_hybrid_with(&rt, &o, src.clone(), &CommBackend::Channel,
+                                     GradReduce::default())
+            .map_err(|e| format!("channel: {e:#}"))?;
+        let sock = train_hybrid_with(&rt, &o, src,
+                                     &CommBackend::Socket { ranks_per_node: 2 },
+                                     GradReduce::default())
+            .map_err(|e| format!("socket: {e:#}"))?;
+        bit_identical(&chan, &sock)
+            .map_err(|e| format!("{} x{groups} seed {seed}: {e}", grid))
+    });
+}
+
+fn hydra3d_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hydra3d"))
+}
+
+/// Supervise a spawned launcher with our own deadline so a supervision bug
+/// shows up as a test failure, not a hung test run.
+fn wait_with_deadline(
+    mut child: std::process::Child,
+    secs: u64,
+    what: &str,
+) -> (std::process::ExitStatus, String, String) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    let status = loop {
+        match child.try_wait().expect("try_wait") {
+            Some(st) => break st,
+            None if Instant::now() >= deadline => {
+                child.kill().ok();
+                child.wait().ok();
+                panic!("{what} still running after {secs}s — launcher hung");
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    let mut out = String::new();
+    let mut err = String::new();
+    if let Some(mut o) = child.stdout.take() {
+        o.read_to_string(&mut out).ok();
+    }
+    if let Some(mut e) = child.stderr.take() {
+        e.read_to_string(&mut err).ok();
+    }
+    (status, out, err)
+}
+
+/// Kill-the-child: when a worker process dies, the launcher must kill the
+/// survivors and surface a clean error naming the dead node — not hang on
+/// a rendezvous/collective that can never complete.
+#[test]
+fn launcher_surfaces_dead_worker_cleanly() {
+    let child = hydra3d_bin()
+        .args(["comm-smoke", "--world", "4", "--ranks-per-node", "2",
+               "--elems", "64"])
+        .env("HYDRA3D_TEST_DIE_NODE", "1")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn comm-smoke");
+    let (status, out, err) = wait_with_deadline(child, 60, "comm-smoke");
+    assert!(!status.success(), "launcher exited 0 despite a dead worker\
+                                \nstdout: {out}\nstderr: {err}");
+    assert!(err.contains("worker for node 1 failed"),
+            "error does not name the dead node\nstderr: {err}");
+}
+
+/// A real 4-process smoke run: two worker processes x two rank threads,
+/// Unix-socket rendezvous, flat-ring + hierarchical allreduce. Exact frame
+/// totals for 256 f32: ring 12 frames x 64 elems = 3216 B, hier 4 frames
+/// x 128 elems = 2096 B (12 B header + 4 B/elem per frame).
+#[test]
+fn comm_smoke_four_process_run() {
+    let child = hydra3d_bin()
+        .args(["comm-smoke", "--world", "4", "--ranks-per-node", "2",
+               "--elems", "256"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn comm-smoke");
+    let (status, out, err) = wait_with_deadline(child, 120, "comm-smoke");
+    assert!(status.success(), "comm-smoke failed\nstdout: {out}\nstderr: {err}");
+    assert!(out.contains("comm-smoke ok"), "stdout: {out}");
+    assert!(out.contains("socket_ring_frame_bytes=3216"), "stdout: {out}");
+    assert!(out.contains("socket_hier_frame_bytes=2096"), "stdout: {out}");
+}
+
+/// THE acceptance run: a 4-process `train --backend socket` CosmoFlow run
+/// writes a bit-exact fingerprint identical to the channel backend's on
+/// every field except `backend` and `socket_frame_bytes`. Both runs use
+/// `--ranks-per-node 2`, i.e. the hierarchical gradient reduce, so the
+/// schedules match exactly; the channel run executes it over threads, the
+/// socket run over 2 worker processes x 2 ranks.
+#[test]
+fn cli_socket_report_matches_channel() {
+    let Some(dir) = artifacts() else { return };
+    let scratch = std::env::temp_dir()
+        .join(format!("hydra3d-report-test-{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).unwrap();
+    let chan_path = scratch.join("channel.json");
+    let sock_path = scratch.join("socket.json");
+    let common = ["train", "--model", "cf-nano", "--ways", "2", "--groups",
+                  "2", "--batch", "2", "--steps", "3", "--samples", "6",
+                  "--seed", "12", "--ranks-per-node", "2"];
+    for (backend, path) in [("channel", &chan_path), ("socket", &sock_path)] {
+        let child = hydra3d_bin()
+            .args(common)
+            .args(["--backend", backend, "--report",
+                   path.to_str().unwrap()])
+            .env("HYDRA3D_ARTIFACTS", &dir)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn train");
+        let (status, out, err) =
+            wait_with_deadline(child, 300, "train --backend socket");
+        assert!(status.success(),
+                "{backend} train failed\nstdout: {out}\nstderr: {err}");
+    }
+    let chan = Json::parse_file(&chan_path).unwrap();
+    let sock = Json::parse_file(&sock_path).unwrap();
+    for key in ["schema", "world", "losses_bits", "comm_bytes", "halo_bytes",
+                "ingest_bytes", "redist_bytes"] {
+        assert_eq!(chan.req(key).unwrap(), sock.req(key).unwrap(),
+                   "report field {key} differs between backends");
+    }
+    assert_eq!(chan.req("backend").unwrap().as_str().unwrap(), "channel");
+    assert_eq!(sock.req("backend").unwrap().as_str().unwrap(), "socket");
+    assert_eq!(chan.req("socket_frame_bytes").unwrap().as_usize().unwrap(), 0);
+    assert!(sock.req("socket_frame_bytes").unwrap().as_usize().unwrap() > 0,
+            "socket run framed no inter-node traffic");
+    assert!(!chan.req("losses_bits").unwrap().as_arr().unwrap().is_empty());
+    std::fs::remove_dir_all(&scratch).ok();
+}
