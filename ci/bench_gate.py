@@ -31,13 +31,20 @@ removed from the baseline — so byte counters can never silently skip the
 exact-match gate in either direction.
 
 Exit status 1 on any gate failure. Stdlib only.
+
+`bench_gate.py --self-test` runs an offline fixture suite over the gate
+rules themselves (exact-match bytes, throughput floors, timing ceilings,
+strict-bytes in both directions, record-only fallbacks) so CI proves the
+gate still fires before trusting a green gate run.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import tempfile
 
 
 def load_metrics(path: str) -> dict:
@@ -141,5 +148,93 @@ def main() -> int:
     return 0
 
 
+def _run(argv: list) -> int:
+    """Invoke main() with a substitute argv, mapping SystemExit to a code."""
+    saved = sys.argv
+    sys.argv = ["bench_gate.py"] + argv
+    try:
+        return main()
+    except SystemExit as e:  # load_metrics rejects bad inputs this way
+        return 1 if isinstance(e.code, str) else int(e.code or 0)
+    finally:
+        sys.argv = saved
+
+
+def self_test() -> int:
+    """Fixture suite: every gate rule must fire (and only when it should)."""
+
+    def dump(d: str, name: str, metrics: dict, schema: int = 1) -> str:
+        path = os.path.join(d, name)
+        with open(path, "w") as f:
+            json.dump({"schema": schema, "kind": "t", "metrics": metrics}, f)
+        return path
+
+    cases = []  # (label, expected_exit, actual_exit)
+    with tempfile.TemporaryDirectory(prefix="bench_gate_selftest.") as d:
+        out = os.path.join(d, "PR.json")
+
+        def gate(metrics, baseline, *extra) -> int:
+            inp = dump(d, "in.json", metrics)
+            base = dump(d, "base.json", baseline)
+            return _run(["--out", out, "--baseline", base, *extra, inp])
+
+        cases.append(("identical metrics pass",
+                      0, gate({"a.step_time_us": 10.0}, {"a.step_time_us": 10.0})))
+        cases.append(("timing within budget passes",
+                      0, gate({"a_us": 11.0}, {"a_us": 10.0})))
+        cases.append(("timing regression fails",
+                      1, gate({"a_us": 12.0}, {"a_us": 10.0})))
+        cases.append(("timing improvement passes",
+                      0, gate({"a_us": 5.0}, {"a_us": 10.0})))
+        cases.append(("throughput drop fails (higher is better)",
+                      1, gate({"a_per_sec": 8.0}, {"a_per_sec": 10.0})))
+        cases.append(("throughput gain passes",
+                      0, gate({"a_per_sec": 20.0}, {"a_per_sec": 10.0})))
+        cases.append(("deterministic bytes off-by-one fails",
+                      1, gate({"a_bytes": 101.0}, {"a_bytes": 100.0})))
+        cases.append(("deterministic count must match exactly",
+                      1, gate({"a_count": 3}, {"a_count": 2})))
+        cases.append(("new timing metric is record-only",
+                      0, gate({"a_us": 9.0, "b_us": 1.0}, {"a_us": 9.0})))
+        cases.append(("new bytes metric passes without --strict-bytes",
+                      0, gate({"b_bytes": 7.0}, {})))
+        cases.append(("new bytes metric fails under --strict-bytes",
+                      1, gate({"b_bytes": 7.0}, {}, "--strict-bytes")))
+        cases.append(("vanished baseline bytes fails under --strict-bytes",
+                      1, gate({}, {"b_bytes": 7.0}, "--strict-bytes")))
+        cases.append(("vanished baseline timing is report-only",
+                      0, gate({}, {"b_us": 7.0}, "--strict-bytes")))
+
+        inp = dump(d, "in.json", {"a_us": 1.0})
+        cases.append(("missing baseline file is record-only", 0, _run(
+            ["--out", out, "--baseline", os.path.join(d, "nope.json"), inp])))
+
+        dup1 = dump(d, "dup1.json", {"a_us": 1.0})
+        dup2 = dump(d, "dup2.json", {"a_us": 2.0})
+        base = dump(d, "base.json", {})
+        cases.append(("duplicate metric across inputs is rejected", 1, _run(
+            ["--out", out, "--baseline", base, dup1, dup2])))
+
+        bad = dump(d, "bad.json", {"a_us": 1.0}, schema=2)
+        cases.append(("unsupported schema is rejected", 1, _run(
+            ["--out", out, "--baseline", base, bad])))
+
+        nonnum = os.path.join(d, "nonnum.json")
+        with open(nonnum, "w") as f:
+            json.dump({"schema": 1, "metrics": {"a_us": "fast"}}, f)
+        cases.append(("non-numeric metric is rejected", 1, _run(
+            ["--out", out, "--baseline", base, nonnum])))
+
+    bad_cases = [(label, want, got) for label, want, got in cases if want != got]
+    print(f"\nbench_gate --self-test: {len(cases) - len(bad_cases)}/{len(cases)} "
+          f"cases behaved as expected")
+    for label, want, got in bad_cases:
+        print(f"  SELF-TEST FAIL: {label}: expected exit {want}, got {got}",
+              file=sys.stderr)
+    return 1 if bad_cases else 0
+
+
 if __name__ == "__main__":
+    if "--self-test" in sys.argv[1:]:
+        sys.exit(self_test())
     sys.exit(main())

@@ -16,10 +16,16 @@ pooled `_into` variant appears there. Suppress a deliberate use with a
 `// hot-path-lint: allow` comment on the same line.
 
 Usage: python3 ci/hot_path_lint.py [engine_dir]
+
+`hot_path_lint.py --self-test` lints a synthetic engine fixture with known
+violations, suppressions and decoys, and fails unless the lint flags
+exactly the planted lines — so CI proves the lint still fires before
+trusting a clean run over the real engines.
 """
 
 import re
 import sys
+import tempfile
 from pathlib import Path
 
 # Allocating forms that have a pooled `_into` counterpart in tensor/.
@@ -117,5 +123,54 @@ def main() -> int:
     return 0
 
 
+FIXTURE = """\
+fn setup() {
+    let a = x.slice_ax(0, 1, 2); // allocating at setup time is fine
+}
+
+fn run_rank() {
+    let warm = x.pad_ax(0, 1, 1); // outside the step loop: fine
+    for step in start..steps {
+        let bad1 = x.slice_ax(0, 1, 2);
+        let ok1 = x.slice_ax_into(&mut buf, 0, 1, 2);
+        let ok2 = x.pad_ax(0, 1, 1); // hot-path-lint: allow
+        // commented: x.block3(2) should not fire
+        let s = "call .block3( inside a string";
+        if deep {
+            let bad2 = y.block3(2);
+        }
+    }
+}
+
+fn run_group() {
+    for _step in 0..n {
+        let bad3 = z.pad_ax(1, 2, 2);
+    }
+}
+"""
+
+# (line, fn, op) triples the fixture plants; the lint must find these and
+# nothing else. Lines are 1-based within FIXTURE.
+PLANTED = [(8, "run_rank", "slice_ax"), (14, "run_rank", "block3"),
+           (21, "run_group", "pad_ax")]
+
+
+def self_test() -> int:
+    with tempfile.TemporaryDirectory(prefix="hot_path_lint_selftest.") as d:
+        f = Path(d) / "fake_engine.rs"
+        f.write_text(FIXTURE)
+        got = [(line, fn, op) for _, line, fn, op, _ in lint_file(f)]
+    if sorted(got) == sorted(PLANTED):
+        print(f"hot_path_lint --self-test: ok "
+              f"({len(PLANTED)} planted violations flagged, decoys ignored)")
+        return 0
+    print("hot_path_lint --self-test FAILED:", file=sys.stderr)
+    print(f"  expected {sorted(PLANTED)}", file=sys.stderr)
+    print(f"  got      {sorted(got)}", file=sys.stderr)
+    return 1
+
+
 if __name__ == "__main__":
+    if "--self-test" in sys.argv[1:]:
+        sys.exit(self_test())
     sys.exit(main())

@@ -55,6 +55,7 @@ fn main() -> Result<()> {
         seed: 7,
         schedule: LrSchedule { lr0: 3e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 10,
+        ckpt: None,
     };
     let trace = Arc::new(TraceCollector::new());
     let rep = train_hybrid_with(&rt, &opts, source,

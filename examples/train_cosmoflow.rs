@@ -108,6 +108,7 @@ fn main() -> Result<()> {
             seed: 33,
             schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.01, total_steps: steps },
             log_every: 0,
+            ckpt: None,
         };
         let rep = train_fused(&rt, &opts,
                               Arc::new(FullSource { inputs: tr_in, targets: tr_tg }))?;
@@ -160,6 +161,7 @@ fn io_pipeline_demo(rt: &RuntimeHandle, io: IoMode) -> Result<()> {
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1,
                                total_steps: demo_steps },
         log_every: 0,
+        ckpt: None,
     };
     let inmem = train_hybrid(rt, &opts, Arc::new(InMemorySource {
         inputs: ds.inputs.clone(),

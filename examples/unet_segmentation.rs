@@ -66,6 +66,7 @@ fn main() -> Result<()> {
         seed: 5,
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 10,
+        ckpt: None,
     };
     let rep = match io {
         IoMode::InMem => train_hybrid(&rt, &opts, source)?,

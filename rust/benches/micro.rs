@@ -608,7 +608,7 @@ fn staging(b: &mut Bench, quick: bool) -> StagingNumbers {
                     s.spawn(move || {
                         let mut stg = AsyncStaging::start(
                             c, topo, r, false, Box::new(ep), sched.clone(),
-                            groups,
+                            groups, 0,
                         );
                         let mut total = 0.0f64;
                         for _ in 0..steps {

@@ -137,21 +137,58 @@ fn launch_timeout() -> Duration {
     Duration::from_millis(ms)
 }
 
+/// Last lines of a worker's captured stderr, for failure diagnostics.
+fn log_tail(path: &Path, lines: usize) -> Option<String> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let all: Vec<&str> = text.lines().collect();
+    let start = all.len().saturating_sub(lines);
+    let tail = all[start..].join("\n");
+    (!tail.is_empty()).then_some(tail)
+}
+
 /// Fork/exec one `exe worker --manifest M --node I` per node, supervise
 /// them fail-fast, and return the per-node result documents (node order).
 pub fn launch(exe: &Path, spec: &LaunchSpec, scratch: &Path) -> Result<Vec<Json>> {
+    launch_attempt(exe, spec, scratch, false)
+}
+
+/// One supervised launch attempt. Worker stderr is captured to
+/// `<scratch>/logs/node-<i>.stderr.log` (uploaded by CI when a socket or
+/// fault lane fails); on a node failure the tail of that node's log is
+/// echoed to the launcher's stderr. `suppress_fault_injection` strips the
+/// `HYDRA3D_TEST_DIE_*` hooks from the workers' environment — restarted
+/// attempts must not re-inject the failure they are recovering from.
+fn launch_attempt(
+    exe: &Path,
+    spec: &LaunchSpec,
+    scratch: &Path,
+    suppress_fault_injection: bool,
+) -> Result<Vec<Json>> {
     let manifest = write_manifest(scratch, spec)?;
     let results_dir = scratch.join("results");
+    let logs_dir = scratch.join("logs");
+    std::fs::create_dir_all(&logs_dir)
+        .with_context(|| format!("create {}", logs_dir.display()))?;
     let nodes = node_count(spec.world, spec.ranks_per_node);
+    let log_path =
+        |node: usize| logs_dir.join(format!("node-{node}.stderr.log"));
     let mut children: Vec<(usize, Child)> = Vec::with_capacity(nodes);
     for node in 0..nodes {
-        let child = Command::new(exe)
-            .arg("worker")
+        let log = std::fs::File::create(log_path(node))
+            .with_context(|| format!("create worker log for node {node}"))?;
+        let mut cmd = Command::new(exe);
+        cmd.arg("worker")
             .arg("--manifest")
             .arg(&manifest)
             .arg("--node")
             .arg(node.to_string())
             .stdin(Stdio::null())
+            .stderr(Stdio::from(log));
+        if suppress_fault_injection {
+            cmd.env_remove("HYDRA3D_TEST_DIE_NODE")
+                .env_remove("HYDRA3D_TEST_DIE_AT_STEP");
+        }
+        let child = cmd
             .spawn()
             .with_context(|| format!("spawn worker for node {node}"))?;
         children.push((node, child));
@@ -205,6 +242,11 @@ pub fn launch(exe: &Path, spec: &LaunchSpec, scratch: &Path) -> Result<Vec<Json>
                 let _ = child.wait();
             }
         }
+        for node in 0..nodes {
+            if let Some(tail) = log_tail(&log_path(node), 10) {
+                eprintln!("--- node {node} stderr (tail) ---\n{tail}");
+            }
+        }
         bail!("{msg}");
     }
 
@@ -216,6 +258,42 @@ pub fn launch(exe: &Path, spec: &LaunchSpec, scratch: &Path) -> Result<Vec<Json>
             })
         })
         .collect()
+}
+
+/// [`launch`] with checkpoint-based recovery: when an attempt fails (a
+/// worker died or the launch timed out), re-launch the world up to
+/// `max_restarts` times. Each attempt runs under its own
+/// `<scratch>/attempt-<n>/` scratch (fresh sockets, results and logs);
+/// attempts after the first run with fault injection suppressed and with
+/// `resume_task` applied to the task document (the caller flips its
+/// `resume` key on, so the restarted world loads the newest committed
+/// snapshot). Returns the final attempt's results plus the number of
+/// restarts performed.
+pub fn launch_with_recovery(
+    exe: &Path,
+    spec: &LaunchSpec,
+    scratch: &Path,
+    max_restarts: usize,
+    mut resume_task: impl FnMut(&Json) -> Json,
+) -> Result<(Vec<Json>, usize)> {
+    let mut spec = spec.clone();
+    let mut restarts = 0usize;
+    loop {
+        let attempt_scratch = scratch.join(format!("attempt-{restarts}"));
+        let r = launch_attempt(exe, &spec, &attempt_scratch, restarts > 0);
+        match r {
+            Ok(results) => return Ok((results, restarts)),
+            Err(e) if restarts < max_restarts => {
+                restarts += 1;
+                eprintln!(
+                    "[fault-recovery] attempt failed ({e:#}); restarting world \
+                     from latest checkpoint (restart {restarts}/{max_restarts})"
+                );
+                spec.task = resume_task(&spec.task);
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -12,9 +12,10 @@ use super::{
     StepRecord, TrainReport, BN_MOMENTUM,
 };
 use crate::comm::{CommBackend, Communicator, GradReduce, OverlapAllreduce};
+use crate::runtime::checkpoint::{self, CheckpointCfg};
 use crate::runtime::{ModelInfo, RuntimeHandle};
 use crate::tensor::Tensor;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -28,6 +29,22 @@ pub struct FusedOpts {
     pub seed: u64,
     pub schedule: LrSchedule,
     pub log_every: usize,
+    /// Checkpoint/restart configuration; `None` trains without snapshots.
+    pub ckpt: Option<CheckpointCfg>,
+}
+
+/// The fused engine's checkpoint fingerprint: no spatial grid, world ==
+/// groups (one rank per group).
+fn ckpt_fingerprint(opts: &FusedOpts) -> checkpoint::Fingerprint {
+    checkpoint::Fingerprint {
+        model: opts.model.clone(),
+        grid: "1x1x1".to_string(),
+        groups: opts.groups,
+        batch_global: opts.batch_global,
+        steps: opts.steps,
+        seed: opts.seed,
+        world: opts.groups,
+    }
 }
 
 /// Full-sample source for the fused path (inputs NCDHW, targets (1, n) or
@@ -67,6 +84,14 @@ pub fn train_fused_with(
     }
     let sched = Arc::new(sample_schedule_epochs(opts.seed, source.inputs.len(),
                                                 opts.batch_global, opts.steps));
+    // resolved once, before any rank thread spawns, so all groups agree
+    let start_step = match &opts.ckpt {
+        Some(c) if c.resume => {
+            checkpoint::resolve_resume(&c.dir, &ckpt_fingerprint(opts))?
+                .unwrap_or(0)
+        }
+        _ => 0,
+    };
     let endpoints = backend.build_world(opts.groups)?;
     let grad_eps = reduce.build_grad_world(backend, opts.groups)?;
     // world-shared counters: read only after every rank joins (a rank
@@ -87,7 +112,8 @@ pub fn train_fused_with(
                 let sched = sched.clone();
                 let opts = opts.clone();
                 s.spawn(move || -> Result<TrainReport> {
-                    run_group(g, ep, grad_ep, reduce, rt, info, source, sched, opts)
+                    run_group(g, ep, grad_ep, reduce, rt, info, source, sched,
+                              opts, start_step)
                 })
             })
             .collect::<Vec<_>>()
@@ -121,6 +147,7 @@ fn run_group(
     source: Arc<FullSource>,
     sched: Arc<Vec<Vec<usize>>>,
     opts: FusedOpts,
+    start_step: usize,
 ) -> Result<TrainReport> {
     let world_group: Vec<usize> = (0..opts.groups).collect();
     let bpg = opts.batch_global / opts.groups;
@@ -137,6 +164,33 @@ fn run_group(
     let mut records = Vec::new();
     let mut phases = PhaseTimes::default();
 
+    // ---- checkpoint/restart ----------------------------------------------
+    // One rank per group and no spatial partitioning: the shard geometry is
+    // trivial (coords/offsets zero), but the same keyed format and commit
+    // protocol as the hybrid engine apply.
+    let ckpt_geom = checkpoint::ShardGeom {
+        rank: group,
+        world: opts.groups,
+        group,
+        coords: [0; 3],
+        shard_off: [0; 3],
+        shard_len: [0; 3],
+    };
+    let ckpt_fp = ckpt_fingerprint(&opts);
+    if start_step > 0 {
+        let c = opts.ckpt.as_ref().ok_or_else(|| {
+            anyhow!("resume step {start_step} without a checkpoint config")
+        })?;
+        let st = checkpoint::load_shard(&c.dir, start_step, &ckpt_geom)
+            .with_context(|| format!("group {group} resume"))?;
+        checkpoint::check_shapes(&st, &params, &run_mean)?;
+        adam.load_state(st.adam_m, st.adam_v, st.adam_t)?;
+        params = st.params;
+        run_mean = st.run_mean;
+        run_var = st.run_var;
+        records = st.records;
+    }
+
     // Bucketed gradient allreduce on a worker thread: in the fused engine
     // the whole backward runs inside one opaque executable, so gradients
     // become final per-parameter only as they are extracted from the last
@@ -151,7 +205,7 @@ fn run_group(
         info.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
     let mut flat_scratch: Vec<f32> = Vec::new();
 
-    for step in 0..opts.steps {
+    for step in start_step..opts.steps {
         let lr = opts.schedule.at(step);
         for g in grads.iter_mut() {
             g.data_mut().fill(0.0);
@@ -235,6 +289,30 @@ fn run_group(
                       opts.groups, opts.model, step, loss_global, lr);
         }
         records.push(StepRecord { step, loss: loss_global, lr, io_wait: 0.0 });
+
+        // ---- checkpoint save (same commit protocol as the hybrid engine) -
+        if let Some(c) = opts.ckpt.as_ref() {
+            if checkpoint::due_after(c, step, opts.steps) {
+                let t = Instant::now();
+                let (adam_m, adam_v, adam_t) = adam.state();
+                checkpoint::save_rank(c, &ckpt_fp, &ckpt_geom,
+                    &checkpoint::SaveState {
+                        next_step: step + 1,
+                        adam_t,
+                        records: &records,
+                        params: &params,
+                        adam_m,
+                        adam_v,
+                        run_mean: &run_mean,
+                        run_var: &run_var,
+                    })?;
+                ep.barrier(&world_group)?;
+                if group == 0 {
+                    checkpoint::commit(&c.dir, step + 1)?;
+                }
+                phases.io += t.elapsed().as_secs_f64();
+            }
+        }
     }
 
     if let Some(ov) = overlap.take() {

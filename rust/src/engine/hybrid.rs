@@ -40,13 +40,35 @@ use crate::comm::{
 use crate::data::container::Container;
 use crate::iosim::store::{AsyncStaging, DataStore, StoreSource};
 use crate::partition::{GridNeighbors, GridTopology, SpatialGrid};
+use crate::runtime::checkpoint::{self, CheckpointCfg};
 use crate::runtime::{LayerDesc, ModelInfo, RuntimeHandle};
 use crate::tensor::pool::BufferPool;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Fault-injection hook (`HYDRA3D_TEST_DIE_AT_STEP`): step index at which
+/// this process aborts abruptly, `usize::MAX` when disarmed. Process-global
+/// because the injected failure models a *node* dying, not a rank thread.
+static DIE_AT_STEP: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Arm the current process to exit(101) at the top of training step `step`
+/// — an abrupt node death for the fault-injection lane (`hydra3d worker`
+/// arms this when `HYDRA3D_TEST_DIE_AT_STEP` is set). Steps are absolute,
+/// so a resumed world that starts past `step` never re-fires.
+pub fn arm_test_die_at_step(step: usize) {
+    DIE_AT_STEP.store(step, Ordering::SeqCst);
+}
+
+fn maybe_die_at(step: usize, rank: usize) {
+    if DIE_AT_STEP.load(Ordering::Relaxed) == step {
+        eprintln!("[fault-injection] rank {rank} aborting process at step {step}");
+        std::process::exit(101);
+    }
+}
 
 /// Where a rank's shards come from. The in-memory implementation slices
 /// full samples; the I/O pipeline provides a store-backed implementation
@@ -128,6 +150,37 @@ pub struct HybridOpts {
     pub seed: u64,
     pub schedule: LrSchedule,
     pub log_every: usize,
+    /// Checkpoint/restart configuration (`--checkpoint-every/--checkpoint-dir/
+    /// --resume`); `None` trains without snapshots, bit-identical to before
+    /// the feature existed (the checkpoint barrier only runs when set).
+    pub ckpt: Option<CheckpointCfg>,
+}
+
+/// The run-configuration fingerprint a checkpoint of this run carries —
+/// everything that pins the deterministic trajectory.
+pub(crate) fn ckpt_fingerprint(opts: &HybridOpts, world: usize)
+                               -> checkpoint::Fingerprint {
+    checkpoint::Fingerprint {
+        model: opts.model.clone(),
+        grid: opts.grid.to_string(),
+        groups: opts.groups,
+        batch_global: opts.batch_global,
+        steps: opts.steps,
+        seed: opts.seed,
+        world,
+    }
+}
+
+/// Resolve the step a (possibly resuming) world starts at. Called once per
+/// process *before* any rank thread or staging worker spawns, so every
+/// rank — and every node of a socket world — agrees on the same step.
+fn resolve_start_step(opts: &HybridOpts, world: usize) -> Result<usize> {
+    let Some(c) = &opts.ckpt else { return Ok(0) };
+    if !c.resume {
+        return Ok(0);
+    }
+    let fp = ckpt_fingerprint(opts, world);
+    Ok(checkpoint::resolve_resume(&c.dir, &fp)?.unwrap_or(0))
 }
 
 /// Where a rank's per-step shards come from — the functional realization
@@ -283,7 +336,8 @@ pub fn train_hybrid_with(
     let ios: Vec<RankIo> = (0..topo.world_size())
         .map(|_| RankIo::Shared(source.clone()))
         .collect();
-    run_world(rt, opts, backend, reduce, sched, ios)
+    let start_step = resolve_start_step(opts, topo.world_size())?;
+    run_world(rt, opts, backend, reduce, sched, ios, start_step)
 }
 
 /// Train from a container file through the §III-B store pipeline: each
@@ -314,6 +368,10 @@ pub fn train_hybrid_store(
     let info = rt.manifest().model(&opts.model)?;
     let (plan, _) = info.hybrid_plan(&opts.grid)?;
     let label_mode = plan.iter().any(|l| matches!(l, LayerDesc::Xent { .. }));
+    // resolve the resume point before any staging worker spawns: the async
+    // prefetchers iterate the schedule themselves and must start at the
+    // same absolute step as the compute ranks
+    let start_step = resolve_start_step(opts, topo.world_size())?;
     let ios: Vec<RankIo> = match mode {
         IoMode::InMem => bail!("IoMode::InMem has no store; use train_hybrid_with \
                                 (the container itself is a SampleSource)"),
@@ -333,13 +391,13 @@ pub fn train_hybrid_store(
                 .map(|(r, ep)| {
                     RankIo::StoreAsync(AsyncStaging::start(
                         container.clone(), topo, r, label_mode, ep,
-                        sched.clone(), opts.groups,
+                        sched.clone(), opts.groups, start_step,
                     ))
                 })
                 .collect()
         }
     };
-    run_world(rt, opts, backend, reduce, sched, ios)
+    run_world(rt, opts, backend, reduce, sched, ios, start_step)
 }
 
 /// Shared multi-rank driver: spawn one thread per rank over the chosen
@@ -352,6 +410,7 @@ fn run_world(
     reduce: GradReduce,
     sched: Arc<Vec<Vec<usize>>>,
     ios: Vec<RankIo>,
+    start_step: usize,
 ) -> Result<TrainReport> {
     let info = Arc::new(rt.manifest().model(&opts.model)?.clone());
     let (plan, pad_axes) = {
@@ -398,6 +457,7 @@ fn run_world(
                         io,
                         sched,
                         opts,
+                        start_step,
                     })
                 })
             })
@@ -488,6 +548,10 @@ pub fn train_hybrid_node(
     }
     let sched = Arc::new(sample_schedule_epochs(opts.seed, source.len(),
                                                 opts.batch_global, opts.steps));
+    // each worker process resolves the resume step independently; the scan
+    // is deterministic over a quiescent checkpoint dir, so all nodes of the
+    // (re)launched world agree without extra coordination
+    let start_step = resolve_start_step(opts, topo.world_size())?;
     // per-process counters: they only ever see this node's ranks, so the
     // post-join read is both deterministic and exactly this node's share
     let comm_counters = endpoints[0].counters().clone();
@@ -519,6 +583,7 @@ pub fn train_hybrid_node(
                         io,
                         sched,
                         opts,
+                        start_step,
                     })
                 });
                 (rank, h)
@@ -565,6 +630,9 @@ struct RankCtx {
     io: RankIo,
     sched: Arc<Vec<Vec<usize>>>,
     opts: HybridOpts,
+    /// First step this world executes (0 for fresh runs; the resolved
+    /// snapshot step when resuming).
+    start_step: usize,
 }
 
 /// Parameter indices owned by one plan layer (gradients become final on a
@@ -654,6 +722,37 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
     let mut records = Vec::new();
     let mut phases = PhaseTimes::default();
 
+    // ---- checkpoint/restart ----------------------------------------------
+    // Shards are keyed by the rank's grid geometry (the same hyperslab the
+    // store uses), and the resume step was resolved once per process, so a
+    // mismatched or torn snapshot fails loudly here instead of diverging.
+    let ckpt_geom = checkpoint::ShardGeom {
+        rank,
+        world: cx.topo.world_size(),
+        group,
+        coords: gc,
+        shard_off,
+        shard_len,
+    };
+    let ckpt_fp = ckpt_fingerprint(&cx.opts, cx.topo.world_size());
+    if cx.start_step > 0 {
+        let c = cx.opts.ckpt.as_ref().ok_or_else(|| {
+            anyhow!("resume step {} without a checkpoint config", cx.start_step)
+        })?;
+        let st = checkpoint::load_shard(&c.dir, cx.start_step, &ckpt_geom)
+            .with_context(|| format!("rank {rank} resume"))?;
+        checkpoint::check_shapes(&st, &params, &run_mean)?;
+        adam.load_state(st.adam_m, st.adam_v, st.adam_t)?;
+        params = st.params;
+        run_mean = st.run_mean;
+        run_var = st.run_var;
+        records = st.records;
+        if rank == 0 && cx.opts.log_every > 0 {
+            eprintln!("[hybrid {}x{} {}] resumed from checkpoint step {}",
+                      cx.opts.groups, grid, cx.opts.model, cx.start_step);
+        }
+    }
+
     // Per-rank buffer pool: halo faces, padded activations, saved
     // pre-activations and gather/scatter staging all cycle through it, so
     // steady-state steps stop allocating on the hot path. Gradient
@@ -664,7 +763,8 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
     let mut flat_scratch: Vec<f32> = Vec::new();
 
     let mut io_exposed_total = 0.0f64;
-    for step in 0..cx.opts.steps {
+    for step in cx.start_step..cx.opts.steps {
+        maybe_die_at(step, rank);
         let lr = cx.opts.schedule.at(step);
         for g in grads.iter_mut() {
             g.data_mut().fill(0.0);
@@ -1103,6 +1203,33 @@ fn run_rank(mut cx: RankCtx) -> Result<TrainReport> {
                       cx.opts.groups, grid, cx.opts.model, step, lbuf[0], lr);
         }
         records.push(StepRecord { step, loss: lbuf[0], lr, io_wait });
+
+        // ---- checkpoint save (cadence keyed on the absolute step, so an
+        // interrupted and a resumed run snapshot — and barrier — at
+        // identical points) ------------------------------------------------
+        if let Some(c) = cx.opts.ckpt.as_ref() {
+            if checkpoint::due_after(c, step, cx.opts.steps) {
+                let t = Instant::now();
+                let (adam_m, adam_v, adam_t) = adam.state();
+                checkpoint::save_rank(c, &ckpt_fp, &ckpt_geom,
+                    &checkpoint::SaveState {
+                        next_step: step + 1,
+                        adam_t,
+                        records: &records,
+                        params: &params,
+                        adam_m,
+                        adam_v,
+                        run_mean: &run_mean,
+                        run_var: &run_var,
+                    })?;
+                // all shards durable before rank 0 publishes the snapshot
+                cx.ep.barrier(&world_group)?;
+                if rank == 0 {
+                    checkpoint::commit(&c.dir, step + 1)?;
+                }
+                phases.io += t.elapsed().as_secs_f64();
+            }
+        }
     }
 
     if let Some(ov) = overlap.take() {

@@ -5,6 +5,7 @@
 //! separates cuDNN compute from framework-side parameter updates.
 
 use crate::tensor::Tensor;
+use anyhow::{bail, Result};
 
 /// Adam with bias correction.
 #[derive(Clone, Debug)]
@@ -65,6 +66,36 @@ impl Adam {
 
     pub fn steps_taken(&self) -> u64 {
         self.t
+    }
+
+    /// Checkpoint view of the full optimizer state: (m, v, t).
+    pub fn state(&self) -> (&[Tensor], &[Tensor], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Restore a checkpointed (m, v, t), shape-validated against the
+    /// moments this optimizer was built for.
+    pub fn load_state(&mut self, m: Vec<Tensor>, v: Vec<Tensor>, t: u64) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            bail!("optimizer state has {}/{} moment tensors, expected {}",
+                  m.len(), v.len(), self.m.len());
+        }
+        for (i, (new, cur)) in m.iter().zip(&self.m).enumerate() {
+            if new.shape() != cur.shape() {
+                bail!("restored m[{i}] shape {:?} != expected {:?}",
+                      new.shape(), cur.shape());
+            }
+        }
+        for (i, (new, cur)) in v.iter().zip(&self.v).enumerate() {
+            if new.shape() != cur.shape() {
+                bail!("restored v[{i}] shape {:?} != expected {:?}",
+                      new.shape(), cur.shape());
+            }
+        }
+        self.m = m;
+        self.v = v;
+        self.t = t;
+        Ok(())
     }
 }
 

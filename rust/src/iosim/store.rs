@@ -436,6 +436,8 @@ impl AsyncStaging {
     /// Spawn the staging worker for `rank`. `ep` must be this rank's
     /// endpoint into a world dedicated to staging traffic; `sched` is the
     /// global sample schedule (one row per step, identical on every rank).
+    /// `start_step` skips the schedule prefix a resumed run already
+    /// consumed, so the prefetcher and the compute ranks stay in lockstep.
     #[allow(clippy::too_many_arguments)]
     pub fn start(
         container: Arc<Container>,
@@ -445,6 +447,7 @@ impl AsyncStaging {
         ep: Box<dyn Communicator>,
         sched: Arc<Vec<Vec<usize>>>,
         groups: usize,
+        start_step: usize,
     ) -> AsyncStaging {
         let (_, pos) = topo.coords_of(rank);
         let (shard_off, shard_len) = topo.grid.shard_of(container.meta.size, pos);
@@ -455,7 +458,7 @@ impl AsyncStaging {
         let worker = std::thread::Builder::new()
             .name(format!("io-staging-{rank}"))
             .spawn(move || staging_worker(container, topo, rank, label_mode, ep,
-                                          sched, groups, tx))
+                                          sched, groups, start_step, tx))
             .expect("spawn staging worker");
         AsyncStaging {
             rx,
@@ -543,11 +546,12 @@ fn staging_worker(
     ep: Box<dyn Communicator>,
     sched: Arc<Vec<Vec<usize>>>,
     groups: usize,
+    start_step: usize,
     tx: SyncSender<HashMap<usize, (Tensor, Tensor)>>,
 ) -> Result<IoWorkerStats> {
     let mut store = DataStore::ingest(&container, topo, rank, label_mode)?;
     let mut redist_secs = 0.0;
-    for row in sched.iter() {
+    for row in sched.iter().skip(start_step) {
         let assigns = assignments_of(row, groups);
         let t0 = Instant::now();
         store.redistribute(ep.as_ref(), &assigns)?;

@@ -29,10 +29,11 @@ use hydra3d::coordinator;
 use hydra3d::data::container::{write_dataset, write_label_dataset, Container};
 use hydra3d::data::ct::ct_dataset;
 use hydra3d::data::grf::{GrfConfig, GrfDataset};
-use hydra3d::engine::hybrid::{train_hybrid_node, train_hybrid_store,
-                              train_hybrid_with, HybridOpts, InMemorySource,
-                              IoMode, SampleSource};
+use hydra3d::engine::hybrid::{arm_test_die_at_step, train_hybrid_node,
+                              train_hybrid_store, train_hybrid_with,
+                              HybridOpts, InMemorySource, IoMode, SampleSource};
 use hydra3d::engine::{LrSchedule, TrainReport};
+use hydra3d::runtime::CheckpointCfg;
 use hydra3d::iosim::pipeline::io_time_from_redist_trace;
 use hydra3d::partition::SpatialGrid;
 use hydra3d::perfmodel::trace::replay;
@@ -162,7 +163,24 @@ fn train_cmd(rest: &[String]) -> Result<()> {
         .opt("bucket",
              "allreduce bucket size in f32 elems (0 = monolithic; default \
               comm::DEFAULT_BUCKET_ELEMS)",
-             None);
+             None)
+        .opt("checkpoint-every",
+             "snapshot model+optimizer+schedule state every N steps (and at \
+              the final step) under --checkpoint-dir; 0 disables periodic \
+              saves",
+             Some("0"))
+        .opt("checkpoint-dir",
+             "checkpoint directory (required by --checkpoint-every, \
+              --resume and --max-restarts)",
+             None)
+        .flag("resume",
+              "resume from the newest valid committed snapshot in \
+               --checkpoint-dir if one exists (start fresh otherwise); the \
+               resumed trajectory is bit-identical to an uninterrupted run")
+        .opt("max-restarts",
+             "--backend socket only: relaunch a world that loses a worker \
+              up to N times, resuming from the latest checkpoint",
+             Some("0"));
     let a = c.parse(rest)?;
     let model = a.req("model")?.to_string();
     let rpn = a.get_usize("ranks-per-node")?.unwrap();
@@ -171,6 +189,12 @@ fn train_cmd(rest: &[String]) -> Result<()> {
     }
     let reduce = grad_reduce_of(a.get_usize("bucket")?.unwrap_or(DEFAULT_BUCKET_ELEMS),
                                 rpn)?;
+    let ckpt = checkpoint_cfg_of(&a)?;
+    if a.get_usize("max-restarts")?.unwrap() > 0 && a.req("backend")? != "socket" {
+        bail!("--max-restarts recovers a multi-process world; it needs \
+               --backend socket (the channel backend has no processes to \
+               lose)");
+    }
     match a.req("backend")? {
         "channel" => {}
         "socket" => return train_socket_cmd(&a, reduce, rpn),
@@ -218,6 +242,7 @@ fn train_cmd(rest: &[String]) -> Result<()> {
             total_steps: steps,
         },
         log_every: (steps / 10).max(1),
+        ckpt,
     };
     let t0 = std::time::Instant::now();
     let rep = match io {
@@ -321,6 +346,26 @@ fn train_cmd(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the checkpoint config from `--checkpoint-every/--checkpoint-dir/
+/// --resume` (shared by the channel and socket paths).
+fn checkpoint_cfg_of(a: &Args) -> Result<Option<CheckpointCfg>> {
+    let every = a.get_usize("checkpoint-every")?.unwrap();
+    let resume = a.flag("resume");
+    let restarts = a.get_usize("max-restarts")?.unwrap();
+    match a.get("checkpoint-dir") {
+        Some(dir) => Ok(Some(CheckpointCfg {
+            dir: PathBuf::from(dir),
+            every,
+            resume,
+        })),
+        None if every > 0 || resume || restarts > 0 => {
+            bail!("--checkpoint-every/--resume/--max-restarts need \
+                   --checkpoint-dir")
+        }
+        None => Ok(None),
+    }
+}
+
 /// Map `--bucket` / `--ranks-per-node` to the gradient-reduction strategy.
 fn grad_reduce_of(bucket: usize, ranks_per_node: usize) -> Result<GradReduce> {
     Ok(match (bucket, ranks_per_node) {
@@ -406,6 +451,8 @@ fn train_socket_cmd(a: &Args, reduce: GradReduce, rpn: usize) -> Result<()> {
     let groups = a.get_usize("groups")?.unwrap();
     let steps = a.get_usize("steps")?.unwrap();
     let world = groups * grid.ways();
+    let ckpt = checkpoint_cfg_of(a)?;
+    let max_restarts = a.get_usize("max-restarts")?.unwrap();
     let task = obj(vec![
         ("cmd", "train".into()),
         ("model", a.req("model")?.into()),
@@ -421,12 +468,24 @@ fn train_socket_cmd(a: &Args, reduce: GradReduce, rpn: usize) -> Result<()> {
          a.get_usize("bucket")?.unwrap_or(DEFAULT_BUCKET_ELEMS).into()),
         ("artifacts",
          artifacts_dir().to_string_lossy().into_owned().into()),
+        // checkpoint config: empty dir = checkpointing off
+        ("ckpt_dir",
+         ckpt.as_ref()
+             .map(|c| c.dir.to_string_lossy().into_owned())
+             .unwrap_or_default()
+             .into()),
+        ("ckpt_every", ckpt.as_ref().map(|c| c.every).unwrap_or(0).into()),
+        ("resume", ckpt.as_ref().map(|c| c.resume).unwrap_or(false).into()),
     ]);
     let spec = LaunchSpec { world, ranks_per_node: rpn, hosts: vec![], task };
-    let scratch = std::env::temp_dir()
-        .join(format!("hydra3d-launch-{}", std::process::id()));
+    let scratch = match std::env::var("HYDRA3D_LAUNCH_SCRATCH") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir()
+            .join(format!("hydra3d-launch-{}", std::process::id())),
+    };
     let t0 = std::time::Instant::now();
-    let results = launch::launch(&std::env::current_exe()?, &spec, &scratch)?;
+    let (results, restarts) = launch::launch_with_recovery(
+        &std::env::current_exe()?, &spec, &scratch, max_restarts, with_resume)?;
     let dt = t0.elapsed().as_secs_f64();
 
     let mut fp = RunFingerprint {
@@ -459,6 +518,7 @@ fn train_socket_cmd(a: &Args, reduce: GradReduce, rpn: usize) -> Result<()> {
     }
     let first = f32::from_bits(fp.losses_bits[0]);
     let last = f32::from_bits(*fp.losses_bits.last().unwrap());
+    println!("world restarts: {restarts}");
     println!(
         "trained {} (grid {}) for {} steps over {} worker processes \
          ({} node(s) x {} rank(s), {:?} reduce): loss {:.6} -> {:.6} in \
@@ -483,8 +543,26 @@ fn train_socket_cmd(a: &Args, reduce: GradReduce, rpn: usize) -> Result<()> {
     if let Some(path) = a.get("report") {
         fp.write(Path::new(path))?;
     }
-    std::fs::remove_dir_all(&scratch).ok();
+    if std::env::var("HYDRA3D_LAUNCH_SCRATCH").is_err() {
+        // the override is CI's: it keeps the logs for artifact upload
+        std::fs::remove_dir_all(&scratch).ok();
+    }
     Ok(())
+}
+
+/// Rewrite a launch task document with `resume` forced on — applied by
+/// [`launch::launch_with_recovery`] before every restarted attempt, so the
+/// relaunched world picks up from the newest committed snapshot.
+fn with_resume(task: &Json) -> Json {
+    let Json::Obj(kv) = task else { return task.clone() };
+    Json::Obj(
+        kv.iter()
+            .map(|(k, v)| {
+                let v = if k == "resume" { Json::Bool(true) } else { v.clone() };
+                (k.clone(), v)
+            })
+            .collect(),
+    )
 }
 
 /// The gradient world's rendezvous: same topology as the compute world,
@@ -517,12 +595,28 @@ fn worker_cmd(rest: &[String]) -> Result<()> {
         .opt("node", "this worker's node index", None);
     let a = c.parse(rest)?;
     let node: usize = a.req("node")?.parse()?;
-    // test hook: die before rendezvous so the launcher's fail-fast
-    // supervision (not a hang) is what the kill-the-child test observes
+    // fault-injection hooks: HYDRA3D_TEST_DIE_NODE alone kills the chosen
+    // node before rendezvous (the launcher's fail-fast supervision — not a
+    // hang — is what the kill-the-child test observes); combined with
+    // HYDRA3D_TEST_DIE_AT_STEP it instead arms a mid-training abort at
+    // that step, after the world is fully connected and has made progress
     if let Ok(v) = std::env::var("HYDRA3D_TEST_DIE_NODE") {
         if v.parse::<usize>().ok() == Some(node) {
-            eprintln!("worker node {node}: HYDRA3D_TEST_DIE_NODE set, exiting");
-            std::process::exit(101);
+            let at_step = std::env::var("HYDRA3D_TEST_DIE_AT_STEP")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok());
+            match at_step {
+                Some(step) => {
+                    eprintln!("worker node {node}: armed to die at step {step} \
+                               (HYDRA3D_TEST_DIE_AT_STEP)");
+                    arm_test_die_at_step(step);
+                }
+                None => {
+                    eprintln!("worker node {node}: HYDRA3D_TEST_DIE_NODE set, \
+                               exiting");
+                    std::process::exit(101);
+                }
+            }
         }
     }
     let m = launch::read_manifest(Path::new(a.req("manifest")?))?;
@@ -573,6 +667,17 @@ fn worker_train(m: &Manifest, node: usize) -> Result<Json> {
             total_steps: steps,
         },
         log_every: 0, // workers stay quiet; the launcher prints the summary
+        ckpt: {
+            let dir = t.req("ckpt_dir")?.as_str()?;
+            (!dir.is_empty()).then(|| -> Result<CheckpointCfg> {
+                Ok(CheckpointCfg {
+                    dir: PathBuf::from(dir),
+                    every: t.req("ckpt_every")?.as_usize()?,
+                    resume: t.req("resume")?.as_bool()?,
+                })
+            })
+            .transpose()?
+        },
     };
     let eps: Vec<Box<dyn Communicator>> = socket::connect_node(&m.rendezvous, node)?
         .into_iter()
@@ -719,8 +824,11 @@ fn comm_smoke_cmd(rest: &[String]) -> Result<()> {
     }
     let task = obj(vec![("cmd", "smoke".into()), ("elems", elems.into())]);
     let spec = LaunchSpec { world, ranks_per_node: rpn, hosts: vec![], task };
-    let scratch = std::env::temp_dir()
-        .join(format!("hydra3d-smoke-{}", std::process::id()));
+    let scratch = match std::env::var("HYDRA3D_LAUNCH_SCRATCH") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir()
+            .join(format!("hydra3d-smoke-{}", std::process::id())),
+    };
     let results = launch::launch(&std::env::current_exe()?, &spec, &scratch)?;
     let ring0 = results[0].req("ring_bits")?.as_str()?.to_string();
     let hier0 = results[0].req("hier_bits")?.as_str()?.to_string();
@@ -734,7 +842,9 @@ fn comm_smoke_cmd(rest: &[String]) -> Result<()> {
         ring_frames += r.req("ring_frame_bytes")?.as_usize()?;
         hier_frames += r.req("hier_frame_bytes")?.as_usize()?;
     }
-    std::fs::remove_dir_all(&scratch).ok();
+    if std::env::var("HYDRA3D_LAUNCH_SCRATCH").is_err() {
+        std::fs::remove_dir_all(&scratch).ok();
+    }
     println!(
         "comm-smoke ok: world {world} x rpn {rpn} ({} process(es)), {elems} \
          f32/rank; ring {ring0} hier {hier0}; \

@@ -1,0 +1,825 @@
+//! Bit-exact checkpoint/restart (ROADMAP item 5a; paper §V operability).
+//!
+//! A training world checkpoints everything a resumed world needs to
+//! continue the *exact* trajectory: replicated parameters, Adam moments
+//! and step count, BN running statistics, and the loss records produced so
+//! far. The schedule itself is never stored — `sample_schedule_epochs`,
+//! `LrSchedule::at` and the dropout instances are all pure functions of
+//! the absolute step index, so the shuffle/RNG "cursor" is simply the next
+//! step number, and resume-equals-uninterrupted holds at the bits level.
+//!
+//! On-disk layout under the checkpoint directory:
+//!
+//! ```text
+//! step-<N>.tmp/            written by all ranks (rank 0 adds meta.json)
+//! step-<N>/                after rank 0's atomic rename
+//! step-<N>/COMMITTED       marker, written last — the commit point
+//! ```
+//!
+//! The commit protocol is rank-0-coordinated: every rank writes its own
+//! shard into the temp directory, the world barriers, and only then does
+//! rank 0 rename the directory and drop the marker. A crash at any point
+//! leaves either a fully committed snapshot or an ignorable temp
+//! directory — never a torn snapshot a loader could trust.
+//!
+//! Shards are per-rank and keyed by the rank's grid geometry (group,
+//! (D, H, W) coordinates, hyperslab offset/extents — the same `Grid4`-style
+//! shard geometry the data store uses), serialized with the little-endian
+//! `to_le_bytes` framing of `comm::socket` and closed by an order-sensitive
+//! FNV-1a checksum over the exact bytes. Loading validates magic, version,
+//! geometry, tensor shapes and checksum; [`resolve_resume`] walks committed
+//! snapshots newest-first and falls back past any snapshot that fails
+//! validation (e.g. a hand-truncated shard).
+
+use crate::engine::StepRecord;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Bump on any change to the shard byte layout or meta schema.
+pub const CKPT_VERSION: u32 = 1;
+/// Shard file magic ("hydra3d checkpoint").
+const MAGIC: &[u8; 4] = b"H3CK";
+/// Marker file inside a committed snapshot directory (written last).
+pub const MARKER_FILE: &str = "COMMITTED";
+/// Snapshot metadata file (rank 0 writes it with the shards).
+pub const META_FILE: &str = "meta.json";
+
+/// Checkpoint configuration threaded through the engines' options.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// Snapshot directory (shared by all ranks/processes of the world).
+    pub dir: PathBuf,
+    /// Save a snapshot every N steps (and at the final step); 0 disables
+    /// periodic saves (useful for resume-only runs).
+    pub every: usize,
+    /// Resume from the newest valid committed snapshot if one exists
+    /// (start fresh otherwise).
+    pub resume: bool,
+}
+
+/// One rank's shard geometry — the key a shard is validated against on
+/// load, mirroring the data store's grid-keyed hyperslab layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardGeom {
+    pub rank: usize,
+    pub world: usize,
+    pub group: usize,
+    /// (D, H, W) position in the spatial process grid.
+    pub coords: [usize; 3],
+    /// Hyperslab offset of this rank's shard in the global volume.
+    pub shard_off: [usize; 3],
+    /// Hyperslab extents of this rank's shard.
+    pub shard_len: [usize; 3],
+}
+
+/// Run-configuration fingerprint stored in `meta.json` and validated on
+/// resume: a snapshot of one configuration must never silently seed a
+/// different one (the trajectory would not be the uninterrupted run's).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub model: String,
+    /// `SpatialGrid` key, e.g. "2x1x1".
+    pub grid: String,
+    pub groups: usize,
+    pub batch_global: usize,
+    /// Total steps of the run (the LR schedule depends on it).
+    pub steps: usize,
+    pub seed: u64,
+    pub world: usize,
+}
+
+/// Borrowed view of everything one rank saves (the loader returns the
+/// owned [`RankState`]).
+pub struct SaveState<'a> {
+    /// First step the resumed world should execute.
+    pub next_step: usize,
+    pub adam_t: u64,
+    pub records: &'a [StepRecord],
+    pub params: &'a [Tensor],
+    pub adam_m: &'a [Tensor],
+    pub adam_v: &'a [Tensor],
+    pub run_mean: &'a [Tensor],
+    pub run_var: &'a [Tensor],
+}
+
+/// One rank's restored state.
+#[derive(Debug)]
+pub struct RankState {
+    pub next_step: usize,
+    pub adam_t: u64,
+    pub records: Vec<StepRecord>,
+    pub params: Vec<Tensor>,
+    pub adam_m: Vec<Tensor>,
+    pub adam_v: Vec<Tensor>,
+    pub run_mean: Vec<Tensor>,
+    pub run_var: Vec<Tensor>,
+}
+
+/// Committed snapshot directory for `step`.
+pub fn step_dir(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("step-{step}"))
+}
+
+fn tmp_dir(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("step-{step}.tmp"))
+}
+
+/// Shard file of `rank` inside a snapshot directory.
+pub fn shard_path(snapshot: &Path, rank: usize) -> PathBuf {
+    snapshot.join(format!("rank-{rank}.bin"))
+}
+
+// ---------------------------------------------------------------------------
+// little-endian framing (the `comm::socket::write_frame` idiom: serialize
+// into one scratch buffer, then a single write)
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        let shape = t.shape();
+        self.u32(shape.len() as u32);
+        for &d in shape {
+            self.u32(d as u32);
+        }
+        for &v in t.data() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn tensors(&mut self, ts: &[Tensor]) {
+        self.u32(ts.len() as u32);
+        for t in ts {
+            self.tensor(t);
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            bail!("shard truncated at byte {} (wanted {n} more of {})",
+                  self.off, self.buf.len());
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.u32()? as usize;
+        if ndim > 8 {
+            bail!("implausible tensor rank {ndim} (corrupt shard)");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u32()? as usize);
+        }
+        let elems: usize = shape.iter().product();
+        let raw = self.take(4 * elems)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    fn tensors(&mut self) -> Result<Vec<Tensor>> {
+        let n = self.u32()? as usize;
+        if n > 100_000 {
+            bail!("implausible tensor count {n} (corrupt shard)");
+        }
+        (0..n).map(|_| self.tensor()).collect()
+    }
+}
+
+/// Order-sensitive FNV-1a over the shard payload — rejects torn or
+/// bit-flipped shards that still parse structurally.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// shard read/write
+// ---------------------------------------------------------------------------
+
+fn encode_shard(geom: &ShardGeom, st: &SaveState<'_>) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.buf.extend_from_slice(MAGIC);
+    e.u32(CKPT_VERSION);
+    e.u32(geom.rank as u32);
+    e.u32(geom.world as u32);
+    e.u32(geom.group as u32);
+    for &c in geom.coords.iter().chain(&geom.shard_off).chain(&geom.shard_len) {
+        e.u32(c as u32);
+    }
+    e.u64(st.next_step as u64);
+    e.u64(st.adam_t);
+    e.u32(st.records.len() as u32);
+    for r in st.records {
+        e.u64(r.step as u64);
+        e.u32(r.loss.to_bits());
+        e.u64(r.lr.to_bits());
+        e.u64(r.io_wait.to_bits());
+    }
+    e.tensors(st.params);
+    e.tensors(st.adam_m);
+    e.tensors(st.adam_v);
+    e.tensors(st.run_mean);
+    e.tensors(st.run_var);
+    let cs = fnv1a(&e.buf);
+    e.u64(cs);
+    e.buf
+}
+
+fn decode_shard(bytes: &[u8], expect: &ShardGeom) -> Result<RankState> {
+    if bytes.len() < MAGIC.len() + 8 {
+        bail!("shard too short ({} bytes)", bytes.len());
+    }
+    let (payload, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let computed = fnv1a(payload);
+    if stored != computed {
+        bail!("shard checksum mismatch (stored {stored:016x}, computed \
+               {computed:016x}) — torn or corrupt snapshot");
+    }
+    let mut d = Dec { buf: payload, off: 0 };
+    if d.take(4)? != MAGIC {
+        bail!("bad shard magic");
+    }
+    let version = d.u32()?;
+    if version != CKPT_VERSION {
+        bail!("shard version {version} != supported {CKPT_VERSION}");
+    }
+    let geom = ShardGeom {
+        rank: d.u32()? as usize,
+        world: d.u32()? as usize,
+        group: d.u32()? as usize,
+        coords: [d.u32()? as usize, d.u32()? as usize, d.u32()? as usize],
+        shard_off: [d.u32()? as usize, d.u32()? as usize, d.u32()? as usize],
+        shard_len: [d.u32()? as usize, d.u32()? as usize, d.u32()? as usize],
+    };
+    if geom != *expect {
+        bail!("shard geometry {geom:?} does not match this rank's {expect:?} \
+               (grid/topology changed since the snapshot)");
+    }
+    let next_step = d.u64()? as usize;
+    let adam_t = d.u64()?;
+    let n_rec = d.u32()? as usize;
+    if n_rec > next_step {
+        bail!("{n_rec} records for a step-{next_step} snapshot");
+    }
+    let mut records = Vec::with_capacity(n_rec);
+    for _ in 0..n_rec {
+        records.push(StepRecord {
+            step: d.u64()? as usize,
+            loss: f32::from_bits(d.u32()?),
+            lr: f64::from_bits(d.u64()?),
+            io_wait: f64::from_bits(d.u64()?),
+        });
+    }
+    let params = d.tensors()?;
+    let adam_m = d.tensors()?;
+    let adam_v = d.tensors()?;
+    let run_mean = d.tensors()?;
+    let run_var = d.tensors()?;
+    if d.off != payload.len() {
+        bail!("{} trailing bytes after shard payload", payload.len() - d.off);
+    }
+    if adam_m.len() != params.len() || adam_v.len() != params.len() {
+        bail!("Adam moment count does not match parameter count");
+    }
+    Ok(RankState {
+        next_step,
+        adam_t,
+        records,
+        params,
+        adam_m,
+        adam_v,
+        run_mean,
+        run_var,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// commit protocol
+// ---------------------------------------------------------------------------
+
+/// Ensure the temp directory for a `step` snapshot exists (idempotent —
+/// every rank calls it before writing its shard; processes on a shared
+/// filesystem race benignly).
+pub fn begin(dir: &Path, step: usize) -> Result<PathBuf> {
+    let tmp = tmp_dir(dir, step);
+    std::fs::create_dir_all(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    Ok(tmp)
+}
+
+/// Rank 0: write the snapshot metadata into the temp directory.
+pub fn write_meta(dir: &Path, step: usize, fp: &Fingerprint) -> Result<()> {
+    use crate::util::json::obj;
+    let doc = obj(vec![
+        ("schema", 1usize.into()),
+        ("version", (CKPT_VERSION as usize).into()),
+        ("step", step.into()),
+        ("model", fp.model.as_str().into()),
+        ("grid", fp.grid.as_str().into()),
+        ("groups", fp.groups.into()),
+        ("batch_global", fp.batch_global.into()),
+        ("steps", fp.steps.into()),
+        ("seed", (fp.seed as usize).into()),
+        ("world", fp.world.into()),
+    ]);
+    let path = tmp_dir(dir, step).join(META_FILE);
+    std::fs::write(&path, doc.to_string())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Every rank: serialize its state into the temp directory in one write.
+pub fn write_shard(dir: &Path, step: usize, geom: &ShardGeom,
+                   st: &SaveState<'_>) -> Result<()> {
+    let bytes = encode_shard(geom, st);
+    let path = shard_path(&tmp_dir(dir, step), geom.rank);
+    std::fs::write(&path, bytes)
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Rank 0, after the post-write barrier: atomically publish the snapshot
+/// (rename temp → final, then drop the marker). If the snapshot was
+/// already committed by an earlier run of the same configuration the bits
+/// are identical by determinism, so the temp copy is simply discarded.
+pub fn commit(dir: &Path, step: usize) -> Result<()> {
+    let tmp = tmp_dir(dir, step);
+    let fin = step_dir(dir, step);
+    if fin.join(MARKER_FILE).exists() {
+        std::fs::remove_dir_all(&tmp).ok();
+        return Ok(());
+    }
+    if fin.exists() {
+        // a final dir without a marker is a previous crash between rename
+        // and marker: discard it, this snapshot supersedes it bit-for-bit
+        std::fs::remove_dir_all(&fin)
+            .with_context(|| format!("clear stale {}", fin.display()))?;
+    }
+    std::fs::rename(&tmp, &fin)
+        .with_context(|| format!("commit {} -> {}", tmp.display(), fin.display()))?;
+    std::fs::write(fin.join(MARKER_FILE), format!("step {step}\n"))
+        .with_context(|| format!("write marker in {}", fin.display()))?;
+    Ok(())
+}
+
+/// Committed snapshot steps (marker present), newest first.
+pub fn committed_steps(dir: &Path) -> Vec<usize> {
+    let mut steps = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return steps;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(num) = name.strip_prefix("step-") else { continue };
+        let Ok(step) = num.parse::<usize>() else { continue };
+        if e.path().join(MARKER_FILE).exists() {
+            steps.push(step);
+        }
+    }
+    steps.sort_unstable_by(|a, b| b.cmp(a));
+    steps
+}
+
+/// Validate one committed snapshot end to end: meta fingerprint plus every
+/// rank shard (checksum + geometry-independent structure).
+fn validate_snapshot(dir: &Path, step: usize, fp: &Fingerprint) -> Result<()> {
+    let snap = step_dir(dir, step);
+    let meta = crate::util::json::Json::parse_file(&snap.join(META_FILE))
+        .context("snapshot meta")?;
+    let stored = Fingerprint {
+        model: meta.req("model")?.as_str()?.to_string(),
+        grid: meta.req("grid")?.as_str()?.to_string(),
+        groups: meta.req("groups")?.as_usize()?,
+        batch_global: meta.req("batch_global")?.as_usize()?,
+        steps: meta.req("steps")?.as_usize()?,
+        seed: meta.req("seed")?.as_usize()? as u64,
+        world: meta.req("world")?.as_usize()?,
+    };
+    if stored != *fp {
+        bail!("snapshot fingerprint {stored:?} does not match this run {fp:?}");
+    }
+    if meta.req("step")?.as_usize()? != step {
+        bail!("snapshot directory step-{step} disagrees with its meta");
+    }
+    let ver = meta.req("version")?.as_usize()?;
+    if ver != CKPT_VERSION as usize {
+        bail!("snapshot version {ver} != supported {CKPT_VERSION}");
+    }
+    for rank in 0..fp.world {
+        let path = shard_path(&snap, rank);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        if bytes.len() < MAGIC.len() + 8 {
+            bail!("rank {rank} shard too short");
+        }
+        let (payload, tail) = bytes.split_at(bytes.len() - 8);
+        let stored_cs = u64::from_le_bytes(tail.try_into().unwrap());
+        if stored_cs != fnv1a(payload) {
+            bail!("rank {rank} shard checksum mismatch (torn snapshot)");
+        }
+    }
+    Ok(())
+}
+
+/// Resolve the step a resuming world should restart from: the newest
+/// committed snapshot whose meta fingerprint matches and whose shards all
+/// pass checksum validation. Snapshots that fail validation are skipped
+/// with a warning (fallback to the previous marker); `None` means start
+/// fresh. Deterministic across processes — every node of a socket world
+/// resolves the same step because nothing writes while worlds are down.
+pub fn resolve_resume(dir: &Path, fp: &Fingerprint) -> Result<Option<usize>> {
+    for step in committed_steps(dir) {
+        match validate_snapshot(dir, step, fp) {
+            Ok(()) => return Ok(Some(step)),
+            Err(e) => {
+                eprintln!(
+                    "checkpoint: skipping snapshot step-{step} in {}: {e:#}",
+                    dir.display()
+                );
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Load this rank's shard of a resolved snapshot. Strict: by the time a
+/// world agrees on a resume step via [`resolve_resume`], a shard that
+/// fails here is a hard error (falling back per-rank would diverge ranks).
+pub fn load_shard(dir: &Path, step: usize, geom: &ShardGeom) -> Result<RankState> {
+    let path = shard_path(&step_dir(dir, step), geom.rank);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let st = decode_shard(&bytes, geom)
+        .with_context(|| format!("decode {}", path.display()))?;
+    if st.next_step != step {
+        bail!("shard {} is for step {}, directory says {step}",
+              path.display(), st.next_step);
+    }
+    Ok(st)
+}
+
+/// Shape-check restored tensors against the live model's (manifest-derived)
+/// layout before they replace anything.
+pub fn check_shapes(st: &RankState, params: &[Tensor], run_mean: &[Tensor])
+                    -> Result<()> {
+    if st.params.len() != params.len() {
+        bail!("snapshot has {} parameters, model has {}",
+              st.params.len(), params.len());
+    }
+    for (i, (a, b)) in st.params.iter().zip(params).enumerate() {
+        if a.shape() != b.shape() {
+            bail!("parameter {i} shape {:?} != model shape {:?}",
+                  a.shape(), b.shape());
+        }
+    }
+    for (i, (a, b)) in st.adam_m.iter().zip(params).enumerate() {
+        if a.shape() != b.shape() {
+            bail!("Adam m[{i}] shape {:?} != model shape {:?}",
+                  a.shape(), b.shape());
+        }
+    }
+    if st.run_mean.len() != run_mean.len() || st.run_var.len() != run_mean.len() {
+        bail!("snapshot has {} BN layers, model has {}",
+              st.run_mean.len(), run_mean.len());
+    }
+    Ok(())
+}
+
+/// Convenience for the engines: the full rank-side save protocol minus the
+/// barrier/commit, which the caller interleaves with its communicator.
+pub fn save_rank(cfg: &CheckpointCfg, fp: &Fingerprint, geom: &ShardGeom,
+                 st: &SaveState<'_>) -> Result<()> {
+    begin(&cfg.dir, st.next_step)?;
+    if geom.rank == 0 {
+        write_meta(&cfg.dir, st.next_step, fp)?;
+    }
+    write_shard(&cfg.dir, st.next_step, geom, st)
+        .with_context(|| format!("checkpoint step {}", st.next_step))
+}
+
+/// Should a snapshot be taken after `step` completes? Keyed on the
+/// absolute step index so an interrupted and a resumed run checkpoint at
+/// identical points (identical barrier traffic → identical byte counters).
+pub fn due_after(cfg: &CheckpointCfg, step: usize, total_steps: usize) -> bool {
+    cfg.every > 0 && ((step + 1) % cfg.every == 0 || step + 1 == total_steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn geom(rank: usize, world: usize) -> ShardGeom {
+        ShardGeom {
+            rank,
+            world,
+            group: rank / 2,
+            coords: [rank % 2, 0, 0],
+            shard_off: [8 * (rank % 2), 0, 0],
+            shard_len: [8, 16, 16],
+        }
+    }
+
+    fn state(seed: u64, next_step: usize) -> RankState {
+        let mut rng = crate::util::rng::Pcg::new(seed, 3);
+        let mut t = |shape: &[usize]| {
+            let n: usize = shape.iter().product();
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 1.5);
+            Tensor::from_vec(shape, v)
+        };
+        let params = vec![t(&[4, 2, 3, 3, 3]), t(&[4]), t(&[10, 6])];
+        let adam_m = vec![t(&[4, 2, 3, 3, 3]), t(&[4]), t(&[10, 6])];
+        let adam_v = vec![t(&[4, 2, 3, 3, 3]), t(&[4]), t(&[10, 6])];
+        RankState {
+            next_step,
+            adam_t: next_step as u64,
+            records: (0..next_step)
+                .map(|s| StepRecord {
+                    step: s,
+                    loss: (s as f32).sin(),
+                    lr: 1e-3 / (s + 1) as f64,
+                    io_wait: 0.25 * s as f64,
+                })
+                .collect(),
+            params,
+            adam_m,
+            adam_v,
+            run_mean: vec![t(&[4])],
+            run_var: vec![t(&[4])],
+        }
+    }
+
+    fn save_view(st: &RankState) -> SaveState<'_> {
+        SaveState {
+            next_step: st.next_step,
+            adam_t: st.adam_t,
+            records: &st.records,
+            params: &st.params,
+            adam_m: &st.adam_m,
+            adam_v: &st.adam_v,
+            run_mean: &st.run_mean,
+            run_var: &st.run_var,
+        }
+    }
+
+    fn fp(world: usize) -> Fingerprint {
+        Fingerprint {
+            model: "cf-nano".into(),
+            grid: "2x1x1".into(),
+            groups: world / 2,
+            batch_global: 4,
+            steps: 8,
+            seed: 7,
+            world,
+        }
+    }
+
+    fn bits(ts: &[Tensor]) -> Vec<Vec<u32>> {
+        ts.iter().map(|t| t.data().iter().map(|v| v.to_bits()).collect())
+            .collect()
+    }
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("hydra3d-ckpt-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn commit_world(dir: &Path, step: usize, world: usize, seed: u64)
+                    -> Result<()> {
+        for rank in 0..world {
+            let st = state(seed + rank as u64, step);
+            save_rank(
+                &CheckpointCfg { dir: dir.into(), every: 1, resume: true },
+                &fp(world), &geom(rank, world), &save_view(&st),
+            )?;
+        }
+        commit(dir, step)
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let dir = scratch("roundtrip");
+        let world = 2;
+        commit_world(&dir, 3, world, 11).unwrap();
+        for rank in 0..world {
+            let orig = state(11 + rank as u64, 3);
+            let got = load_shard(&dir, 3, &geom(rank, world)).unwrap();
+            assert_eq!(got.next_step, 3);
+            assert_eq!(got.adam_t, 3);
+            assert_eq!(bits(&got.params), bits(&orig.params));
+            assert_eq!(bits(&got.adam_m), bits(&orig.adam_m));
+            assert_eq!(bits(&got.adam_v), bits(&orig.adam_v));
+            assert_eq!(bits(&got.run_mean), bits(&orig.run_mean));
+            assert_eq!(bits(&got.run_var), bits(&orig.run_var));
+            assert_eq!(got.records.len(), orig.records.len());
+            for (a, b) in got.records.iter().zip(&orig.records) {
+                assert_eq!(a.step, b.step);
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+                assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+                assert_eq!(a.io_wait.to_bits(), b.io_wait.to_bits());
+            }
+        }
+        assert_eq!(resolve_resume(&dir, &fp(world)).unwrap(), Some(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// proptest: random shapes/values/geometry round-trip bit-identically
+    /// (including negative zero, subnormals and extreme exponents from the
+    /// normal generator).
+    #[test]
+    fn prop_shard_roundtrip_bits() {
+        prop::check("ckpt-shard-roundtrip", 40, |g| {
+            let n_params = g.usize_in(1, 5);
+            let mut params = Vec::new();
+            for _ in 0..n_params {
+                let ndim = g.usize_in(1, 4);
+                let shape: Vec<usize> =
+                    (0..ndim).map(|_| g.usize_in(1, 6)).collect();
+                let n: usize = shape.iter().product();
+                params.push(Tensor::from_vec(&shape, g.vec_f32(n, 10.0)));
+            }
+            let clone_like = |g: &mut prop::Gen, ts: &[Tensor]| -> Vec<Tensor> {
+                ts.iter()
+                    .map(|t| Tensor::from_vec(t.shape(),
+                                              g.vec_f32(t.numel(), 3.0)))
+                    .collect()
+            };
+            let adam_m = clone_like(g, &params);
+            let adam_v = clone_like(g, &params);
+            let n_bn = g.usize_in(0, 3);
+            let run_mean: Vec<Tensor> = (0..n_bn)
+                .map(|_| {
+                    let c = g.usize_in(1, 8);
+                    Tensor::from_vec(&[c], g.vec_f32(c, 2.0))
+                })
+                .collect();
+            let run_var: Vec<Tensor> = run_mean
+                .iter()
+                .map(|t| Tensor::from_vec(t.shape(), g.vec_f32(t.numel(), 2.0)))
+                .collect();
+            let next_step = g.usize_in(1, 9);
+            let st = RankState {
+                next_step,
+                adam_t: next_step as u64,
+                records: (0..next_step)
+                    .map(|s| StepRecord {
+                        step: s,
+                        loss: g.f32_in(-1e6, 1e6),
+                        lr: g.f32_in(0.0, 1.0) as f64,
+                        io_wait: g.f32_in(0.0, 2.0) as f64,
+                    })
+                    .collect(),
+                params,
+                adam_m,
+                adam_v,
+                run_mean,
+                run_var,
+            };
+            let world = g.pow2_in(1, 8);
+            let gm = ShardGeom {
+                rank: g.usize_in(0, world - 1),
+                world,
+                group: g.usize_in(0, 3),
+                coords: [g.usize_in(0, 3), g.usize_in(0, 3), g.usize_in(0, 3)],
+                shard_off: [g.usize_in(0, 64), 0, 0],
+                shard_len: [g.usize_in(1, 64); 3],
+            };
+            let bytes = encode_shard(&gm, &save_view(&st));
+            let got = decode_shard(&bytes, &gm).map_err(|e| e.to_string())?;
+            if bits(&got.params) != bits(&st.params)
+                || bits(&got.adam_m) != bits(&st.adam_m)
+                || bits(&got.adam_v) != bits(&st.adam_v)
+                || bits(&got.run_mean) != bits(&st.run_mean)
+                || bits(&got.run_var) != bits(&st.run_var)
+            {
+                return Err("tensor bits drifted through the shard".into());
+            }
+            if got.next_step != st.next_step || got.adam_t != st.adam_t {
+                return Err("cursor drifted".into());
+            }
+            for (a, b) in got.records.iter().zip(&st.records) {
+                if a.loss.to_bits() != b.loss.to_bits()
+                    || a.lr.to_bits() != b.lr.to_bits()
+                {
+                    return Err("record bits drifted".into());
+                }
+            }
+            // wrong geometry must be rejected
+            let mut other = gm;
+            other.coords[1] += 1;
+            if decode_shard(&bytes, &other).is_ok() {
+                return Err("geometry mismatch accepted".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Torn-write recovery: a truncated shard in the newest snapshot is
+    /// rejected and resume falls back to the previous committed marker.
+    #[test]
+    fn torn_snapshot_falls_back_to_previous_marker() {
+        let dir = scratch("torn");
+        let world = 2;
+        commit_world(&dir, 2, world, 5).unwrap();
+        commit_world(&dir, 4, world, 6).unwrap();
+        assert_eq!(resolve_resume(&dir, &fp(world)).unwrap(), Some(4));
+        // tear the newest snapshot: truncate rank 1's shard mid-payload
+        let victim = shard_path(&step_dir(&dir, 4), 1);
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_shard(&dir, 4, &geom(1, world)).is_err());
+        assert_eq!(resolve_resume(&dir, &fp(world)).unwrap(), Some(2),
+                   "must fall back past the torn snapshot");
+        // a crash *before* commit leaves only a temp dir: invisible
+        begin(&dir, 6).unwrap();
+        write_shard(&dir, 6, &geom(0, world),
+                    &save_view(&state(9, 6))).unwrap();
+        assert_eq!(resolve_resume(&dir, &fp(world)).unwrap(), Some(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_skipped() {
+        let dir = scratch("fp");
+        commit_world(&dir, 2, 2, 5).unwrap();
+        let mut other = fp(2);
+        other.seed = 8;
+        assert_eq!(resolve_resume(&dir, &other).unwrap(), None);
+        let mut other = fp(2);
+        other.grid = "1x1x1".into();
+        assert_eq!(resolve_resume(&dir, &other).unwrap(), None);
+        assert_eq!(resolve_resume(&dir, &fp(2)).unwrap(), Some(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_flip_is_rejected() {
+        let dir = scratch("flip");
+        commit_world(&dir, 2, 1, 3).unwrap();
+        let victim = shard_path(&step_dir(&dir, 2), 0);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = load_shard(&dir, 2, &geom(0, 1)).unwrap_err().to_string();
+        let root = format!("{:#}", load_shard(&dir, 2, &geom(0, 1)).unwrap_err());
+        assert!(root.contains("checksum"), "{err}: {root}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn due_after_matches_cadence_and_final_step() {
+        let c = CheckpointCfg { dir: "x".into(), every: 2, resume: false };
+        let hits: Vec<usize> =
+            (0..5).filter(|&s| due_after(&c, s, 5)).collect();
+        assert_eq!(hits, vec![1, 3, 4]); // steps 2, 4 and the final step 5
+        let off = CheckpointCfg { dir: "x".into(), every: 0, resume: true };
+        assert!((0..5).all(|s| !due_after(&off, s, 5)));
+    }
+}

@@ -11,8 +11,10 @@
 //! calls over a channel. On the single-core testbed this serialization
 //! costs nothing and keeps the FFI perfectly thread-safe.
 
+pub mod checkpoint;
 pub mod manifest;
 pub mod service;
 
+pub use checkpoint::CheckpointCfg;
 pub use manifest::{FusedInfo, LayerDesc, Manifest, ModelInfo};
 pub use service::{RuntimeHandle, RuntimeStats};

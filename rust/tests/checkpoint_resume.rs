@@ -1,0 +1,357 @@
+//! Fault tolerance acceptance: bit-exact checkpoint/restart.
+//!
+//! The contract under test (ROADMAP item 5a): a run that is interrupted
+//! and resumed from its newest committed snapshot produces the *same bits*
+//! as the uninterrupted run — loss bit patterns, parameters, BN running
+//! statistics — across the {channel, socket} x {inmem, store-async}
+//! backend/IO matrix, and a torn (truncated) snapshot is rejected in favor
+//! of the previous committed marker.
+//!
+//! The process-level half exercises the real failure path: a 4-process
+//! `train --backend socket` run whose node 1 is killed mid-training
+//! (`HYDRA3D_TEST_DIE_NODE` + `HYDRA3D_TEST_DIE_AT_STEP`), auto-restarted
+//! by `--max-restarts`, and required to report the identical loss
+//! trajectory — plus byte counters identical to a clean resume performing
+//! the same recovery computation.
+
+use hydra3d::comm::{CommBackend, GradReduce};
+use hydra3d::engine::hybrid::{train_hybrid_store, train_hybrid_with,
+                              HybridOpts, InMemorySource, IoMode};
+use hydra3d::engine::{LrSchedule, TrainReport};
+use hydra3d::data::container::{write_dataset, Container};
+use hydra3d::partition::SpatialGrid;
+use hydra3d::runtime::checkpoint::{self, CheckpointCfg};
+use hydra3d::runtime::RuntimeHandle;
+use hydra3d::tensor::Tensor;
+use hydra3d::util::json::Json;
+use hydra3d::util::rng::Pcg;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::process::Stdio;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("hydra3d-ckpt-it-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_cf_data(n: usize, size: usize, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    let mut rng = Pcg::new(seed, 77);
+    let mut inputs = Vec::new();
+    let mut targets = Vec::new();
+    for _ in 0..n {
+        let mut x = Tensor::zeros(&[1, 1, size, size, size]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let m: f32 = x.data().iter().sum::<f32>() / x.numel() as f32;
+        let s: f32 = x.data().iter().map(|v| v * v).sum::<f32>() / x.numel() as f32;
+        inputs.push(x);
+        targets.push(Tensor::from_vec(&[1, 4], vec![m, s, -m, 0.3]));
+    }
+    (inputs, targets)
+}
+
+fn opts(steps: usize, ckpt: Option<CheckpointCfg>) -> HybridOpts {
+    HybridOpts {
+        model: "cf-nano".into(),
+        grid: SpatialGrid::depth(2),
+        groups: 2,
+        batch_global: 2,
+        steps,
+        seed: 21,
+        schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
+        log_every: 0,
+        ckpt,
+    }
+}
+
+fn cfg(dir: &Path, resume: bool) -> Option<CheckpointCfg> {
+    Some(CheckpointCfg { dir: dir.to_path_buf(), every: 2, resume })
+}
+
+/// Loss bit patterns, parameter bits and BN running-stat bits must all
+/// match; byte counters are deliberately excluded (a resumed report covers
+/// only the resumed suffix's traffic).
+fn assert_state_bits_equal(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record counts");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.step, rb.step, "{what}: step ids");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(),
+                   "{what}: step {} loss {:.9} vs {:.9}", ra.step, ra.loss,
+                   rb.loss);
+        assert_eq!(ra.lr.to_bits(), rb.lr.to_bits(), "{what}: step {} lr",
+                   ra.step);
+    }
+    for (i, (pa, pb)) in a.params.iter().zip(&b.params).enumerate() {
+        let same = pa.data().len() == pb.data().len()
+            && pa.data().iter().zip(pb.data())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "{what}: param {i} bit patterns differ");
+    }
+    for (side, (ta, tb)) in [
+        (&a.running.0, &b.running.0),
+        (&a.running.1, &b.running.1),
+    ]
+    .iter()
+    .enumerate()
+    {
+        for (i, (x, y)) in ta.iter().zip(tb.iter()).enumerate() {
+            let same = x.data().iter().zip(y.data())
+                .all(|(u, v)| u.to_bits() == v.to_bits());
+            assert!(same, "{what}: running stat {side}/{i} differs");
+        }
+    }
+}
+
+/// THE acceptance matrix: resume-equals-uninterrupted, bit for bit, over
+/// {channel, socket} transports x {inmem, store-async} I/O. Each cell runs
+/// the full trajectory with snapshots every 2 steps, deletes the later
+/// snapshots to stand in for an interruption after step 2, resumes, and
+/// requires the resumed run's full trajectory and final state to match the
+/// uninterrupted run exactly.
+#[test]
+fn resume_equals_uninterrupted_across_backend_io_matrix() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let steps = 6;
+    let (inputs, targets) = make_cf_data(6, 8, 31);
+
+    let backends: [(&str, CommBackend); 2] = [
+        ("channel", CommBackend::Channel),
+        ("socket", CommBackend::Socket { ranks_per_node: 2 }),
+    ];
+    for (bname, backend) in backends {
+        for io in ["inmem", "store-async"] {
+            let what = format!("{bname}/{io}");
+            let ck = scratch(&format!("matrix-{bname}-{io}"));
+            let run = |resume: bool| -> TrainReport {
+                let o = opts(steps, cfg(&ck, resume));
+                match io {
+                    "inmem" => {
+                        let src = Arc::new(InMemorySource {
+                            inputs: inputs.clone(),
+                            targets: targets.clone(),
+                        });
+                        train_hybrid_with(&rt, &o, src, &backend,
+                                          GradReduce::default())
+                            .unwrap_or_else(|e| panic!("{what}: {e:#}"))
+                    }
+                    _ => {
+                        let path = ck.join("dataset.bin");
+                        if !path.exists() {
+                            write_dataset(&path, &inputs, &targets, None)
+                                .unwrap();
+                        }
+                        let c = Arc::new(Container::open(&path).unwrap());
+                        train_hybrid_store(&rt, &o, c, IoMode::StoreAsync,
+                                           &backend, GradReduce::default())
+                            .unwrap_or_else(|e| panic!("{what}: {e:#}"))
+                    }
+                }
+            };
+
+            let full = run(false);
+            assert_eq!(full.records.len(), steps, "{what}: baseline steps");
+            // every cadence point must have committed: steps 2, 4 and 6
+            assert_eq!(checkpoint::committed_steps(&ck), vec![6, 4, 2],
+                       "{what}: committed snapshots");
+
+            // resume over the complete directory is a no-op replay: the
+            // final snapshot already holds the whole trajectory
+            let noop = run(true);
+            assert_state_bits_equal(&full, &noop, &format!("{what} (noop)"));
+
+            // interruption stand-in: only the step-2 snapshot survives
+            std::fs::remove_dir_all(checkpoint::step_dir(&ck, 4)).unwrap();
+            std::fs::remove_dir_all(checkpoint::step_dir(&ck, 6)).unwrap();
+            let resumed = run(true);
+            assert_state_bits_equal(&full, &resumed, &what);
+
+            std::fs::remove_dir_all(&ck).ok();
+        }
+    }
+}
+
+/// Torn-write recovery at the engine level: with the newest snapshot
+/// destroyed and the next-newest torn (rank 1's shard truncated
+/// mid-payload), a resuming world must fall back to the oldest committed
+/// marker and still reproduce the uninterrupted bits.
+#[test]
+fn resume_falls_back_past_torn_snapshot() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let steps = 6;
+    let (inputs, targets) = make_cf_data(6, 8, 31);
+    let src = Arc::new(InMemorySource { inputs, targets });
+    let ck = scratch("torn");
+
+    let full = train_hybrid_with(&rt, &opts(steps, cfg(&ck, false)), src.clone(),
+                                 &CommBackend::Channel, GradReduce::default())
+        .unwrap();
+
+    std::fs::remove_dir_all(checkpoint::step_dir(&ck, 6)).unwrap();
+    let victim = checkpoint::shard_path(&checkpoint::step_dir(&ck, 4), 1);
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+
+    let resumed = train_hybrid_with(&rt, &opts(steps, cfg(&ck, true)), src,
+                                    &CommBackend::Channel, GradReduce::default())
+        .unwrap();
+    assert_state_bits_equal(&full, &resumed, "torn fallback");
+    std::fs::remove_dir_all(&ck).ok();
+}
+
+/// A snapshot of a different configuration must never seed a run: flip the
+/// seed and the resuming world has to start fresh (and still complete).
+#[test]
+fn fingerprint_mismatch_starts_fresh() {
+    let Some(dir) = artifacts() else { return };
+    let rt = RuntimeHandle::start(&dir).unwrap();
+    let steps = 4;
+    let (inputs, targets) = make_cf_data(6, 8, 31);
+    let src = Arc::new(InMemorySource { inputs, targets });
+    let ck = scratch("fp-mismatch");
+
+    train_hybrid_with(&rt, &opts(steps, cfg(&ck, false)), src.clone(),
+                      &CommBackend::Channel, GradReduce::default())
+        .unwrap();
+
+    let mut other = opts(steps, cfg(&ck, true));
+    other.seed = 99;
+    let mut fresh = opts(steps, None);
+    fresh.seed = 99;
+    let resumed = train_hybrid_with(&rt, &other, src.clone(),
+                                    &CommBackend::Channel,
+                                    GradReduce::default())
+        .unwrap();
+    let baseline = train_hybrid_with(&rt, &fresh, src, &CommBackend::Channel,
+                                     GradReduce::default())
+        .unwrap();
+    assert_state_bits_equal(&baseline, &resumed, "fingerprint mismatch");
+    std::fs::remove_dir_all(&ck).ok();
+}
+
+// ---------------------------------------------------------------------------
+// process-level fault injection (the CI fault lane's assertions, in-tree)
+// ---------------------------------------------------------------------------
+
+fn hydra3d_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_hydra3d"))
+}
+
+fn wait_with_deadline(
+    mut child: std::process::Child,
+    secs: u64,
+    what: &str,
+) -> (std::process::ExitStatus, String, String) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    let status = loop {
+        match child.try_wait().expect("try_wait") {
+            Some(st) => break st,
+            None if Instant::now() >= deadline => {
+                child.kill().ok();
+                child.wait().ok();
+                panic!("{what} still running after {secs}s — launcher hung");
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    let mut out = String::new();
+    let mut err = String::new();
+    if let Some(mut o) = child.stdout.take() {
+        o.read_to_string(&mut out).ok();
+    }
+    if let Some(mut e) = child.stderr.take() {
+        e.read_to_string(&mut err).ok();
+    }
+    (status, out, err)
+}
+
+/// Copy one committed snapshot directory (shards + meta + marker).
+fn copy_snapshot(from: &Path, to: &Path) {
+    std::fs::create_dir_all(to).unwrap();
+    for e in std::fs::read_dir(from).unwrap().flatten() {
+        std::fs::copy(e.path(), to.join(e.file_name())).unwrap();
+    }
+}
+
+/// Kill-at-step recovery, end to end over real processes: node 1 of a
+/// 4-rank / 2-node socket world dies at step 3; `--max-restarts 1` detects
+/// the dead world, kills the survivor, relaunches with resume forced on,
+/// and the *reported trajectory is bit-identical to the uninterrupted
+/// run's*. The killed-and-restarted run's byte counters are additionally
+/// required to equal a clean `--resume` run performing the same recovery
+/// computation from the same snapshot.
+#[test]
+fn socket_world_recovers_from_killed_node_bit_exact() {
+    let Some(dir) = artifacts() else { return };
+    let root = scratch("faultlane");
+    let reports = root.join("reports");
+    std::fs::create_dir_all(&reports).unwrap();
+
+    let run = |tag: &str, ck: &Path, extra: &[&str], die_at: Option<usize>|
+     -> (String, Json) {
+        let report = reports.join(format!("{tag}.json"));
+        let mut cmd = hydra3d_bin();
+        cmd.args(["train", "--model", "cf-nano", "--ways", "2", "--groups",
+                  "2", "--batch", "2", "--steps", "5", "--samples", "6",
+                  "--seed", "12", "--ranks-per-node", "2", "--backend",
+                  "socket", "--checkpoint-every", "2"])
+            .args(["--checkpoint-dir", ck.to_str().unwrap()])
+            .args(["--report", report.to_str().unwrap()])
+            .args(extra)
+            .env("HYDRA3D_ARTIFACTS", &dir)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped());
+        if let Some(step) = die_at {
+            cmd.env("HYDRA3D_TEST_DIE_NODE", "1")
+                .env("HYDRA3D_TEST_DIE_AT_STEP", step.to_string());
+        }
+        let child = cmd.spawn().expect("spawn train --backend socket");
+        let (status, out, err) = wait_with_deadline(child, 300, tag);
+        assert!(status.success(), "{tag} failed\nstdout: {out}\nstderr: {err}");
+        (out, Json::parse_file(&report).unwrap())
+    };
+
+    // A: uninterrupted baseline (snapshots at steps 2, 4 and final 5)
+    let ck_a = root.join("ckpt-a");
+    let (out_a, rep_a) = run("baseline", &ck_a, &[], None);
+    assert!(out_a.contains("world restarts: 0"), "stdout: {out_a}");
+
+    // B: node 1 killed at step 3, one auto-restart allowed
+    let ck_b = root.join("ckpt-b");
+    let (out_b, rep_b) = run("killed", &ck_b, &["--max-restarts", "1"],
+                             Some(3));
+    assert!(out_b.contains("world restarts: 1"),
+            "recovery did not restart the world\nstdout: {out_b}");
+
+    // C: clean resume from a copy of the snapshot B's restart recovered
+    // from — the same computation B's second attempt performed
+    let ck_c = root.join("ckpt-c");
+    copy_snapshot(&ck_a.join("step-2"), &ck_c.join("step-2"));
+    let (out_c, rep_c) = run("clean-resume", &ck_c, &["--resume"], None);
+    assert!(out_c.contains("world restarts: 0"), "stdout: {out_c}");
+
+    // recovered trajectory == uninterrupted trajectory, bit for bit
+    for key in ["schema", "world", "losses_bits"] {
+        assert_eq!(rep_a.req(key).unwrap(), rep_b.req(key).unwrap(),
+                   "killed-and-recovered run diverged from baseline on {key}");
+    }
+    assert_eq!(rep_a.req("losses_bits").unwrap().as_arr().unwrap().len(), 5);
+    // the restarted attempt's traffic == the clean resume's traffic: the
+    // recovery performed exactly the deterministic resumed computation
+    for key in ["schema", "world", "losses_bits", "comm_bytes", "halo_bytes",
+                "ingest_bytes", "redist_bytes", "socket_frame_bytes"] {
+        assert_eq!(rep_b.req(key).unwrap(), rep_c.req(key).unwrap(),
+                   "recovered run's {key} differs from a clean resume");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}

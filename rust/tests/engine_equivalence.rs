@@ -73,6 +73,7 @@ fn grid_opts(model: &str, grid: SpatialGrid, groups: usize, batch: usize,
         seed: 21,
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 0,
+        ckpt: None,
     }
 }
 
@@ -116,6 +117,7 @@ fn hybrid_matches_fused_cf_nano() {
             seed: 21,
             schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: 6 },
             log_every: 0,
+            ckpt: None,
         },
         fsrc,
     )
@@ -154,6 +156,7 @@ fn hybrid_bn_equivalence() {
             seed: 21,
             schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: 5 },
             log_every: 0,
+            ckpt: None,
         },
         Arc::new(FullSource { inputs, targets }),
     )

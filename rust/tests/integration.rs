@@ -89,6 +89,7 @@ fn fused_train_step_decreases_loss() {
         seed: 9,
         schedule: LrSchedule { lr0: 3e-3, floor_frac: 0.1, total_steps: 30 },
         log_every: 0,
+        ckpt: None,
     };
     let rep = train_fused(&rt, &opts, source).unwrap();
     let first = rep.records[0].loss;
@@ -123,6 +124,7 @@ fn fused_dataparallel_groups_match_single_rank() {
         seed: 11,
         schedule: LrSchedule { lr0: 1e-3, floor_frac: 1.0, total_steps: 0 },
         log_every: 0,
+        ckpt: None,
     };
     let a = train_fused(&rt, &mk(1), src.clone()).unwrap();
     let b = train_fused(&rt, &mk(2), src).unwrap();

@@ -399,6 +399,7 @@ fn store_training_bit_identical_cosmoflow_2x2x2() {
         seed: 21,
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 0,
+        ckpt: None,
     };
     let inmem = train_hybrid(&rt, &opts, Arc::new(InMemorySource {
         inputs: inputs.clone(),
@@ -453,6 +454,7 @@ fn store_training_bit_identical_unet_2x2x2() {
         seed: 5,
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 0,
+        ckpt: None,
     };
     let inmem = train_hybrid(&rt, &opts, Arc::new(InMemorySource {
         inputs: inputs.clone(),

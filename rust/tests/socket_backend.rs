@@ -60,6 +60,7 @@ fn opts(grid: SpatialGrid, groups: usize, batch: usize, steps: usize,
         seed,
         schedule: LrSchedule { lr0: 2e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 0,
+        ckpt: None,
     }
 }
 

@@ -268,6 +268,7 @@ fn dry_run_matches_real_hybrid_schedule() {
         seed,
         schedule: LrSchedule { lr0: 1e-3, floor_frac: 0.1, total_steps: steps },
         log_every: 0,
+        ckpt: None,
     };
     train_hybrid_with(
         &rt,
